@@ -1,0 +1,45 @@
+"""Paper Table 2: runtime breakdown of the PD algorithm phases —
+finding the contraction set S, contraction, conflicted-cycle separation,
+message passing. Each phase is timed as its own jitted executable on a
+Cityscapes-regime grid instance (same decomposition as the paper's
+profiler table)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import timed
+from repro.core.contraction import choose_contraction_set, contract
+from repro.core.cycles import separate
+from repro.core.graph import grid_instance
+from repro.core.message_passing import init_mp, run_message_passing
+
+MP_ITERS = 10
+
+
+def run(csv):
+    inst = grid_instance(24, 24, seed=0)
+
+    find_s = jax.jit(lambda i: choose_contraction_set(i))
+    t_find, S = timed(find_s, inst)
+
+    contract_j = jax.jit(lambda i, s: contract(i, s).instance.cost)
+    t_contract, _ = timed(contract_j, inst, S)
+
+    sep = jax.jit(lambda i: separate(i, max_neg=2048, max_tri_per_edge=8,
+                                     with_cycles45=True).triangles.edges)
+    t_sep, _ = timed(sep, inst)
+
+    sep_res = separate(inst, max_neg=2048, max_tri_per_edge=8,
+                       with_cycles45=True)
+    state = init_mp(sep_res.triangles)
+    mp = jax.jit(lambda c, ev, st: run_message_passing(c, ev, st,
+                                                       MP_ITERS)[2])
+    t_mp, _ = timed(mp, sep_res.instance.cost, sep_res.instance.edge_valid,
+                    state)
+
+    total = t_find + t_contract + t_sep + t_mp
+    for name, t in [("finding_S", t_find), ("contraction", t_contract),
+                    ("conflicted_cycles", t_sep),
+                    ("message_passing", t_mp)]:
+        csv.add("breakdown", name, "time_s", round(t, 4))
+        csv.add("breakdown", name, "fraction", round(t / total, 3))

@@ -1,0 +1,34 @@
+"""Shared benchmark machinery: timed runs + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time of ``fn`` (jax-aware: blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+class Csv:
+    def __init__(self, header=("bench", "case", "metric", "value")):
+        self.rows = []
+        self.header = header
+
+    def add(self, *row):
+        self.rows.append(row)
+        print(",".join(str(r) for r in row), flush=True)
+
+    def emit_header(self):
+        print(",".join(self.header), flush=True)

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: the Pallas kernels against their pure-jnp
+oracles at production-relevant shapes. On this CPU container the kernels
+run in interpret mode, so wall-clock is NOT the kernel's TPU speed — the
+numbers recorded here are (a) oracle wall time (what XLA:CPU does with the
+same math, a real baseline) and (b) allclose agreement; device-level
+throughput is covered by §Roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels.contract_matmul.ref import contract_matmul_ref
+from repro.kernels.flash_attention.chunked import chunked_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.triangle_mp.ops import mp_sweep
+from repro.kernels.triangle_mp.ref import mp_sweep_ref
+
+
+def run(csv):
+    # triangle_mp at 1M triangles (the paper's hot loop)
+    T = 1 << 20
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, 3), jnp.float32)
+    ref = jax.jit(mp_sweep_ref)
+    t_ref, out_ref = timed(ref, x)
+    csv.add("kernels", "triangle_mp_1M", "oracle_time_s", round(t_ref, 4))
+    out_k = mp_sweep(x)   # interpret mode — correctness only
+    csv.add("kernels", "triangle_mp_1M", "allclose",
+            int(np.allclose(out_k, out_ref, atol=1e-4)))
+    csv.add("kernels", "triangle_mp_1M", "oracle_Mtri_per_s",
+            round(T / t_ref / 1e6, 1))
+
+    # contraction matmul at 2048 nodes
+    N, M = 2048, 512
+    A = jax.random.normal(jax.random.PRNGKey(1), (N, N), jnp.float32)
+    A = (A + A.T) / 2
+    f = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, M)
+    ref = jax.jit(lambda A, f: contract_matmul_ref(A, f, M))
+    t_ref, _ = timed(ref, A, f)
+    csv.add("kernels", "contract_matmul_2k", "oracle_time_s",
+            round(t_ref, 4))
+    csv.add("kernels", "contract_matmul_2k", "oracle_gflops",
+            round(2 * 2 * N * N * M / t_ref / 1e9, 1))
+
+    # chunked flash attention vs full reference, 4k seq
+    B, H, S, D = 1, 4, 4096, 128
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
+    full = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    chnk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                     block_q=512))
+    t_full, o_full = timed(full, q, k, v)
+    t_chunk, o_chunk = timed(chnk, q, k, v)
+    csv.add("kernels", "attention_4k", "full_ref_time_s", round(t_full, 4))
+    csv.add("kernels", "attention_4k", "chunked_time_s", round(t_chunk, 4))
+    csv.add("kernels", "attention_4k", "allclose",
+            int(np.allclose(np.asarray(o_full, np.float32),
+                            np.asarray(o_chunk, np.float32), atol=3e-2)))

@@ -1,0 +1,34 @@
+"""Benchmark harness entry point — one module per paper table/figure:
+
+    table1     paper Table 1 (objectives + runtimes, all solvers)
+    scaling    paper Fig. 6  (runtime scaling vs instance size)
+    breakdown  paper Table 2 (PD phase breakdown)
+    kernels    Pallas kernel micro-benches vs oracles
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Emits ``bench,case,metric,value`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import Csv
+
+
+def main(argv=None) -> None:
+    argv = argv if argv is not None else sys.argv[1:]
+    from benchmarks import breakdown, kernels, scaling, table1
+    mods = {"table1": table1, "scaling": scaling, "breakdown": breakdown,
+            "kernels": kernels}
+    wanted = argv or list(mods)
+    csv = Csv()
+    csv.emit_header()
+    for name in wanted:
+        t0 = time.time()
+        mods[name].run(csv)
+        csv.add(name, "_total", "wall_s", round(time.time() - t0, 1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 6: runtime scaling w.r.t. instance size, RAMA (P/PD) vs GAEC.
+
+On CPU both sides slow down, but the SHAPE of the curve is the claim: GAEC
+is O(E log E) sequential with poor constants at scale, while RAMA's rounds
+are a constant number of bulk data-parallel primitives. We report the
+fitted log-log slope per solver. (Wall-clock absolute numbers on a CPU
+container do not reproduce the paper's GPU speedups; the dry-run/roofline
+covers device-level throughput.)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import gaec, objective
+from repro.core.graph import grid_instance
+from repro.core.solver import SolverConfig, solve_p, solve_pd
+
+SIZES = [8, 12, 16, 24, 32]
+CFG = SolverConfig(max_neg=2048, mp_iters=5)
+
+
+def run(csv):
+    rows = {"GAEC": [], "P": [], "PD": []}
+    edges = []
+    for hw in SIZES:
+        inst = grid_instance(hw, hw, seed=0)
+        n_edges = int(np.asarray(inst.edge_valid).sum())
+        edges.append(n_edges)
+        t0 = time.perf_counter()
+        gaec(inst)
+        rows["GAEC"].append(time.perf_counter() - t0)
+        # warm the jit cache out-of-measurement at each new padded shape
+        solve_p(inst, CFG)
+        t0 = time.perf_counter()
+        solve_p(inst, CFG)
+        rows["P"].append(time.perf_counter() - t0)
+        solve_pd(inst, CFG)
+        t0 = time.perf_counter()
+        solve_pd(inst, CFG)
+        rows["PD"].append(time.perf_counter() - t0)
+        for name in rows:
+            csv.add("scaling", f"{name}/E={n_edges}", "time_s",
+                    round(rows[name][-1], 4))
+    le = np.log(edges)
+    for name, ts in rows.items():
+        slope = np.polyfit(le, np.log(ts), 1)[0]
+        csv.add("scaling", name, "loglog_slope", round(float(slope), 3))

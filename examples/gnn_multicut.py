@@ -1,0 +1,117 @@
+"""GNN → affinities → RAMA: the paper's deep-pipeline use-case (§1: "when
+multicut is used in end-to-end training", instance segmentation).
+
+    PYTHONPATH=src python examples/gnn_multicut.py
+
+1. A small EGNN is trained to predict same-cluster affinities on synthetic
+   point clouds with planted clusters (edge label = same cluster).
+2. Predicted logits become signed multicut edge costs (log-odds).
+3. RAMA PD clusters the graph; we report the adjusted Rand-like agreement
+   with the planted clustering vs. simply thresholding the GNN's edges —
+   showing what the combinatorial solver adds on top of the learned model
+   (cycle-consistent decisions instead of independent edge cuts).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import egnn as eg
+from repro.models.gnn.common import GraphBatch
+from repro.core.graph import make_instance
+from repro.core.solver import SolverConfig, solve_pd
+from repro.train.optimizer import OptimizerConfig, apply_update, init_opt_state
+
+N, E, K = 48, 320, 4          # nodes, candidate edges, planted clusters
+STEPS = 60
+
+
+def make_cloud(key):
+    """Planted-cluster point cloud + candidate edge list."""
+    kc, kp, ke = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (K, 3)) * 4.0
+    assign = jnp.arange(N) % K
+    pos = centers[assign] + jax.random.normal(kp, (N, 3)) * 0.6
+    src = jax.random.randint(ke, (E,), 0, N)
+    dst = (src + jax.random.randint(jax.random.fold_in(ke, 1), (E,), 1, N)) % N
+    same = (assign[src] == assign[dst]).astype(jnp.float32)
+    return pos, src.astype(jnp.int32), dst.astype(jnp.int32), same, assign
+
+
+def edge_logits(cfg, params, pos, src, dst):
+    g = GraphBatch(nodes=jnp.ones((N, 4)), edges_src=src, edges_dst=dst,
+                   edge_feat=jnp.zeros((E, 1)),
+                   node_mask=jnp.ones(N, bool), edge_mask=jnp.ones(E, bool),
+                   graph_ids=jnp.zeros(N, jnp.int32), positions=pos)
+    h = eg.node_repr(cfg, params, g)
+    d2 = jnp.sum((pos[src] - pos[dst]) ** 2, -1, keepdims=True)
+    return jnp.sum(h[src] * h[dst], -1) - d2[:, 0] * params_scale(params)
+
+
+def params_scale(params):
+    return jnp.abs(params["dist_w"][0])
+
+
+def rand_agreement(a, b):
+    """Pairwise same/diff agreement between two labelings."""
+    a, b = np.asarray(a), np.asarray(b)
+    iu = np.triu_indices(len(a), 1)
+    return float(np.mean((a[iu[0]] == a[iu[1]]) == (b[iu[0]] == b[iu[1]])))
+
+
+def main():
+    cfg = eg.EGNNConfig(n_layers=2, d_hidden=24, d_in=4)
+    params = eg.init_params(cfg, jax.random.PRNGKey(0))
+    params["dist_w"] = jnp.ones((1,))
+    opt = init_opt_state(params)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=STEPS,
+                           weight_decay=0.0)
+
+    def loss_fn(p, batch):
+        pos, src, dst, same, _ = batch
+        logit = edge_logits(cfg, p, pos, src, dst)
+        return jnp.mean(jnp.maximum(logit, 0) - logit * same
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    step = jax.jit(lambda p, o, b: (lambda l, g: apply_update(ocfg, p, g, o)
+                                    + (l,))(*jax.value_and_grad(loss_fn)(p, b)))
+    for s in range(STEPS):
+        batch = make_cloud(jax.random.PRNGKey(100 + s))
+        params, opt, m, l = step(params, opt, batch)
+        if s % 20 == 0:
+            print(f"step {s}: edge-BCE {float(l):.4f}")
+
+    # fresh instance -> costs -> RAMA
+    pos, src, dst, same, assign = make_cloud(jax.random.PRNGKey(999))
+    logit = edge_logits(cfg, params, pos, src, dst)
+    inst = make_instance(np.asarray(src), np.asarray(dst),
+                         np.asarray(logit), N, pad_edges=1024, pad_nodes=64)
+    res = solve_pd(inst, SolverConfig(max_neg=256, mp_iters=10))
+
+    # baseline: threshold GNN edges independently (connected components)
+    import networkx as nx
+    g = nx.Graph()
+    g.add_nodes_from(range(N))
+    for s_, d_, l_ in zip(np.asarray(src), np.asarray(dst),
+                          np.asarray(logit)):
+        if l_ > 0:
+            g.add_edge(int(s_), int(d_))
+    thr = np.zeros(N, np.int64)
+    for i, comp in enumerate(nx.connected_components(g)):
+        for x in comp:
+            thr[x] = i
+
+    acc_rama = rand_agreement(np.asarray(res.labels)[:N], np.asarray(assign))
+    acc_thr = rand_agreement(thr, np.asarray(assign))
+    print(f"\nplanted-cluster pairwise agreement: "
+          f"RAMA {acc_rama:.3f}  vs  threshold+CC {acc_thr:.3f}")
+    print(f"RAMA objective {res.objective:.2f}, LB {res.lower_bound:.2f}")
+    assert acc_rama >= acc_thr - 0.02, "solver should not lose to thresholding"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""GraphCast-style weather emulation: the native encoder→processor→decoder
+path on a (reduced) lat/lon grid with an icosahedral-ish mesh.
+
+    PYTHONPATH=src python examples/weather_graphcast.py
+
+Trains the model to emulate synthetic advection dynamics for a few hundred
+steps and reports one-step MSE before/after + a short autoregressive
+rollout."""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import grid_weather_batch
+from repro.models.gnn import graphcast as gc
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import OptimizerConfig
+
+CFG = gc.GraphCastConfig(n_layers=4, d_hidden=32, mesh_refinement=2,
+                         n_vars=8, grid_lat=12, grid_lon=24)
+STEPS = 200
+
+
+def main():
+    topo = gc.build_topology(CFG, seed=0)
+    params = gc.init_params(CFG, jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params)
+                   if hasattr(x, "size"))
+    print(f"graphcast: grid {CFG.grid_lat}x{CFG.grid_lon}, "
+          f"mesh {CFG.n_mesh} nodes, {n_params / 1e3:.0f}k params")
+
+    def loss_fn(p, batch):
+        return gc.loss_fn(CFG, p, batch["grid_feats"], batch["target"], topo)
+
+    def batch_fn(step):
+        return grid_weather_batch(step, CFG.n_grid, CFG.n_vars)
+
+    tcfg = TrainConfig(opt=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                           total_steps=STEPS),
+                       log_every=STEPS // 10)
+    params, _, hist = train(loss_fn, params, batch_fn, tcfg, num_steps=STEPS)
+    print("loss:", " -> ".join(f"{h['loss']:.4f}" for h in hist[:2]),
+          "...", f"{hist[-1]['loss']:.4f}")
+    assert hist[-1]["loss"] < hist[0]["loss"], "training must reduce MSE"
+
+    # autoregressive rollout
+    state = grid_weather_batch(0, CFG.n_grid, CFG.n_vars)["grid_feats"]
+    fwd = jax.jit(lambda p, x: gc.forward(CFG, p, x, topo))
+    for t in range(5):
+        state = fwd(params, state)
+        print(f"rollout step {t}: mean |state| = "
+              f"{float(jnp.abs(state).mean()):.3f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

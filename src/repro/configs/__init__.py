@@ -1,0 +1,16 @@
+"""Assigned-architecture configs. Importing this package registers every
+arch in repro.configs.base.REGISTRY (selectable via --arch <id>)."""
+from repro.configs import (  # noqa: F401
+    granite_34b,
+    gemma2_9b,
+    phi3_mini_3p8b,
+    llama4_scout_17b_a16e,
+    grok_1_314b,
+    dimenet,
+    egnn,
+    mace,
+    graphcast,
+    wide_deep,
+    rama_multicut,
+)
+from repro.configs.base import REGISTRY, get_arch, all_arch_ids  # noqa: F401

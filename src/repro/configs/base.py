@@ -1,0 +1,708 @@
+"""Architecture registry: every assigned arch is a selectable config
+exposing the uniform dry-run interface:
+
+    arch.shapes                          -> {shape_name: ShapeCell}
+    arch.abstract_inputs(shape)          -> pytree of ShapeDtypeStruct
+    arch.state_specs(shape)              -> abstract params/opt/cache state
+    arch.step_fn(shape)                  -> callable(state..., **inputs)
+    arch.in_shardings(mesh, shape)       -> pytrees of NamedSharding
+    arch.model_flops(shape)              -> analytic MODEL_FLOPS (6ND etc.)
+
+Nothing here allocates device memory: all state is ``jax.eval_shape`` /
+``ShapeDtypeStruct``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models import recsys as rs
+from repro.models.gnn import dimenet as dn, egnn as eg, mace as mc
+from repro.models.gnn import graphcast as gc
+from repro.train.optimizer import OptimizerConfig, init_opt_state, apply_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode | serve | retrieval
+    dims: dict
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp(mesh):
+    """Data-parallel axes present in this mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+REGISTRY: dict[str, "Arch"] = {}
+
+
+def register(arch: "Arch") -> "Arch":
+    REGISTRY[arch.id] = arch
+    return arch
+
+
+def get_arch(arch_id: str) -> "Arch":
+    import repro.configs  # noqa: F401  (triggers registration)
+    return REGISTRY[arch_id]
+
+
+def all_arch_ids() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(REGISTRY.keys())
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+LM_SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train",
+                          dict(seq_len=4096, global_batch=256)),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill",
+                             dict(seq_len=32768, global_batch=32)),
+    "decode_32k": ShapeCell("decode_32k", "decode",
+                            dict(seq_len=32768, global_batch=128)),
+    "long_500k": ShapeCell("long_500k", "decode",
+                           dict(seq_len=524288, global_batch=1)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LMArch:
+    id: str
+    cfg: tfm.TransformerConfig
+    opt: OptimizerConfig = OptimizerConfig()
+    opt_state_dtype: Any = None
+    family: str = "lm"
+    # microbatching: one layer-stack fwd+bwd holds ~12 GiB of activation
+    # working set at per-device batch 16 (granite class); 4 microbatches of
+    # 4 bring the train step inside the 16 GiB v5e budget. grads accumulate
+    # in a param-shaped f32 tree (ZeRO-sharded like the params).
+    grad_accum: int = 4
+    # per-decode-shape cache pspecs (set by for_mesh; see decode_step)
+    cache_pspecs: Any = None
+
+    @property
+    def shapes(self):
+        return LM_SHAPES
+
+    def for_mesh(self, mesh) -> "LMArch":
+        """Adapt mesh-axis references in the model config to ``mesh``: drop
+        the pod axis on single-pod meshes, set the MoE dispatch group count
+        to the data-parallel degree, and fall back from expert- to
+        ffn-sharding when n_experts doesn't divide the model axis."""
+        cfg = self.cfg
+        updates = {}
+        if cfg.act_sharding is not None:
+            names = set(mesh.axis_names)
+
+            def fix(part):
+                if part is None:
+                    return None
+                if isinstance(part, tuple):
+                    kept = tuple(a for a in part if a in names)
+                    return kept if kept else None
+                return part if part in names else None
+
+            updates["act_sharding"] = tuple(fix(p)
+                                            for p in cfg.act_sharding)
+        if cfg.moe:
+            updates["moe_groups"] = _prod(mesh, _dp(mesh))
+            updates["moe_shard_experts"] = (
+                cfg.n_experts % mesh.shape.get("model", 1) == 0)
+        # per-shape layer-slice cache pspec (drop the leading L dim) so
+        # decode_step can pin the cache sharding inside its layer scan
+        cache_pspecs = {
+            name: P(*self.kv_pspec(mesh, shape)[1:])
+            for name, shape in self.shapes.items()
+            if shape.kind == "decode"
+        }
+        out = dataclasses.replace(
+            self, cache_pspecs=cache_pspecs,
+            **({"cfg": dataclasses.replace(cfg, **updates)}
+               if updates else {}))
+        return out
+
+    # --- abstract state ---------------------------------------------------
+    def abstract_params(self):
+        return jax.eval_shape(
+            functools.partial(tfm.init_params, self.cfg),
+            jax.random.PRNGKey(0))
+
+    def abstract_opt(self):
+        return jax.eval_shape(
+            functools.partial(init_opt_state,
+                              state_dtype=self.opt_state_dtype),
+            self.abstract_params())
+
+    def abstract_cache(self, shape: ShapeCell):
+        d = shape.dims
+        return jax.eval_shape(
+            functools.partial(tfm.init_kv_cache, self.cfg,
+                              d["global_batch"], d["seq_len"]))
+
+    def abstract_inputs(self, shape: ShapeCell):
+        d = shape.dims
+        B, S = d["global_batch"], d["seq_len"]
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "targets": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok}
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+                    "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+        raise ValueError(shape.kind)
+
+    # --- shardings ----------------------------------------------------------
+    def param_pspecs(self):
+        return tfm.param_pspecs(self.cfg)
+
+    def _filter_axes(self, mesh, tree):
+        """Drop axis names not present in this mesh (pod on single-pod)."""
+        names = set(mesh.axis_names)
+
+        def fix(spec):
+            parts = []
+            for p in spec:
+                if p is None:
+                    parts.append(None)
+                elif isinstance(p, tuple):
+                    kept = tuple(a for a in p if a in names)
+                    parts.append(kept if kept else None)
+                else:
+                    parts.append(p if p in names else None)
+            return P(*parts)
+
+        return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+    def state_shardings(self, mesh, shape: ShapeCell):
+        pp = self._filter_axes(mesh, self.param_pspecs())
+        # MoE expert fallback: when n_experts doesn't divide the model axis
+        # (grok-1: 8 experts on a 16-way TP axis), keep experts unsharded and
+        # run plain TP over the expert ffn dims instead.
+        if self.cfg.moe and \
+                self.cfg.n_experts % mesh.shape.get("model", 1) != 0:
+            dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names) \
+                or None
+            pp["layers"]["w_gate"] = P(None, None, dax, "model")
+            pp["layers"]["w_up"] = P(None, None, dax, "model")
+            pp["layers"]["w_down"] = P(None, None, "model", dax)
+        out = {"params": _ns(mesh, pp)}
+        if shape.kind == "train":
+            from repro.train.optimizer import OptState
+            out["opt"] = OptState(
+                step=NamedSharding(mesh, P()),
+                mu=_ns(mesh, pp), nu=_ns(mesh, pp))
+        if shape.kind == "decode":
+            out["cache"] = {k: NamedSharding(mesh, self.kv_pspec(mesh, shape))
+                            for k in ("k", "v")}
+        return out
+
+    def kv_pspec(self, mesh, shape: ShapeCell) -> P:
+        """KV-cache sharding (L, B, Hkv, S, hd): batch over the data axes
+        and heads over the model axis when divisible; any axis that can't
+        be used there shards the SEQUENCE dim instead (decode-time context
+        parallelism — legal because the cache update is a masked
+        elementwise op, see transformer.decode_step)."""
+        dp = _dp(mesh)
+        Hkv = self.cfg.n_kv_heads
+        msize = mesh.shape["model"]
+        B = shape.dims["global_batch"]
+        S = shape.dims["seq_len"]
+        bshard = dp if B % _prod(mesh, dp) == 0 else None
+        hshard = "model" if Hkv % msize == 0 else None
+        seq_axes = []
+        if bshard is None:
+            seq_axes.extend(dp)
+        if hshard is None:
+            seq_axes.append("model")
+        seq_axes = tuple(a for a in seq_axes
+                         if S % _prod(mesh, tuple(seq_axes)) == 0) or None
+        if seq_axes and S % _prod(mesh, seq_axes) != 0:
+            seq_axes = None
+        return P(None, bshard, hshard, seq_axes, None)
+
+    def input_shardings(self, mesh, shape: ShapeCell):
+        dp = _dp(mesh)
+        B = shape.dims["global_batch"]
+        bshard = dp if B % _prod(mesh, dp) == 0 else None
+        if shape.kind in ("train", "prefill"):
+            spec = {k: NamedSharding(mesh, P(bshard, None))
+                    for k in self.abstract_inputs(shape)}
+            return spec
+        return {"token": NamedSharding(mesh, P(bshard)),
+                "cache_len": NamedSharding(mesh, P())}
+
+    # --- steps ---------------------------------------------------------------
+    def step_fn(self, shape: ShapeCell) -> Callable:
+        cfg, opt_cfg = self.cfg, self.opt
+        ga = self.grad_accum
+        if shape.kind == "train":
+            def train_step(params, opt_state, tokens, targets):
+                B = tokens.shape[0]
+                if ga > 1 and B % ga == 0:
+                    tk = tokens.reshape(ga, B // ga, -1)
+                    tg = targets.reshape(ga, B // ga, -1)
+
+                    # accumulate in f32 unless the arch runs a reduced-
+                    # precision optimizer (grok-1's documented bf16 posture)
+                    acc_dt = self.opt_state_dtype or jnp.float32
+
+                    def micro(acc, xs):
+                        t, g = xs
+                        l, grads = jax.value_and_grad(
+                            lambda p: tfm.loss_fn(cfg, p, t, g))(params)
+                        return (acc[0] + l,
+                                jax.tree.map(
+                                    lambda a, gg: a + gg.astype(acc_dt),
+                                    acc[1], grads)), None
+
+                    zero = (jnp.zeros(()),
+                            jax.tree.map(
+                                lambda p: jnp.zeros(p.shape, acc_dt),
+                                params))
+                    (l, grads), _ = jax.lax.scan(micro, zero, (tk, tg))
+                    l = l / ga
+                    grads = jax.tree.map(
+                        lambda g, p: (g / ga).astype(p.dtype), grads, params)
+                else:
+                    l, grads = jax.value_and_grad(
+                        lambda p: tfm.loss_fn(cfg, p, tokens, targets))(
+                            params)
+                params, opt_state, om = apply_update(opt_cfg, params, grads,
+                                                     opt_state)
+                return params, opt_state, {"loss": l, **om}
+            return train_step
+        if shape.kind == "prefill":
+            def prefill_step(params, tokens):
+                return tfm.forward(cfg, params, tokens)
+            return prefill_step
+        if shape.kind == "decode":
+            cache_pspec = (self.cache_pspecs or {}).get(shape.name)
+
+            def serve_step(params, cache, token, cache_len):
+                return tfm.decode_step(cfg, params, token, cache, cache_len,
+                                       cache_pspec=cache_pspec)
+            return serve_step
+        raise ValueError(shape.kind)
+
+    # --- roofline inputs -------------------------------------------------
+    def model_flops(self, shape: ShapeCell) -> float:
+        """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference."""
+        d = shape.dims
+        n_act = self.cfg.active_params_count
+        if shape.kind == "train":
+            tokens = d["seq_len"] * d["global_batch"]
+            return 6.0 * n_act * tokens
+        if shape.kind == "prefill":
+            tokens = d["seq_len"] * d["global_batch"]
+            return 2.0 * n_act * tokens
+        # decode: one token per sequence + attention over the cache
+        B = d["global_batch"]
+        attn = (2.0 * self.cfg.n_layers * self.cfg.n_heads * self.cfg.hd
+                * d["seq_len"] * 2) * B
+        return 2.0 * n_act * B + attn
+
+
+def _prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return max(out, 1)
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeCell("full_graph_sm", "train",
+                               dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                                    n_classes=7, task="node_cls")),
+    "minibatch_lg": ShapeCell("minibatch_lg", "train",
+                              dict(n_nodes=196608, n_edges=212992, d_feat=602,
+                                   n_classes=41, task="node_cls",
+                                   n_seeds=1024)),
+    "ogb_products": ShapeCell("ogb_products", "train",
+                              dict(n_nodes=2449029, n_edges=61859140,
+                                   d_feat=100, n_classes=47,
+                                   task="node_cls")),
+    "molecule": ShapeCell("molecule", "train",
+                          dict(n_nodes=30, n_edges=64, batch=128, d_feat=16,
+                               task="energy")),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArch:
+    id: str
+    kind: str                    # dimenet | egnn | mace | graphcast
+    cfg: Any
+    opt: OptimizerConfig = OptimizerConfig()
+    family: str = "gnn"
+    tri_factor: int = 2          # triplets per edge cap (dimenet)
+    shard_axes: tuple | None = None   # leading-dim mesh axes (set per mesh)
+    compute_dtype: Any = None         # bf16 on device meshes (set per mesh)
+
+    @property
+    def shapes(self):
+        return GNN_SHAPES
+
+    def for_mesh(self, mesh) -> "GNNArch":
+        """Graph-partition data parallelism: node/edge hidden states are
+        constrained to shard their leading dim over the whole mesh, and the
+        trunk computes in bf16 (halves the per-layer all-gathered node
+        matrices that dominate full-graph-large memory)."""
+        return dataclasses.replace(self, shard_axes=tuple(mesh.axis_names),
+                                   compute_dtype=jnp.bfloat16)
+
+    def _dims(self, shape: ShapeCell):
+        d = dict(shape.dims)
+        if shape.name == "molecule":
+            d["N"] = d["n_nodes"] * d["batch"]
+            d["E"] = d["n_edges"] * d["batch"]
+            d["G"] = d["batch"]
+        else:
+            d["N"] = d["n_nodes"]
+            d["E"] = d["n_edges"]
+            d["G"] = 1
+        # pad node/edge axes to multiples of the largest mesh (512) so the
+        # graph-partition data parallelism divides evenly; without this XLA
+        # replicates the edge buffers (61M edges × d_hidden f32 ≈ 127 GiB
+        # per device on ogb_products). Padding is masked out numerically.
+        pad = 512
+        d["N"] = -(-d["N"] // pad) * pad
+        d["E"] = -(-d["E"] // pad) * pad
+        return d
+
+    def _shape_cfg(self, shape: ShapeCell):
+        """Model config with input width bound to the shape's d_feat."""
+        d_feat = self._dims(shape)["d_feat"]
+        if self.kind == "graphcast":
+            return self.cfg  # processor mode takes d_in separately
+        return dataclasses.replace(self.cfg, d_in=d_feat)
+
+    def init_params(self, shape: ShapeCell, key):
+        d = self._dims(shape)
+        cfg2 = self._shape_cfg(shape)
+        k1, k2 = jax.random.split(key)
+        if self.kind == "graphcast":
+            trunk = gc.init_processor_params(self.cfg, k1, d["d_feat"])
+            d_repr = self.cfg.d_hidden
+        else:
+            mod = {"dimenet": dn, "egnn": eg, "mace": mc}[self.kind]
+            trunk = mod.init_params(cfg2, k1)
+            d_repr = cfg2.d_hidden
+        out = {"trunk": trunk}
+        if d["task"] == "node_cls":
+            out["head"] = (jax.random.normal(k2, (d_repr, d["n_classes"]))
+                           * 0.02).astype(jnp.float32)
+        return out
+
+    def abstract_params(self, shape: ShapeCell):
+        return jax.eval_shape(
+            functools.partial(self.init_params, shape),
+            jax.random.PRNGKey(0))
+
+    def abstract_opt(self, shape: ShapeCell):
+        return jax.eval_shape(init_opt_state, self.abstract_params(shape))
+
+    def _node_repr_fn(self, shape: ShapeCell):
+        cfg2 = self._shape_cfg(shape)
+        kind = self.kind
+
+        def fn(trunk, g, batch):
+            if kind == "graphcast":
+                return gc.processor_node_repr(
+                    self.cfg, trunk, g.nodes, g.edges_src, g.edges_dst,
+                    edge_mask=g.edge_mask)
+            if kind == "egnn":
+                return eg.node_repr(cfg2, trunk, g)
+            if kind == "mace":
+                return mc.node_repr(cfg2, trunk, g)
+            return dn.node_repr(cfg2, trunk, g, batch["tri_kj"],
+                                batch["tri_ji"], batch["tri_mask"])
+        return fn
+
+    def abstract_inputs(self, shape: ShapeCell):
+        d = self._dims(shape)
+        N, E, G = d["N"], d["E"], d["G"]
+        f32 = jnp.float32
+        out = {
+            "nodes": jax.ShapeDtypeStruct((N, d["d_feat"]), f32),
+            "edges_src": jax.ShapeDtypeStruct((E,), jnp.int32),
+            "edges_dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+            "node_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+            "graph_ids": jax.ShapeDtypeStruct((N,), jnp.int32),
+        }
+        if d["task"] == "energy":
+            out["labels_f"] = jax.ShapeDtypeStruct((G,), f32)
+        else:
+            out["labels_i"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+            out["label_mask"] = jax.ShapeDtypeStruct((N,), jnp.bool_)
+        if self.kind in ("dimenet", "egnn", "mace"):
+            out["positions"] = jax.ShapeDtypeStruct((N, 3), f32)
+        if self.kind == "dimenet":
+            T = self.tri_factor * E
+            out["tri_kj"] = jax.ShapeDtypeStruct((T,), jnp.int32)
+            out["tri_ji"] = jax.ShapeDtypeStruct((T,), jnp.int32)
+            out["tri_mask"] = jax.ShapeDtypeStruct((T,), jnp.bool_)
+        return out
+
+    def state_shardings(self, mesh, shape: ShapeCell):
+        # GNN params are small: replicate; opt state likewise
+        rep = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                           self.abstract_params(shape))
+        from repro.train.optimizer import OptState
+        return {"params": rep,
+                "opt": OptState(step=NamedSharding(mesh, P()),
+                                mu=rep, nu=rep)}
+
+    def input_shardings(self, mesh, shape: ShapeCell):
+        dp = _dp(mesh)
+        ndp = _prod(mesh, dp)
+        d = self._dims(shape)
+        # shard node/edge leading dims over ALL mesh axes when divisible
+        # (graph-partition data parallel); else replicate
+        all_ax = tuple(mesh.axis_names)
+        nall = _prod(mesh, all_ax)
+
+        def lead(n):
+            if n % nall == 0:
+                return all_ax
+            if n % ndp == 0:
+                return dp
+            return None
+
+        ins = self.abstract_inputs(shape)
+        out = {}
+        for k, v in ins.items():
+            if v.ndim == 0:
+                out[k] = NamedSharding(mesh, P())
+            else:
+                out[k] = NamedSharding(mesh, P(lead(v.shape[0]),
+                                               *([None] * (v.ndim - 1))))
+        return out
+
+    def _loss(self, shape: ShapeCell):
+        d = self._dims(shape)
+        E, G = d["E"], d["G"]
+        kind = self.kind
+        cfg2 = self._shape_cfg(shape)
+        node_repr = self._node_repr_fn(shape)
+        from repro.models.gnn.common import GraphBatch
+
+        compute_dtype = self.compute_dtype
+
+        def build_graph(b):
+            N = b["nodes"].shape[0]
+            pos = b.get("positions")
+            if pos is None:
+                pos = jnp.zeros((N, 3), jnp.float32)
+            nodes = b["nodes"]
+            if compute_dtype is not None:
+                nodes = nodes.astype(compute_dtype)
+            return GraphBatch(
+                nodes=nodes, edges_src=b["edges_src"],
+                edges_dst=b["edges_dst"],
+                edge_feat=jnp.zeros((E, 1), nodes.dtype),
+                node_mask=b["node_mask"], edge_mask=b["edge_mask"],
+                graph_ids=b["graph_ids"], n_graphs=G,
+                positions=pos, labels=b.get("labels_f"))
+
+        shard_axes = self.shard_axes
+
+        def loss(params, b):
+            from repro.models.gnn.common import set_act_axes
+            set_act_axes(shard_axes)   # trace-time switch; None = off
+            g = build_graph(b)
+            if d["task"] == "energy":
+                if kind == "dimenet":
+                    e = dn.forward(cfg2, params["trunk"], g, b["tri_kj"],
+                                   b["tri_ji"], b["tri_mask"])
+                elif kind == "egnn":
+                    e, _, _ = eg.forward(cfg2, params["trunk"], g)
+                elif kind == "mace":
+                    e = mc.forward(cfg2, params["trunk"], g)
+                else:
+                    h = node_repr(params["trunk"], g, b)
+                    ne = h.mean(-1) * g.node_mask.astype(h.dtype)
+                    e = jax.ops.segment_sum(ne, b["graph_ids"],
+                                            num_segments=G)
+                return jnp.mean((e - b["labels_f"]) ** 2)
+            # node classification with the trainable head
+            h = node_repr(params["trunk"], g, b)
+            logits = h @ params["head"]
+            logz = jax.scipy.special.logsumexp(logits, -1)
+            tgt = jnp.take_along_axis(logits, b["labels_i"][:, None],
+                                      axis=-1)[:, 0]
+            lm = b["label_mask"].astype(jnp.float32)
+            return jnp.sum((logz - tgt) * lm) / jnp.maximum(lm.sum(), 1.0)
+
+        return loss
+
+    def step_fn(self, shape: ShapeCell) -> Callable:
+        loss = self._loss(shape)
+        opt_cfg = self.opt
+        keys = list(self.abstract_inputs(shape))
+
+        def train_step(params, opt_state, *vals, **kw):
+            batch = dict(zip(keys, vals)) if vals else kw
+            l, grads = jax.value_and_grad(loss)(params, batch)
+            params, opt_state, om = apply_update(opt_cfg, params, grads,
+                                                 opt_state)
+            return params, opt_state, {"loss": l, **om}
+        return train_step
+
+    def model_flops(self, shape: ShapeCell) -> float:
+        d = self._dims(shape)
+        N, E = d["N"], d["E"]
+        if self.kind == "egnn":
+            c = self.cfg.d_hidden
+            return self.cfg.n_layers * (E * (8 * c * c) + N * (8 * c * c)) * 3
+        if self.kind == "dimenet":
+            c = self.cfg.d_hidden
+            T = self.tri_factor * E
+            per_block = T * (2 * self.cfg.n_bilinear * c * c) + E * 6 * c * c
+            return self.cfg.n_blocks * per_block * 3
+        if self.kind == "mace":
+            c = self.cfg.d_hidden
+            irr = 1 + 3 + 9
+            return self.cfg.n_layers * (E * c * irr * 20
+                                        + N * (3 * c * c * irr)) * 3
+        # graphcast processor
+        dh = self.cfg.d_hidden
+        return self.cfg.n_layers * (E * 8 * dh * dh + N * 6 * dh * dh) * 3
+
+
+# ===========================================================================
+# Recsys family
+# ===========================================================================
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeCell("train_batch", "train", dict(batch=65536)),
+    "serve_p99": ShapeCell("serve_p99", "serve", dict(batch=512)),
+    "serve_bulk": ShapeCell("serve_bulk", "serve", dict(batch=262144)),
+    "retrieval_cand": ShapeCell("retrieval_cand", "retrieval",
+                                dict(batch=1, n_candidates=1_000_000)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysArch:
+    id: str
+    cfg: rs.WideDeepConfig
+    opt: OptimizerConfig = OptimizerConfig()
+    family: str = "recsys"
+
+    @property
+    def shapes(self):
+        return RECSYS_SHAPES
+
+    def abstract_params(self):
+        return jax.eval_shape(functools.partial(rs.init_params, self.cfg),
+                              jax.random.PRNGKey(0))
+
+    def abstract_opt(self):
+        return jax.eval_shape(init_opt_state, self.abstract_params())
+
+    def abstract_inputs(self, shape: ShapeCell):
+        d = shape.dims
+        B = d["batch"]
+        F, bag = self.cfg.n_sparse, self.cfg.multi_hot
+        if shape.kind == "retrieval":
+            # pad the candidate set to a 512-multiple so it shards over the
+            # full mesh (padding rows carry -inf scores host-side)
+            nc = -(-d["n_candidates"] // 512) * 512
+            return {"query": jax.ShapeDtypeStruct((self.cfg.cand_dim,),
+                                                  jnp.float32),
+                    "cands": jax.ShapeDtypeStruct(
+                        (nc, self.cfg.cand_dim), jnp.float32)}
+        out = {"sparse_idx": jax.ShapeDtypeStruct((B, F, bag), jnp.int32),
+               "dense_feats": jax.ShapeDtypeStruct((B, self.cfg.n_dense),
+                                                   jnp.float32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        return out
+
+    def param_pspecs(self):
+        return rs.param_pspecs(self.cfg)
+
+    def state_shardings(self, mesh, shape: ShapeCell):
+        pp = _ns(mesh, self.param_pspecs())
+        out = {"params": pp}
+        if shape.kind == "train":
+            from repro.train.optimizer import OptState
+            out["opt"] = OptState(step=NamedSharding(mesh, P()),
+                                  mu=pp, nu=pp)
+        return out
+
+    def input_shardings(self, mesh, shape: ShapeCell):
+        dp = _dp(mesh)
+        ins = self.abstract_inputs(shape)
+        out = {}
+        for k, v in ins.items():
+            if shape.kind == "retrieval":
+                if k == "cands":
+                    out[k] = NamedSharding(
+                        mesh, P(tuple(mesh.axis_names), None))
+                else:
+                    out[k] = NamedSharding(mesh, P(None))
+            else:
+                B = v.shape[0]
+                bshard = dp if B % _prod(mesh, dp) == 0 else None
+                out[k] = NamedSharding(
+                    mesh, P(bshard, *([None] * (v.ndim - 1))))
+        return out
+
+    def step_fn(self, shape: ShapeCell) -> Callable:
+        cfg, opt_cfg = self.cfg, self.opt
+        if shape.kind == "train":
+            def train_step(params, opt_state, sparse_idx, dense_feats,
+                           labels):
+                def loss(p):
+                    return rs.loss_fn(cfg, p, sparse_idx, dense_feats, labels)
+                l, grads = jax.value_and_grad(loss)(params)
+                params, opt_state, om = apply_update(opt_cfg, params, grads,
+                                                     opt_state)
+                return params, opt_state, {"loss": l, **om}
+            return train_step
+        if shape.kind == "serve":
+            def serve_step(params, sparse_idx, dense_feats):
+                return rs.forward(cfg, params, sparse_idx, dense_feats)
+            return serve_step
+        if shape.kind == "retrieval":
+            def retrieval_step(query, cands):
+                scores = rs.retrieval_score(query, cands)
+                return jax.lax.top_k(scores, 128)
+            return retrieval_step
+        raise ValueError(shape.kind)
+
+    def model_flops(self, shape: ShapeCell) -> float:
+        d = shape.dims
+        cfg = self.cfg
+        if shape.kind == "retrieval":
+            return 2.0 * d["n_candidates"] * cfg.cand_dim
+        B = d["batch"]
+        deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+        dims = (deep_in,) + cfg.mlp_dims + (1,)
+        mlp = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        lookup = cfg.n_sparse * cfg.multi_hot * cfg.embed_dim * 2
+        per_ex = mlp + lookup
+        mult = 3.0 if shape.kind == "train" else 1.0
+        return B * per_ex * mult

@@ -1,0 +1,19 @@
+"""graphcast [arXiv:2212.12794]: encoder-processor-decoder mesh GNN.
+16 layers, d_hidden=512, mesh refinement 6, sum aggregation, n_vars=227.
+
+The assigned graph-benchmark shapes exercise the 16-layer GraphNet processor
+on the benchmark graphs (processor mode); the native weather
+encoder→mesh→decoder path runs in examples/weather_graphcast.py.
+"""
+from repro.configs.base import GNNArch, register
+from repro.models.gnn.graphcast import GraphCastConfig
+
+CONFIG = GraphCastConfig(
+    name="graphcast",
+    n_layers=16,
+    d_hidden=512,
+    mesh_refinement=6,
+    n_vars=227,
+)
+
+ARCH = register(GNNArch(id="graphcast", kind="graphcast", cfg=CONFIG))

@@ -1,0 +1,16 @@
+"""mace [arXiv:2206.07697]: higher-order E(3)-equivariant message passing.
+2 layers, d_hidden=128 channels, l_max=2, correlation order 3, n_rbf=8.
+Implemented in the Cartesian-irrep formulation (DESIGN.md §2)."""
+from repro.configs.base import GNNArch, register
+from repro.models.gnn.mace import MACEConfig
+
+CONFIG = MACEConfig(
+    name="mace",
+    n_layers=2,
+    d_hidden=128,
+    l_max=2,
+    correlation=3,
+    n_rbf=8,
+)
+
+ARCH = register(GNNArch(id="mace", kind="mace", cfg=CONFIG))

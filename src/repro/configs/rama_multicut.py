@@ -1,0 +1,159 @@
+"""The paper's own solver config: RAMA primal-dual multicut.
+
+Dry-run cells (beyond the 40 assigned arch cells):
+  pd_round_sm / pd_round_lg — one full separation→MP→contract round on a
+      single device (the per-block workload of the distributed solver);
+  mp_sweep_1m — the message-passing hot loop at 1M triangles (the
+      triangle_mp kernel's production shape);
+  dist_pd — the shard_mapped domain-decomposed round across the whole mesh
+      (one block per device), the paper's multi-GPU future-work realised.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeCell, register
+from repro.core.solver import _dual_round, _primal_round  # noqa: F401
+from repro.core.graph import MulticutInstance
+from repro.core import message_passing as mp
+
+
+RAMA_SHAPES = {
+    "pd_round_sm": ShapeCell("pd_round_sm", "solver",
+                             dict(n_nodes=1024, n_edges=8192)),
+    "pd_round_lg": ShapeCell("pd_round_lg", "solver",
+                             dict(n_nodes=4096, n_edges=32768)),
+    "mp_sweep_1m": ShapeCell("mp_sweep_1m", "mp",
+                             dict(n_edges=1 << 20, n_triangles=1 << 20)),
+    "dist_pd": ShapeCell("dist_pd", "dist",
+                         dict(blk_nodes=1024, blk_edges=8192,
+                              boundary_edges=65536)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RamaArch:
+    id: str = "rama-multicut"
+    family: str = "multicut"
+    mp_iters: int = 5
+    max_neg: int = 256
+    max_tri_per_edge: int = 4
+    unroll: bool = False        # inline MP iterations (roofline accounting)
+
+    @property
+    def shapes(self):
+        return RAMA_SHAPES
+
+    def abstract_inputs(self, shape: ShapeCell):
+        d = shape.dims
+        f32, i32, b = jnp.float32, jnp.int32, jnp.bool_
+        if shape.kind == "solver":
+            N, E = d["n_nodes"], d["n_edges"]
+            return {"u": jax.ShapeDtypeStruct((E,), i32),
+                    "v": jax.ShapeDtypeStruct((E,), i32),
+                    "cost": jax.ShapeDtypeStruct((E,), f32),
+                    "edge_valid": jax.ShapeDtypeStruct((E,), b),
+                    "node_valid": jax.ShapeDtypeStruct((N,), b)}
+        if shape.kind == "mp":
+            E, T = d["n_edges"], d["n_triangles"]
+            return {"cost": jax.ShapeDtypeStruct((E,), f32),
+                    "edge_valid": jax.ShapeDtypeStruct((E,), b),
+                    "tri": jax.ShapeDtypeStruct((T, 3), i32),
+                    "tri_valid": jax.ShapeDtypeStruct((T,), b)}
+        if shape.kind == "dist":
+            return {}  # filled in by step construction (needs mesh)
+        raise ValueError(shape.kind)
+
+    def dist_inputs(self, mesh, shape: ShapeCell):
+        d = shape.dims
+        nb = 1
+        for a in mesh.axis_names:
+            nb *= mesh.shape[a]
+        f32, i32, b = jnp.float32, jnp.int32, jnp.bool_
+        return {"u": jax.ShapeDtypeStruct((nb, d["blk_edges"]), i32),
+                "v": jax.ShapeDtypeStruct((nb, d["blk_edges"]), i32),
+                "cost": jax.ShapeDtypeStruct((nb, d["blk_edges"]), f32),
+                "edge_valid": jax.ShapeDtypeStruct((nb, d["blk_edges"]), b),
+                "node_valid": jax.ShapeDtypeStruct((nb, d["blk_nodes"]), b),
+                "boundary_cost": jax.ShapeDtypeStruct(
+                    (d["boundary_edges"],), f32)}
+
+    def state_shardings(self, mesh, shape: ShapeCell):
+        return {}
+
+    def input_shardings(self, mesh, shape: ShapeCell):
+        if shape.kind == "dist":
+            axes = tuple(mesh.axis_names)
+            ins = self.dist_inputs(mesh, shape)
+            out = {}
+            for k, v in ins.items():
+                if k == "boundary_cost":
+                    out[k] = NamedSharding(mesh, P(None))
+                else:
+                    out[k] = NamedSharding(mesh, P(axes, None))
+            return out
+        ins = self.abstract_inputs(shape)
+        return {k: NamedSharding(mesh, P(*([None] * v.ndim)))
+                for k, v in ins.items()}
+
+    def step_fn(self, shape: ShapeCell, mesh=None) -> Callable:
+        if shape.kind == "solver":
+            mpi, mn, mt = self.mp_iters, self.max_neg, self.max_tri_per_edge
+            unr = self.unroll
+
+            def pd_round(u, v, cost, edge_valid, node_valid):
+                inst = MulticutInstance(u=u, v=v, cost=cost,
+                                        edge_valid=edge_valid,
+                                        node_valid=node_valid)
+                inst2, c_rep, lb = _dual_round(inst, mpi, mn, mt, 4, True,
+                                               unroll=unr)
+                inst3 = inst2._replace(cost=c_rep)
+                res = _primal_round(inst3, 3, 4, 0.1)
+                out = res.instance
+                return (out.u, out.v, out.cost, out.edge_valid,
+                        out.node_valid, res.mapping, lb)
+            return pd_round
+        if shape.kind == "mp":
+            mpi = self.mp_iters
+
+            unr = self.unroll
+
+            def mp_step(cost, edge_valid, tri, tri_valid):
+                state = mp.MPState(
+                    t_cost=jnp.zeros(tri.shape, jnp.float32),
+                    tri=tri, tri_valid=tri_valid)
+                state, c_rep, lb = mp.run_message_passing(
+                    cost, edge_valid, state, mpi, unroll=unr)
+                return c_rep, lb
+            return mp_step
+        if shape.kind == "dist":
+            from repro.core.dist import make_dist_pd_round
+            return make_dist_pd_round(mesh, mp_iters=3, max_neg=128,
+                                      max_tri_per_edge=self.max_tri_per_edge)
+        raise ValueError(shape.kind)
+
+    def model_flops(self, shape: ShapeCell) -> float:
+        d = shape.dims
+        if shape.kind == "mp":
+            # ~60 flops per triangle per sweep x iters
+            return 60.0 * d["n_triangles"] * self.mp_iters
+        if shape.kind == "solver":
+            # separation row-dots (2*max_neg*nbr_k^2*N after the §Perf
+            # cell-C rewrite; the dense A+A+ formulation was 2N^3/4) +
+            # message passing over the separated triangles
+            N = d["n_nodes"]
+            tri = self.max_neg * (self.max_tri_per_edge + 4)
+            return (2.0 * self.max_neg * 16 * N
+                    + 60.0 * tri * self.mp_iters)
+        blkN = d["blk_nodes"]
+        tri = 128 * (self.max_tri_per_edge + 4)
+        return 2.0 * 128 * 16 * blkN + 60.0 * tri * 3  # per device
+
+
+ARCH = register(RamaArch())

@@ -1,0 +1,16 @@
+"""wide-deep [arXiv:1606.07792]: 40 sparse fields, embed_dim=32,
+MLP 1024-512-256, concat interaction. Embedding tables 10^6 rows/field,
+row-sharded over the model axis."""
+from repro.configs.base import RecsysArch, register
+from repro.models.recsys import WideDeepConfig
+
+CONFIG = WideDeepConfig(
+    name="wide-deep",
+    n_sparse=40,
+    n_dense=13,
+    embed_dim=32,
+    vocab_per_field=1_000_000,
+    mlp_dims=(1024, 512, 256),
+)
+
+ARCH = register(RecsysArch(id="wide-deep", cfg=CONFIG))

@@ -1,0 +1,26 @@
+"""RAMA multicut core: the paper's contribution as a composable JAX module."""
+from repro.core.graph import (
+    MulticutInstance, make_instance, random_instance, grid_instance,
+    to_host_edges,
+)
+from repro.core.contraction import (
+    connected_components, maximum_matching, spanning_forest_contraction,
+    choose_contraction_set, contract, adjacency_dense, contract_dense,
+)
+from repro.core.cycles import build_dense, separate, separate_triangles
+from repro.core.message_passing import (
+    MPState, init_mp, run_message_passing, lower_bound, mp_sweep_reference,
+    triangle_min_marginals, reparametrized_costs,
+)
+from repro.core.solver import SolverConfig, SolveResult, solve_p, solve_pd, solve_dual
+
+__all__ = [
+    "MulticutInstance", "make_instance", "random_instance", "grid_instance",
+    "to_host_edges", "connected_components", "maximum_matching",
+    "spanning_forest_contraction", "choose_contraction_set", "contract",
+    "adjacency_dense", "contract_dense", "build_dense", "separate",
+    "separate_triangles", "MPState", "init_mp", "run_message_passing",
+    "lower_bound", "mp_sweep_reference", "triangle_min_marginals",
+    "reparametrized_costs", "SolverConfig", "SolveResult", "solve_p",
+    "solve_pd", "solve_dual",
+]

@@ -1,0 +1,266 @@
+"""Dual: conflicted-cycle separation (RAMA §3.2.2, Alg. 5).
+
+A conflicted cycle contains exactly one repulsive edge (Def. 5). The paper
+enumerates them with CUDA CSR-intersection kernels; on TPU we use the
+matmul formulation instead: 2-path existence between v1 and v3 is
+``(A⁺A⁺)[v1, v3] > 0`` — an MXU-native boolean matrix product. Enumeration is
+capped per repulsive edge (fixed shapes) rather than globally deduplicated.
+
+Cycles of length 4/5 are triangulated by chord edges of cost 0 (Lemma of
+[15]: chordal triangulation preserves the cycle relaxation); chords are
+allocated from the instance's padded free edge slots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import MulticutInstance
+
+
+class DenseGraph(NamedTuple):
+    A: jax.Array      # (N, N) symmetric costs
+    Apos: jax.Array   # (N, N) bool attractive adjacency
+    eidx: jax.Array   # (N, N) int32 edge index or -1
+
+
+def build_dense(inst: MulticutInstance, with_costs: bool = True) -> DenseGraph:
+    """``with_costs=False`` skips the (N, N) f32 cost matrix — separation
+    only reads the boolean adjacency and the edge-index matrix, and the
+    skipped scatter+read is ~25% of the separation round's HBM traffic
+    (EXPERIMENTS.md §Perf cell C iter 2)."""
+    N, E = inst.num_nodes, inst.num_edges
+    pos = inst.edge_valid & (inst.cost > 0)
+    su = jnp.where(inst.edge_valid, inst.u, 0)
+    sv = jnp.where(inst.edge_valid, inst.v, 0)
+    Apos = jnp.zeros((N, N), dtype=bool)
+    Apos = Apos.at[su, sv].max(pos).at[sv, su].max(pos)
+    # repair the (0,0) cell polluted by invalid rows (pos there is False,
+    # but a true (0,0) self-entry is impossible anyway)
+    eidx = jnp.full((N, N), -1, dtype=jnp.int32)
+    e = jnp.arange(E, dtype=jnp.int32)
+    eid = jnp.where(inst.edge_valid, e, -1)
+    eidx = eidx.at[su, sv].max(eid)
+    eidx = eidx.at[sv, su].max(eid)
+    eidx = eidx.at[0, 0].set(-1)
+    if with_costs:
+        c = jnp.where(inst.edge_valid, inst.cost, 0.0)
+        A = jnp.zeros((N, N), dtype=inst.cost.dtype)
+        A = A.at[inst.u, inst.v].add(c).at[inst.v, inst.u].add(c)
+    else:
+        A = Apos  # placeholder; separation never reads costs
+    return DenseGraph(A=A, Apos=Apos, eidx=eidx)
+
+
+def select_repulsive_edges(inst: MulticutInstance, max_neg: int,
+                           threshold: float = 0.0):
+    """Indices of the ``max_neg`` most repulsive valid edges (+ mask)."""
+    score = jnp.where(inst.edge_valid & (inst.cost < threshold),
+                      -inst.cost, -jnp.inf)
+    k = min(max_neg, score.shape[0])
+    vals, idx = jax.lax.top_k(score, k)
+    return idx.astype(jnp.int32), vals > 0
+
+
+class Triangles(NamedTuple):
+    """Triangle subproblems: rows of edge indices into the instance arrays."""
+    edges: jax.Array   # (T, 3) int32 edge ids
+    valid: jax.Array   # (T,) bool
+
+
+def separate_triangles(inst: MulticutInstance, dg: DenseGraph,
+                       max_neg: int, max_tri_per_edge: int) -> Triangles:
+    """3-cycles: for each repulsive edge (i, j) pick up to K common attractive
+    neighbours k; triangle edges (ij, ik, jk). (Lemma 6 specialised to hop
+    distance 2 — the common-neighbour test is one row-AND, i.e. the matmul
+    ``A⁺A⁺`` restricted to the repulsive pairs.)"""
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    i = inst.u[neg_idx]
+    j = inst.v[neg_idx]
+    max_tri_per_edge = min(max_tri_per_edge, inst.num_nodes)
+
+    def per_edge(i_, j_, e_, ok_):
+        common = (dg.Apos[i_] & dg.Apos[j_]).astype(jnp.float32)
+        vals, ks = jax.lax.top_k(common, max_tri_per_edge)
+        good = (vals > 0) & ok_
+        e_ik = dg.eidx[i_, ks]
+        e_jk = dg.eidx[j_, ks]
+        tri = jnp.stack([jnp.full_like(ks, e_), e_ik, e_jk], axis=-1)
+        good = good & (e_ik >= 0) & (e_jk >= 0)
+        return tri, good
+
+    tris, goods = jax.vmap(per_edge)(i, j, neg_idx, neg_ok)
+    return Triangles(edges=tris.reshape(-1, 3).astype(jnp.int32),
+                     valid=goods.reshape(-1))
+
+
+class CycleSeparationResult(NamedTuple):
+    instance: MulticutInstance  # possibly with new zero-cost chord edges
+    triangles: Triangles
+
+
+def _alloc_chords(inst: MulticutInstance, dg: DenseGraph,
+                  ch_u, ch_v, ch_ok):
+    """Allocate chord edges (cost 0) from free padded slots; reuse existing
+    edges where the chord already exists. Returns (inst', eidx', chord_eid).
+
+    ch_u/ch_v: (M,) endpoints; ch_ok: (M,) candidate validity.
+    Duplicates within the batch are resolved by allocating then deduping via
+    the dense eidx matrix (first writer wins, later readers see its id).
+    """
+    E = inst.num_edges
+    lo = jnp.minimum(ch_u, ch_v)
+    hi = jnp.maximum(ch_u, ch_v)
+    exists = dg.eidx[lo, hi] >= 0
+    need = ch_ok & ~exists & (lo != hi)
+    # dedupe within batch: keep first occurrence of each (lo,hi)
+    M = lo.shape[0]
+    key_l = jnp.where(need, lo, -1)
+    key_h = jnp.where(need, hi, -1)
+    same_as_earlier = jnp.zeros(M, dtype=bool)
+    # O(M^2) pairwise check — M is a small static cap (max_neg * cyc caps)
+    eq = (key_l[:, None] == key_l[None, :]) & (key_h[:, None] == key_h[None, :])
+    earlier = jnp.tril(jnp.ones((M, M), dtype=bool), k=-1)
+    same_as_earlier = jnp.any(eq & earlier, axis=1) & need
+    fresh = need & ~same_as_earlier
+
+    # assign free slots in edge arrays: rank the fresh chords and map rank ->
+    # index of the rank-th free slot (scatter-max into a rank table)
+    free = ~inst.edge_valid
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1      # rank among free
+    slot_of_rank = jnp.full(E, -1, dtype=jnp.int32)
+    slot_of_rank = slot_of_rank.at[jnp.where(free, free_rank, E - 1)].max(
+        jnp.where(free, jnp.arange(E, dtype=jnp.int32), -1))
+    want_rank = jnp.cumsum(fresh.astype(jnp.int32)) - 1
+    n_free = jnp.sum(free)
+    fits = want_rank < n_free
+    ok_alloc = fresh & fits
+    slot = jnp.where(ok_alloc, slot_of_rank[jnp.clip(want_rank, 0)], E - 1)
+
+    # per-slot incoming values (each allocated slot written by exactly one
+    # fresh chord, so segment-max recovers it; -1 marks "no allocation")
+    new_u = jax.ops.segment_max(jnp.where(ok_alloc, lo, -1), slot,
+                                num_segments=E)
+    new_v = jax.ops.segment_max(jnp.where(ok_alloc, hi, -1), slot,
+                                num_segments=E)
+    alloc_here = new_u >= 0
+    # slot E-1 also collects the -1 sentinels of non-allocating rows; the max
+    # keeps a real allocation there if one exists.
+    u2 = jnp.where(alloc_here, new_u, inst.u).astype(jnp.int32)
+    v2 = jnp.where(alloc_here, new_v, inst.v).astype(jnp.int32)
+    c2 = jnp.where(alloc_here, 0.0, inst.cost)
+    ev2 = inst.edge_valid | alloc_here
+
+    eidx2 = dg.eidx.at[jnp.where(ok_alloc, lo, 0),
+                       jnp.where(ok_alloc, hi, 0)].max(
+        jnp.where(ok_alloc, slot, -1))
+    eidx2 = eidx2.at[jnp.where(ok_alloc, hi, 0),
+                     jnp.where(ok_alloc, lo, 0)].max(
+        jnp.where(ok_alloc, slot, -1))
+    inst2 = MulticutInstance(u=u2, v=v2, cost=c2, edge_valid=ev2,
+                             node_valid=inst.node_valid)
+    chord_eid = eidx2[lo, hi]
+    chord_ok = ch_ok & (chord_eid >= 0) & (lo != hi)
+    return inst2, eidx2, chord_eid, chord_ok
+
+
+def separate_cycles45(inst: MulticutInstance, dg: DenseGraph, max_neg: int,
+                      nbr_k: int = 4) -> CycleSeparationResult:
+    """4/5-cycles per Alg. 5: for repulsive edge (v0, v4), scan pairs
+    (v1, v3) ∈ N⁺(v0) × N⁺(v4); a 4-cycle needs v1v3 ∈ E⁺, a 5-cycle a common
+    attractive neighbour v2 (via the A⁺A⁺ matmul). The best pair per repulsive
+    edge is triangulated with zero-cost chords."""
+    N = inst.num_nodes
+    nbr_k = min(nbr_k, N)
+    # (bf16 rows were tried here and measured 3% WORSE — the convert op
+    # costs more than the halved gather at nbr_k=4; §Perf cell C iter 3)
+    Aposf = dg.Apos.astype(jnp.float32)
+    # 2-path existence is only needed for the (v1, v3) candidate pairs of
+    # the selected repulsive edges — max_neg·nbr_k² pairs. The full P2 =
+    # A⁺A⁺ product costs 2N³ FLOPs (137 GF at the pd_round_lg shape); the
+    # per-edge row-dot form below costs 2·max_neg·nbr_k²·N (34 MF, 4000x
+    # less) with identical results. EXPERIMENTS.md §Perf cell C iter 1.
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    v0 = inst.u[neg_idx]
+    v4 = inst.v[neg_idx]
+
+    def per_edge(v0_, v4_, ok_):
+        w0, n0 = jax.lax.top_k(Aposf[v0_], nbr_k)     # neighbours of v0
+        w4, n4 = jax.lax.top_k(Aposf[v4_], nbr_k)     # neighbours of v4
+        ok0 = w0 > 0
+        ok4 = w4 > 0
+        pair_ok = ok0[:, None] & ok4[None, :] & ok_
+        v1 = jnp.broadcast_to(n0[:, None], (nbr_k, nbr_k))
+        v3 = jnp.broadcast_to(n4[None, :], (nbr_k, nbr_k))
+        distinct = (v1 != v3) & (v1 != v4_) & (v3 != v0_)
+        is4 = pair_ok & distinct & dg.Apos[v1, v3]
+        # (nbr_k, N) @ (N, nbr_k) batched row-dot == P2[v1, v3]
+        pair_counts = Aposf[n0] @ Aposf[n4].T
+        has2path = pair_counts > 0
+        is5 = pair_ok & distinct & ~is4 & has2path
+        # score: prefer 4-cycles, strongest attractive support
+        score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
+            + jnp.minimum(w0[:, None], w4[None, :]) * 1e-3
+        flat = jnp.argmax(score)
+        bi, bj = flat // nbr_k, flat % nbr_k
+        found = score.reshape(-1)[flat] > -jnp.inf
+        b_v1 = v1[bi, bj]
+        b_v3 = v3[bi, bj]
+        b_is4 = is4[bi, bj]
+        # for the 5-cycle pick v2 = common attractive neighbour of v1, v3
+        common = (dg.Apos[b_v1] & dg.Apos[b_v3]).astype(jnp.float32)
+        common = common.at[v0_].set(0.0).at[v4_].set(0.0)
+        b_v2 = jnp.argmax(common).astype(jnp.int32)
+        has_v2 = common[b_v2] > 0
+        found = found & (b_is4 | has_v2)
+        return (b_v1.astype(jnp.int32), b_v2, b_v3.astype(jnp.int32),
+                b_is4, found)
+
+    b1, b2, b3, is4, found = jax.vmap(per_edge)(v0, v4, neg_ok)
+
+    # chords: 4-cycle v0-v1-v3-v4 needs chord (v1, v4);
+    #         5-cycle v0-v1-v2-v3-v4 needs chords (v1, v4) and (v2, v4)
+    chord1_u, chord1_v = b1, v4
+    chord2_u, chord2_v = b2, v4
+    chord2_ok = found & ~is4
+    inst2, eidx2, ch1, ch1_ok = _alloc_chords(
+        inst, dg, chord1_u, chord1_v, found)
+    dg2 = DenseGraph(A=dg.A, Apos=dg.Apos, eidx=eidx2)
+    inst3, eidx3, ch2, ch2_ok = _alloc_chords(
+        inst2, dg2, chord2_u, chord2_v, chord2_ok)
+
+    e = lambda a, b: eidx3[a, b]
+    # triangles for 4-cycle: {v0v1, v1v4, v4v0}, {v1v3, v3v4, v4v1}
+    t4a = jnp.stack([e(v0, b1), ch1, e(v4, v0)], axis=-1)
+    t4b = jnp.stack([e(b1, b3), e(b3, v4), ch1], axis=-1)
+    ok4 = found & is4 & ch1_ok
+    # triangles for 5-cycle: {v0v1,v1v4,v4v0}, {v1v2,v2v4,v4v1}, {v2v3,v3v4,v4v2}
+    t5a = t4a
+    t5b = jnp.stack([e(b1, b2), ch2, ch1], axis=-1)
+    t5c = jnp.stack([e(b2, b3), e(b3, v4), ch2], axis=-1)
+    ok5 = found & ~is4 & ch1_ok & ch2_ok
+
+    tris = jnp.concatenate([t4a, t4b, t5b, t5c], axis=0).astype(jnp.int32)
+    oks = jnp.concatenate([ok4 | ok5, ok4, ok5, ok5], axis=0)
+    oks = oks & jnp.all(tris >= 0, axis=-1)
+    tris = jnp.where(oks[:, None], tris, 0)
+    return CycleSeparationResult(
+        instance=inst3, triangles=Triangles(edges=tris, valid=oks))
+
+
+def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
+             with_cycles45: bool = True, nbr_k: int = 4) -> CycleSeparationResult:
+    """Full separation round: 3-cycles always; 4/5-cycles optionally
+    (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5)."""
+    dg = build_dense(inst, with_costs=False)
+    tri3 = separate_triangles(inst, dg, max_neg, max_tri_per_edge)
+    if not with_cycles45:
+        return CycleSeparationResult(instance=inst, triangles=tri3)
+    res45 = separate_cycles45(inst, dg, max_neg, nbr_k=nbr_k)
+    edges = jnp.concatenate([tri3.edges, res45.triangles.edges], axis=0)
+    valid = jnp.concatenate([tri3.valid, res45.triangles.valid], axis=0)
+    return CycleSeparationResult(
+        instance=res45.instance,
+        triangles=Triangles(edges=edges, valid=valid))

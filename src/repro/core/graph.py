@@ -1,0 +1,125 @@
+"""Padded-COO multicut instance + instance generators.
+
+RAMA's graphs shrink across contraction rounds; XLA needs static shapes. We
+keep (N, E) fixed for the lifetime of a solve and track validity masks:
+``node_valid`` marks live cluster representatives, ``edge_valid`` live edges.
+Costs follow the paper's sign convention: c > 0 attractive (want joined),
+c < 0 repulsive (want cut).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MulticutInstance(NamedTuple):
+    u: jax.Array            # (E,) int32, u < v for valid edges
+    v: jax.Array            # (E,) int32
+    cost: jax.Array         # (E,) float32
+    edge_valid: jax.Array   # (E,) bool
+    node_valid: jax.Array   # (N,) bool
+
+    @property
+    def num_nodes(self) -> int:
+        return self.node_valid.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return self.edge_valid.shape[0]
+
+    def objective(self, labels: jax.Array) -> jax.Array:
+        """Multicut objective <c, y>: sum of costs of cut edges under a node
+        labeling (y_e = 1 iff endpoints in distinct clusters)."""
+        cut = labels[self.u] != labels[self.v]
+        return jnp.sum(jnp.where(self.edge_valid & cut, self.cost, 0.0))
+
+
+def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
+                  pad_nodes: int | None = None) -> MulticutInstance:
+    """Build a padded instance from (possibly unordered) host edge arrays."""
+    u = np.asarray(u, dtype=np.int32)
+    v = np.asarray(v, dtype=np.int32)
+    cost = np.asarray(cost, dtype=np.float32)
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    E = len(u)
+    Ep = pad_edges if pad_edges is not None else E
+    Np = pad_nodes if pad_nodes is not None else num_nodes
+    assert Ep >= E and Np >= num_nodes
+    uu = np.zeros(Ep, dtype=np.int32); uu[:E] = lo
+    vv = np.zeros(Ep, dtype=np.int32); vv[:E] = hi
+    cc = np.zeros(Ep, dtype=np.float32); cc[:E] = cost
+    ev = np.zeros(Ep, dtype=bool); ev[:E] = True
+    nv = np.zeros(Np, dtype=bool); nv[:num_nodes] = True
+    return MulticutInstance(u=jnp.asarray(uu), v=jnp.asarray(vv),
+                            cost=jnp.asarray(cc), edge_valid=jnp.asarray(ev),
+                            node_valid=jnp.asarray(nv))
+
+
+def to_host_edges(inst: MulticutInstance):
+    """Valid edges as host numpy arrays (u, v, cost)."""
+    ev = np.asarray(inst.edge_valid)
+    return (np.asarray(inst.u)[ev], np.asarray(inst.v)[ev],
+            np.asarray(inst.cost)[ev])
+
+
+# ---------------------------------------------------------------------------
+# Instance generators (synthetic datasets standing in for the paper's
+# Cityscapes / Connectomics instances; same structural regimes).
+# ---------------------------------------------------------------------------
+
+def random_instance(n: int, p: float, seed: int = 0, mu: float = 0.0,
+                    sigma: float = 1.0, pad_edges: int | None = None,
+                    pad_nodes: int | None = None) -> MulticutInstance:
+    """Erdos-Renyi graph with gaussian signed costs."""
+    rng = np.random.default_rng(seed)
+    iu, ju = np.triu_indices(n, k=1)
+    keep = rng.random(len(iu)) < p
+    u, v = iu[keep], ju[keep]
+    c = rng.normal(mu, sigma, size=len(u)).astype(np.float32)
+    return make_instance(u, v, c, n, pad_edges=pad_edges, pad_nodes=pad_nodes)
+
+
+def grid_instance(h: int, w: int, seed: int = 0, noise: float = 0.4,
+                  n_segments: int = 6, long_range: bool = True,
+                  pad_edges: int | None = None) -> MulticutInstance:
+    """Cityscapes-like grid instance: 4-connectivity + coarse long-range
+    edges, costs derived from a planted segmentation + noise (so ground-truth
+    structure exists and objective values are meaningful)."""
+    rng = np.random.default_rng(seed)
+    # planted segmentation: Voronoi cells of random centers
+    cy = rng.uniform(0, h, n_segments); cx = rng.uniform(0, w, n_segments)
+    yy, xx = np.mgrid[0:h, 0:w]
+    d = (yy[..., None] - cy) ** 2 + (xx[..., None] - cx) ** 2
+    seg = d.argmin(-1)
+
+    def edge_cost(a_idx, b_idx):
+        same = (seg.ravel()[a_idx] == seg.ravel()[b_idx]).astype(np.float32)
+        base = np.where(same, 1.0, -1.0)
+        return base + rng.normal(0, noise * 2, size=len(a_idx)).astype(np.float32)
+
+    idx = np.arange(h * w).reshape(h, w)
+    us, vs = [], []
+    # 4-connectivity
+    us.append(idx[:, :-1].ravel()); vs.append(idx[:, 1:].ravel())
+    us.append(idx[:-1, :].ravel()); vs.append(idx[1:, :].ravel())
+    if long_range:
+        for (dy, dx) in [(0, 4), (4, 0), (3, 3)]:
+            if h > dy and w > dx:
+                us.append(idx[: h - dy, : w - dx].ravel())
+                vs.append(idx[dy:, dx:].ravel())
+    u = np.concatenate(us); v = np.concatenate(vs)
+    c = edge_cost(u, v)
+    return make_instance(u, v, c, h * w, pad_edges=pad_edges)
+
+
+def to_networkx(inst: MulticutInstance):
+    import networkx as nx
+    g = nx.Graph()
+    g.add_nodes_from(range(int(np.asarray(inst.node_valid).sum())))
+    u, v, c = to_host_edges(inst)
+    for a, b, w_ in zip(u.tolist(), v.tolist(), c.tolist()):
+        g.add_edge(a, b, weight=w_)
+    return g

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper with padding/backend routing) and
+<name>/ref.py (pure-jnp oracle used by the allclose sweeps in tests/).
+
+  triangle_mp     — RAMA's dual message-passing sweep (the paper's hot loop)
+  contract_matmul — Lemma 4's KᵀAK contraction product (MXU tiled matmul)
+  flash_attention — causal/GQA/sliding-window/softcap attention for the LM
+                    architecture family
+"""

@@ -1,0 +1,6 @@
+from repro.kernels.contract_matmul.ops import contract_matmul
+from repro.kernels.contract_matmul.kernel import matmul_pallas
+from repro.kernels.contract_matmul.ref import contract_matmul_ref, matmul_ref
+
+__all__ = ["contract_matmul", "matmul_pallas", "contract_matmul_ref",
+           "matmul_ref"]

@@ -1,0 +1,42 @@
+"""Jit'd wrapper: contraction product A' = KᵀAK − diag via the Pallas matmul.
+
+Pads N (old nodes) and M (new clusters) to tile-aligned sizes; K is
+materialised as a one-hot matrix — exactly the paper's formulation
+(Definition 3), and the padding rows/cols are all-zero so they contribute
+nothing to the product.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.contract_matmul.kernel import matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("n_new", "block"))
+def contract_matmul(A: jax.Array, f: jax.Array, n_new: int, block: int = 256):
+    """A: (N, N) adjacency; f: (N,) contraction mapping into [0, n_new).
+    Returns (n_new, n_new) contracted adjacency with zero diagonal."""
+    N = A.shape[0]
+    bp = block
+    Np = ((N + bp - 1) // bp) * bp
+    Mp = ((n_new + bp - 1) // bp) * bp
+    K = jax.nn.one_hot(f, n_new, dtype=A.dtype)          # (N, n_new)
+    Ap = _pad_to(A, Np, Np)
+    Kp = _pad_to(K, Np, Mp)
+    interp = not _on_tpu()
+    B = matmul_pallas(Ap, Kp, block_m=bp, block_n=bp, block_k=bp,
+                      interpret=interp)                   # (Np, Mp)
+    out = matmul_pallas(Kp.T, B, block_m=bp, block_n=bp, block_k=bp,
+                        drop_diag=True, interpret=interp)  # (Mp, Mp)
+    return out[:n_new, :n_new]

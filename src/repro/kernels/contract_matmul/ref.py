@@ -1,0 +1,19 @@
+"""Oracle for the KᵀAK edge-contraction product (Lemma 4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contract_matmul_ref(A: jax.Array, f: jax.Array, n_new: int,
+                        drop_diag: bool = True) -> jax.Array:
+    """A' = KᵀAK (optionally minus its diagonal) with K = one_hot(f)."""
+    K = jax.nn.one_hot(f, n_new, dtype=A.dtype)
+    M = K.T @ A @ K
+    if drop_diag:
+        M = M - jnp.diag(jnp.diag(M))
+    return M
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)

@@ -1,0 +1,8 @@
+from repro.kernels.flash_attention.ops import (flash_attention,
+    flash_attention_trainable)
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref, decode_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref",
+           "decode_attention_ref"]
+from repro.kernels.flash_attention.chunked import chunked_attention

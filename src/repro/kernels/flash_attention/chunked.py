@@ -1,0 +1,110 @@
+"""Memory-efficient chunked attention (Rabe & Staats) in pure JAX.
+
+Three roles in the system:
+  1. the DIFFERENTIABLE training-path attention everywhere XLA runs — the
+     Pallas kernel is forward-only, so training routes through this (or
+     uses the kernel forward + this as custom-vjp backward on TPU);
+  2. the dry-run attention: lowers to plain HLO (scan over query chunks),
+     so the 512-device compile sees the real O(S·block) memory profile
+     instead of an S×S score buffer;
+  3. the oracle for long-sequence tests where the full S×S reference
+     would not fit.
+
+Memory: one (B, H, block_q, S) score tile at a time; ``jax.checkpoint`` on
+the chunk body makes the backward recompute tiles instead of saving them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: int | None = None,
+                      softcap: float | None = None,
+                      block_q: int = 512, scale: float | None = None,
+                      unroll: bool = False):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    Returns (B, Hq, S, D).
+
+    ``unroll=True`` replaces the lax.map with a Python loop. Same math and
+    buffer reuse, but every chunk appears in the HLO — XLA's HloCostAnalysis
+    counts loop bodies ONCE, so the rolled form under-reports FLOPs by a
+    factor of S/block_q; the roofline pass compiles the unrolled form."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    block_q = min(block_q, S)
+    # pad S up to a block multiple (padded queries produce garbage rows that
+    # we slice off; they attend causally to real keys so no NaNs)
+    Sp = ((S + block_q - 1) // block_q) * block_q
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    nq = Sp // block_q
+    # GQA without materialising repeated KV: fold rep into the batch dims
+    qg = q.reshape(B, Hkv, rep, Sp, D)
+
+    def chunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(qg, i * block_q, block_q, axis=3)
+        s = jnp.einsum("bkrqd,bksd->bkrqs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = i * block_q + jnp.arange(block_q)
+        kpos = jnp.arange(S)
+        mask = jnp.ones((block_q, S), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkrqs,bksd->bkrqd", p, v.astype(jnp.float32))
+        return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    if unroll:
+        out = jnp.stack([chunk(jnp.int32(i)) for i in range(nq)])
+    else:
+        out = jax.lax.map(jax.checkpoint(chunk), jnp.arange(nq))
+    # (nq, B, Hkv, rep, block_q, D) -> (B, Hq, Sp, D)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sp, D)
+    return out[:, :, :S]
+
+
+@functools.lru_cache(maxsize=None)
+def make_flash_vjp_op(causal: bool, window: int | None,
+                      softcap: float | None, block_q: int, block_k: int,
+                      interpret: bool):
+    """Pallas flash forward + chunked-recompute backward, as a custom-vjp
+    op (the kernel is forward-only; the backward recomputes tiles the way a
+    flash backward kernel would, expressed in XLA)."""
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+    def ref_fn(q, k, v):
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, block_q=block_q)
+
+    @jax.custom_vjp
+    def op(q, k, v):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+
+    def fwd(q, k, v):
+        return op(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(ref_fn, q, k, v)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op

@@ -1,0 +1,55 @@
+"""Public attention op: routes to the Pallas kernel on TPU, to the pure-jnp
+reference elsewhere (or when shapes are too ragged for the kernel tiling)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.chunked import (
+    chunked_attention, make_flash_vjp_op,
+)
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, use_pallas: bool | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Forward-only (no vjp);
+    training paths use :func:`flash_attention_trainable`."""
+    S, D = q.shape[2], q.shape[3]
+    if use_pallas is None:
+        use_pallas = _on_tpu() and S % 128 == 0 and D % 128 == 0
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk,
+        interpret=(not _on_tpu()) if interpret is None else interpret)
+
+
+def flash_attention_trainable(q, k, v, *, causal: bool = True,
+                              window: int | None = None,
+                              softcap: float | None = None,
+                              block_q: int = 512, block_k: int = 512,
+                              unroll: bool = False):
+    """Differentiable memory-efficient attention.
+
+    TPU: Pallas flash forward + chunked-recompute backward (custom vjp).
+    Elsewhere (CPU dry-run/tests): chunked attention end to end — pure XLA,
+    O(S·block) memory, autodiff via checkpointed scan."""
+    S = q.shape[2]
+    bq = min(block_q, S)
+    if _on_tpu() and S % bq == 0:
+        op = make_flash_vjp_op(causal, window, softcap, bq,
+                               min(block_k, S), False)
+        return op(q, k, v)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, block_q=bq, unroll=unroll)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for flash attention: full-materialisation softmax
+attention with causal mask, GQA, sliding window, and logit soft-capping."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    window: sliding-window size (keys within [i-window+1, i]); None = full.
+    softcap: gemma2-style logit cap: cap * tanh(logits / cap)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vv)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
+                         softcap: float | None = None,
+                         window: int | None = None,
+                         scale: float | None = None):
+    """Single-token decode: q (B, Hq, 1, D) against caches (B, Hkv, S, D);
+    positions >= cache_len are masked out."""
+    B, Hq, Q, D = q.shape
+    S = k_cache.shape[2]
+    Hkv = k_cache.shape[1]
+    rep = Hq // Hkv
+    # grouped-GQA form: no jnp.repeat of the cache. Repeating wants a
+    # head-sharded cache and makes GSPMD reshard a seq-sharded cache every
+    # layer; the grouped einsum contracts the (possibly sharded) seq dim
+    # directly (partial dot + all-reduce).
+    qg = q.reshape(B, Hkv, rep, Q, D)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bkrqd,bksd->bkrqs", qg,
+                        k_cache).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(S)[None, None, None, None, :]
+    mask = pos < cache_len
+    if window is not None:
+        mask &= pos > cache_len - 1 - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkrqs,bksd->bkrqd", p.astype(q.dtype), v_cache)
+    return out.reshape(B, Hq, Q, D)

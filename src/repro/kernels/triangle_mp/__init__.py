@@ -1,0 +1,4 @@
+from repro.kernels.triangle_mp.ops import mp_sweep
+from repro.kernels.triangle_mp.ref import mp_sweep_ref
+
+__all__ = ["mp_sweep", "mp_sweep_ref"]

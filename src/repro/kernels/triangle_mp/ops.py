@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the triangle_mp kernel: (T, 3) in, (T, 3) out.
+
+Pads T to a (block_rows * 128)-aligned rectangle, transposes the edge slots
+into three lane-major planes, runs the kernel, and unpads. ``interpret=True``
+is selected automatically off-TPU so the same entry point validates on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.triangle_mp.kernel import mp_sweep_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def mp_sweep(t_cost: jax.Array, block_rows: int = 256) -> jax.Array:
+    """Drop-in replacement for mp_sweep_reference backed by the Pallas
+    kernel. t_cost: (T, 3) float32."""
+    T = t_cost.shape[0]
+    lane = 128
+    tile = block_rows * lane
+    T_pad = max(((T + tile - 1) // tile) * tile, tile)
+    pad = T_pad - T
+    tc = jnp.pad(t_cost, ((0, pad), (0, 0)))
+    a = tc[:, 0].reshape(-1, lane)
+    b = tc[:, 1].reshape(-1, lane)
+    c = tc[:, 2].reshape(-1, lane)
+    a2, b2, c2 = mp_sweep_pallas(a, b, c, block_rows=block_rows,
+                                 interpret=not _on_tpu())
+    out = jnp.stack([a2.reshape(-1), b2.reshape(-1), c2.reshape(-1)], axis=-1)
+    return out[:T]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the triangle message-passing sweep (Alg. 2, l. 8-13).
+
+Identical math to repro.core.message_passing.mp_sweep_reference, restated here
+so the kernel package is self-contained for allclose sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _mm(a, b, c):
+    """Min-marginal of the first edge given triangle costs (a, b, c)."""
+    return a + jnp.minimum(jnp.minimum(b, c), b + c) - jnp.minimum(0.0, b + c)
+
+
+def mp_sweep_ref(t_cost: jnp.ndarray) -> jnp.ndarray:
+    """t_cost: (..., 3) triangle subproblem costs. Returns swept costs after
+    the fixed sequence e1:1/3, e2:1/2, e3:1, e1:1/2, e2:1, e1:1 — each
+    min-marginal computed on the current costs (λ += γm ⇔ cost −= γm)."""
+    a, b, c = t_cost[..., 0], t_cost[..., 1], t_cost[..., 2]
+    a = a - (1.0 / 3.0) * _mm(a, b, c)
+    b = b - (1.0 / 2.0) * _mm(b, a, c)
+    c = c - 1.0 * _mm(c, a, b)
+    a = a - (1.0 / 2.0) * _mm(a, b, c)
+    b = b - 1.0 * _mm(b, a, c)
+    a = a - 1.0 * _mm(a, b, c)
+    return jnp.stack([a, b, c], axis=-1)

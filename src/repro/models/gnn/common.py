@@ -1,0 +1,206 @@
+"""Shared GNN substrate: padded graph batches, MLP blocks, topology builders.
+
+All models consume fixed-shape ``GraphBatch``es (padded edge lists + masks) —
+the same static-shape discipline as the multicut core, and built on the same
+``segment_sum`` scatter machinery (repro.sparse).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphBatch(NamedTuple):
+    nodes: jax.Array        # (N, F) node features
+    edges_src: jax.Array    # (E,) int32
+    edges_dst: jax.Array    # (E,) int32
+    edge_feat: jax.Array    # (E, Fe) edge features (zeros if unused)
+    node_mask: jax.Array    # (N,) bool
+    edge_mask: jax.Array    # (E,) bool
+    graph_ids: jax.Array    # (N,) int32 graph id per node (batched graphs)
+    n_graphs: int = 1
+    positions: jax.Array | None = None   # (N, 3) for molecular models
+    labels: jax.Array | None = None      # task labels (node or graph level)
+
+
+def mlp_init(key, dims, scale=None):
+    ks = jax.random.split(key, len(dims) - 1)
+    ws, bs = [], []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        s = scale or (1.0 / np.sqrt(a))
+        ws.append((jax.random.normal(ks[i], (a, b)) * s).astype(jnp.float32))
+        bs.append(jnp.zeros((b,), jnp.float32))
+    return {"w": ws, "b": bs}
+
+
+def mlp_apply(p, x, act=jax.nn.silu, final_act=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding for the full-graph (pjit) path. The dry-run sets the
+# leading-axis mesh axes before tracing; models call ``constrain`` on node/
+# edge hidden states at layer boundaries so GSPMD keeps them partitioned
+# (without it the 2.4M x 512 node matrix of ogb_products is replicated on
+# every device — observed 234 GiB/device). ``layer_remat`` wraps each GNN
+# layer in jax.checkpoint so the backward holds one layer's working set.
+# ---------------------------------------------------------------------------
+
+_ACT_AXES = None
+
+
+def set_act_axes(axes):
+    global _ACT_AXES
+    _ACT_AXES = axes
+
+
+def constrain(x):
+    if _ACT_AXES is None or x is None:
+        return x
+    spec = jax.sharding.PartitionSpec(_ACT_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_tree(t):
+    return jax.tree.map(constrain, t)
+
+
+def layer_remat(fn):
+    return jax.checkpoint(fn)
+
+
+def segment_sum_masked(values, ids, mask, num_segments: int):
+    values = values * mask[..., None].astype(values.dtype) \
+        if values.ndim > 1 else values * mask.astype(values.dtype)
+    return jax.ops.segment_sum(values, ids, num_segments=num_segments)
+
+
+# ---------------------------------------------------------------------------
+# Host-side topology builders
+# ---------------------------------------------------------------------------
+
+def random_graph_batch(key, n_nodes: int, n_edges: int, d_feat: int,
+                       n_graphs: int = 1, with_pos: bool = False,
+                       n_classes: int = 8) -> GraphBatch:
+    """Synthetic padded graph batch (uniform random edges)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    src = jax.random.randint(k1, (n_edges,), 0, n_nodes).astype(jnp.int32)
+    dst = jax.random.randint(k2, (n_edges,), 0, n_nodes).astype(jnp.int32)
+    nodes = jax.random.normal(k3, (n_nodes, d_feat), dtype=jnp.float32)
+    gid = (jnp.arange(n_nodes, dtype=jnp.int32) * n_graphs) // n_nodes
+    pos = jax.random.normal(k4, (n_nodes, 3)) if with_pos else None
+    labels = jax.random.randint(k5, (n_nodes,), 0, n_classes).astype(jnp.int32)
+    return GraphBatch(nodes=nodes, edges_src=src, edges_dst=dst,
+                      edge_feat=jnp.zeros((n_edges, 1), jnp.float32),
+                      node_mask=jnp.ones(n_nodes, bool),
+                      edge_mask=jnp.ones(n_edges, bool),
+                      graph_ids=gid, n_graphs=n_graphs, positions=pos,
+                      labels=labels)
+
+
+def molecule_batch(key, batch: int, nodes_per_mol: int, edges_per_mol: int,
+                   d_feat: int) -> GraphBatch:
+    """Batched small molecular graphs (radius-graph style edges)."""
+    N = batch * nodes_per_mol
+    E = batch * edges_per_mol
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pos = jax.random.normal(k1, (N, 3), dtype=jnp.float32) * 2.0
+    feats = jax.random.normal(k2, (N, d_feat), dtype=jnp.float32)
+    # per-molecule random edges (both endpoints inside the molecule)
+    off = (jnp.arange(E, dtype=jnp.int32) // edges_per_mol) * nodes_per_mol
+    src = off + jax.random.randint(k3, (E,), 0, nodes_per_mol).astype(jnp.int32)
+    dst = off + jax.random.randint(k4, (E,), 0, nodes_per_mol).astype(jnp.int32)
+    gid = jnp.arange(N, dtype=jnp.int32) // nodes_per_mol
+    labels = jax.random.normal(key, (batch,), dtype=jnp.float32)  # energies
+    return GraphBatch(nodes=feats, edges_src=src, edges_dst=dst,
+                      edge_feat=jnp.zeros((E, 1), jnp.float32),
+                      node_mask=jnp.ones(N, bool),
+                      edge_mask=src != dst,
+                      graph_ids=gid, n_graphs=batch, positions=pos,
+                      labels=labels)
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, max_triplets: int):
+    """DimeNet triplet index lists: pairs of directed edges (k->j, j->i) with
+    k != i. Returns (edge_kj_idx, edge_ji_idx, mask), padded to max_triplets."""
+    E = len(src)
+    by_dst: dict[int, list[int]] = {}
+    for e in range(E):
+        by_dst.setdefault(int(dst[e]), []).append(e)
+    t_kj, t_ji = [], []
+    for e_ji in range(E):
+        j = int(src[e_ji])
+        i = int(dst[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(src[e_kj]) != i:
+                t_kj.append(e_kj)
+                t_ji.append(e_ji)
+                if len(t_kj) >= max_triplets:
+                    break
+        if len(t_kj) >= max_triplets:
+            break
+    n = len(t_kj)
+    kj = np.zeros(max_triplets, np.int32)
+    ji = np.zeros(max_triplets, np.int32)
+    m = np.zeros(max_triplets, bool)
+    kj[:n] = t_kj
+    ji[:n] = t_ji
+    m[:n] = True
+    return kj, ji, m
+
+
+def icosphere(refinement: int):
+    """Icosahedron subdivided ``refinement`` times: (verts (V,3), undirected
+    edges (E,2)). V = 10*4^r + 2, E = 30*4^r."""
+    phi = (1.0 + np.sqrt(5.0)) / 2.0
+    verts = np.array([
+        [-1, phi, 0], [1, phi, 0], [-1, -phi, 0], [1, -phi, 0],
+        [0, -1, phi], [0, 1, phi], [0, -1, -phi], [0, 1, -phi],
+        [phi, 0, -1], [phi, 0, 1], [-phi, 0, -1], [-phi, 0, 1],
+    ], dtype=np.float64)
+    verts /= np.linalg.norm(verts, axis=1, keepdims=True)
+    faces = np.array([
+        [0, 11, 5], [0, 5, 1], [0, 1, 7], [0, 7, 10], [0, 10, 11],
+        [1, 5, 9], [5, 11, 4], [11, 10, 2], [10, 7, 6], [7, 1, 8],
+        [3, 9, 4], [3, 4, 2], [3, 2, 6], [3, 6, 8], [3, 8, 9],
+        [4, 9, 5], [2, 4, 11], [6, 2, 10], [8, 6, 7], [9, 8, 1],
+    ], dtype=np.int64)
+    for _ in range(refinement):
+        verts_l = verts.tolist()
+        midpoint: dict[tuple[int, int], int] = {}
+
+        def mid(a, b):
+            key = (min(a, b), max(a, b))
+            if key not in midpoint:
+                m = np.array(verts_l[a]) + np.array(verts_l[b])
+                m /= np.linalg.norm(m)
+                midpoint[key] = len(verts_l)
+                verts_l.append(m.tolist())
+            return midpoint[key]
+
+        new_faces = []
+        for a, b, c in faces:
+            ab, bc, ca = mid(a, b), mid(b, c), mid(c, a)
+            new_faces += [[a, ab, ca], [b, bc, ab], [c, ca, bc],
+                          [ab, bc, ca]]
+        faces = np.array(new_faces, dtype=np.int64)
+        verts = np.array(verts_l)
+    edges = set()
+    for a, b, c in faces:
+        for x, y in ((a, b), (b, c), (c, a)):
+            edges.add((min(x, y), max(x, y)))
+    return verts.astype(np.float32), np.array(sorted(edges), dtype=np.int32)

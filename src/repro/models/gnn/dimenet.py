@@ -1,0 +1,164 @@
+"""DimeNet — directional message passing [arXiv:2003.03123].
+
+Directed edge messages m_ji updated from triplet interactions (k→j→i) with a
+radial basis on distances and an angular×radial basis on (d_kj, θ_kji),
+combined through a bilinear tensor (n_bilinear).
+
+TPU adaptation (recorded in DESIGN.md): the spherical Bessel/Legendre 2D
+basis is replaced by a separable sin-radial × Chebyshev-angular basis of the
+same rank (n_spherical × n_radial) — same tensor shapes and compute pattern,
+no Bessel-zero tables. Triplet index lists are precomputed host-side and
+padded (``build_triplets``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (GraphBatch, constrain,
+    layer_remat, mlp_init, mlp_apply)
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    d_in: int = 16
+
+
+def radial_basis(d, n_radial: int, cutoff: float):
+    """sin(nπ d/c)/d Bessel-style radial basis with smooth cutoff."""
+    d = jnp.clip(d, 1e-3, None)
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    u = d[..., None] / cutoff
+    env = jnp.where(u < 1.0, 0.5 * (jnp.cos(jnp.pi * u) + 1.0), 0.0)
+    return env * jnp.sin(n * jnp.pi * u) / d[..., None]
+
+
+def angular_radial_basis(d, cos_theta, n_spherical: int, n_radial: int,
+                         cutoff: float):
+    """Separable (angular Chebyshev) × (radial sin) basis, rank S*R."""
+    rb = radial_basis(d, n_radial, cutoff)                # (..., R)
+    theta = jnp.arccos(jnp.clip(cos_theta, -1 + 1e-6, 1 - 1e-6))
+    s = jnp.arange(n_spherical, dtype=jnp.float32)
+    ab = jnp.cos(s * theta[..., None])                    # (..., S)
+    return (ab[..., :, None] * rb[..., None, :]).reshape(
+        *d.shape, n_spherical * n_radial)
+
+
+def init_params(cfg: DimeNetConfig, key):
+    d, B = cfg.d_hidden, cfg.n_bilinear
+    SR = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, cfg.n_blocks * 6 + 4)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = ks[6 * i: 6 * i + 6]
+        blocks.append({
+            "w_sbf": (jax.random.normal(k[0], (SR, B)) / SR ** 0.5),
+            "w_bil": (jax.random.normal(k[1], (B, d, d)) / (B * d) ** 0.5),
+            "msg_kj": mlp_init(k[2], [d, d]),
+            "msg_ji": mlp_init(k[3], [d, d]),
+            "update": mlp_init(k[4], [d, d, d]),
+            "out": mlp_init(k[5], [d, d]),
+        })
+    return {
+        "embed_node": mlp_init(ks[-4], [cfg.d_in, d]),
+        "embed_edge": mlp_init(ks[-3], [2 * d + cfg.n_radial, d]),
+        "rbf_proj": mlp_init(ks[-2], [cfg.n_radial, d]),
+        "readout": mlp_init(ks[-1], [d, d, 1]),
+        "blocks": blocks,
+    }
+
+
+def _trunk(cfg: DimeNetConfig, params, g: GraphBatch, tri_kj, tri_ji,
+           tri_mask):
+    """Shared trunk returning (final edge messages m, per-node energy acc)."""
+    N, E = g.nodes.shape[0], g.edges_src.shape[0]
+    src, dst = g.edges_src, g.edges_dst
+    pos = g.positions
+    vec = pos[dst] - pos[src]
+    dist = jnp.sqrt(jnp.sum(vec * vec, -1) + 1e-12)
+    rbf = radial_basis(dist, cfg.n_radial, cfg.cutoff)     # (E, R)
+
+    h = mlp_apply(params["embed_node"], g.nodes)
+    rbf = rbf.astype(h.dtype)
+    m = mlp_apply(params["embed_edge"],
+                  jnp.concatenate([h[src], h[dst], rbf], -1))  # (E, d)
+    rbf_d = mlp_apply(params["rbf_proj"], rbf)             # (E, d)
+
+    # triplet geometry: angle between (k→j) and (j→i) at node j
+    v_kj = vec[tri_kj]
+    v_ji = vec[tri_ji]
+    cosang = jnp.sum(-v_kj * v_ji, -1) / (
+        jnp.linalg.norm(v_kj, axis=-1) * jnp.linalg.norm(v_ji, axis=-1) + 1e-9)
+    sbf = angular_radial_basis(dist[tri_kj], cosang, cfg.n_spherical,
+                               cfg.n_radial, cfg.cutoff).astype(h.dtype)
+
+    energy_acc = jnp.zeros((N,), jnp.float32)
+
+    def one_block(bp, m, energy_acc):
+        x_kj = constrain(mlp_apply(bp["msg_kj"], m,
+                                   final_act=True)[tri_kj])   # (T, d)
+        a = sbf @ bp["w_sbf"].astype(sbf.dtype)             # (T, B)
+        tri_msg = jnp.einsum("tb,bhf,th->tf", a,
+                             bp["w_bil"].astype(a.dtype), x_kj)
+        tri_msg = tri_msg * tri_mask[:, None].astype(tri_msg.dtype)
+        # constrain the scatter output: an unconstrained segment_sum over
+        # T-sharded triplets lets GSPMD replicate the (E, d) result on
+        # every device (61M x 128 f32 x dozens of live copies)
+        agg = constrain(jax.ops.segment_sum(tri_msg, tri_ji,
+                                            num_segments=E))
+        dt = m.dtype
+        m = m + mlp_apply(bp["update"],
+                          mlp_apply(bp["msg_ji"], m, final_act=True)
+                          + agg.astype(dt))
+        m = (m * rbf_d).astype(dt)  # re-modulate by radial envelope
+        e_contrib = mlp_apply(bp["out"], m)
+        node_e = jax.ops.segment_sum(
+            e_contrib * g.edge_mask[:, None].astype(e_contrib.dtype),
+            dst, num_segments=N)
+        return constrain(m), energy_acc + node_e.astype(jnp.float32).sum(-1) / cfg.d_hidden
+
+    one_block = layer_remat(one_block)
+    m = constrain(m)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["blocks"])
+    (m, energy_acc), _ = jax.lax.scan(
+        lambda c, bp: (one_block(bp, c[0], c[1]), None), (m, energy_acc),
+        stacked)
+
+    return m, energy_acc
+
+
+def node_repr(cfg: DimeNetConfig, params, g: GraphBatch, tri_kj, tri_ji,
+              tri_mask):
+    """Per-node representation (N, d_hidden): aggregated final messages."""
+    m, _ = _trunk(cfg, params, g, tri_kj, tri_ji, tri_mask)
+    return jax.ops.segment_sum(
+        m * g.edge_mask[:, None].astype(m.dtype), g.edges_dst,
+        num_segments=g.nodes.shape[0])
+
+
+def forward(cfg: DimeNetConfig, params, g: GraphBatch, tri_kj, tri_ji,
+            tri_mask):
+    """Per-graph energies (the molecular-property task)."""
+    m, energy_acc = _trunk(cfg, params, g, tri_kj, tri_ji, tri_mask)
+    N = g.nodes.shape[0]
+    node_e = mlp_apply(params["readout"],
+                       jax.ops.segment_sum(
+                           m * g.edge_mask[:, None].astype(m.dtype),
+                           g.edges_dst, num_segments=N))[:, 0] + energy_acc
+    node_e = node_e * g.node_mask.astype(node_e.dtype)
+    return jax.ops.segment_sum(node_e, g.graph_ids, num_segments=g.n_graphs)
+
+
+def loss_fn(cfg: DimeNetConfig, params, g: GraphBatch, tri_kj, tri_ji,
+            tri_mask):
+    energy = forward(cfg, params, g, tri_kj, tri_ji, tri_mask)
+    return jnp.mean((energy - g.labels) ** 2)

@@ -1,0 +1,225 @@
+"""GraphCast-style encoder–processor–decoder mesh GNN [arXiv:2212.12794].
+
+Grid nodes (lat/lon, n_vars=227 channels) are encoded onto an icosahedral
+mesh (refinement 6 → 40962 mesh nodes), processed by 16 GraphNet layers over
+multi-scale mesh edges, and decoded back to the grid. Each GraphNet block:
+edge MLP([e, h_src, h_dst]) → e'; node MLP([h, Σ_in e']) → h'; residual +
+LayerNorm — aggregation is ``segment_sum`` over the static edge lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import constrain, layer_remat  # noqa: E501
+from repro.models.gnn.common import (
+    icosphere, layer_norm, mlp_apply, mlp_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    mesh_refinement: int = 6
+    n_vars: int = 227
+    grid_lat: int = 181      # 1° resolution
+    grid_lon: int = 360
+    g2m_per_grid: int = 4    # grid→mesh edges per grid node
+    m2g_per_grid: int = 3    # mesh→grid edges per grid node
+
+    @property
+    def n_grid(self) -> int:
+        return self.grid_lat * self.grid_lon
+
+    @property
+    def n_mesh(self) -> int:
+        return 10 * 4 ** self.mesh_refinement + 2
+
+    @property
+    def n_mesh_edges(self) -> int:
+        # multi-scale: all refinement levels' edge sets, directed
+        return 2 * sum(30 * 4 ** r for r in range(self.mesh_refinement + 1))
+
+    @property
+    def n_g2m_edges(self) -> int:
+        return self.n_grid * self.g2m_per_grid
+
+    @property
+    def n_m2g_edges(self) -> int:
+        return self.n_grid * self.m2g_per_grid
+
+
+class MeshTopology(NamedTuple):
+    mesh_src: jax.Array     # (Em,) int32
+    mesh_dst: jax.Array
+    g2m_src: jax.Array      # (Eg2m,) grid index
+    g2m_dst: jax.Array      # (Eg2m,) mesh index
+    m2g_src: jax.Array      # (Em2g,) mesh index
+    m2g_dst: jax.Array      # (Em2g,) grid index
+
+
+def build_topology(cfg: GraphCastConfig, seed: int = 0) -> MeshTopology:
+    """Host-side topology: true icosphere multi-scale mesh edges + nearest-
+    mesh-node grid connections."""
+    rng = np.random.default_rng(seed)
+    verts, _ = icosphere(cfg.mesh_refinement)
+    all_src, all_dst = [], []
+    for r in range(cfg.mesh_refinement + 1):
+        _, e = icosphere(r)
+        # vertices of refinement r are a prefix of refinement R's vertices
+        all_src += [e[:, 0], e[:, 1]]
+        all_dst += [e[:, 1], e[:, 0]]
+    mesh_src = np.concatenate(all_src).astype(np.int32)
+    mesh_dst = np.concatenate(all_dst).astype(np.int32)
+
+    # grid positions on the sphere
+    lat = (np.arange(cfg.grid_lat) / max(cfg.grid_lat - 1, 1) - 0.5) * np.pi
+    lon = np.arange(cfg.grid_lon) / cfg.grid_lon * 2 * np.pi
+    LA, LO = np.meshgrid(lat, lon, indexing="ij")
+    gp = np.stack([np.cos(LA) * np.cos(LO), np.cos(LA) * np.sin(LO),
+                   np.sin(LA)], -1).reshape(-1, 3).astype(np.float32)
+    # nearest mesh nodes per grid node (approx: sample candidates)
+    n_cand = min(len(verts), 4096)
+    cand = rng.choice(len(verts), size=n_cand, replace=False)
+    d = gp @ verts[cand].T                      # cosine similarity
+    k = max(cfg.g2m_per_grid, cfg.m2g_per_grid)
+    nearest = cand[np.argsort(-d, axis=1)[:, :k]]
+    g_idx = np.repeat(np.arange(cfg.n_grid, dtype=np.int32),
+                      cfg.g2m_per_grid)
+    g2m_dst = nearest[:, :cfg.g2m_per_grid].reshape(-1).astype(np.int32)
+    m2g_src = nearest[:, :cfg.m2g_per_grid].reshape(-1).astype(np.int32)
+    m_idx = np.repeat(np.arange(cfg.n_grid, dtype=np.int32),
+                      cfg.m2g_per_grid)
+    return MeshTopology(
+        mesh_src=jnp.asarray(mesh_src), mesh_dst=jnp.asarray(mesh_dst),
+        g2m_src=jnp.asarray(g_idx), g2m_dst=jnp.asarray(g2m_dst),
+        m2g_src=jnp.asarray(m2g_src), m2g_dst=jnp.asarray(m_idx))
+
+
+def init_params(cfg: GraphCastConfig, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 8 + cfg.n_layers * 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge": mlp_init(ks[8 + 2 * i], [3 * d, d, d]),
+            "node": mlp_init(ks[8 + 2 * i + 1], [2 * d, d, d]),
+        })
+    return {
+        "grid_enc": mlp_init(ks[0], [cfg.n_vars, d, d]),
+        "mesh_init": mlp_init(ks[1], [3, d, d]),   # mesh pos features
+        "g2m_edge": mlp_init(ks[2], [2 * d, d, d]),
+        "g2m_node": mlp_init(ks[3], [2 * d, d, d]),
+        "layers": layers,
+        "m2g_edge": mlp_init(ks[4], [2 * d, d, d]),
+        "m2g_node": mlp_init(ks[5], [2 * d, d, d]),
+        "grid_dec": mlp_init(ks[6], [d, d, cfg.n_vars]),
+        "mesh_pos": None,  # set lazily from topology if needed
+    }
+
+
+def _gnet_block(lp, h, e_src, e_dst, e_feat, n_nodes):
+    msg_in = jnp.concatenate([e_feat, h[e_src], h[e_dst]], -1)
+    e_new = e_feat + mlp_apply(lp["edge"], msg_in)
+    agg = jax.ops.segment_sum(e_new, e_dst, num_segments=n_nodes)
+    h_new = h + mlp_apply(lp["node"], jnp.concatenate([h, agg], -1))
+    return layer_norm(h_new), layer_norm(e_new)
+
+
+def forward(cfg: GraphCastConfig, params, grid_feats, topo: MeshTopology,
+            mesh_pos=None):
+    """grid_feats: (n_grid, n_vars) → next-state prediction, same shape."""
+    d = cfg.d_hidden
+    n_grid, n_mesh = cfg.n_grid, cfg.n_mesh
+    hg = mlp_apply(params["grid_enc"], grid_feats)          # (G, d)
+    if mesh_pos is None:
+        mesh_pos = jnp.zeros((n_mesh, 3), grid_feats.dtype)
+    hm = mlp_apply(params["mesh_init"], mesh_pos)           # (M, d)
+
+    # encoder: grid -> mesh
+    e = mlp_apply(params["g2m_edge"],
+                  jnp.concatenate([hg[topo.g2m_src], hm[topo.g2m_dst]], -1))
+    agg = jax.ops.segment_sum(e, topo.g2m_dst, num_segments=n_mesh)
+    hm = layer_norm(hm + mlp_apply(params["g2m_node"],
+                                   jnp.concatenate([hm, agg], -1)))
+
+    # processor: multi-scale mesh GNN
+    em = jnp.zeros((topo.mesh_src.shape[0], d), hm.dtype)
+    block = layer_remat(lambda lp, hm, em: _gnet_block(
+        lp, hm, topo.mesh_src, topo.mesh_dst, em, n_mesh))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+    (hm, em), _ = jax.lax.scan(
+        lambda c, lp: (block(lp, c[0], c[1]), None), (hm, em), stacked)
+
+    # decoder: mesh -> grid
+    e = mlp_apply(params["m2g_edge"],
+                  jnp.concatenate([hm[topo.m2g_src], hg[topo.m2g_dst]], -1))
+    agg = jax.ops.segment_sum(e, topo.m2g_dst, num_segments=n_grid)
+    hg = layer_norm(hg + mlp_apply(params["m2g_node"],
+                                   jnp.concatenate([hg, agg], -1)))
+    return grid_feats + mlp_apply(params["grid_dec"], hg)
+
+
+def loss_fn(cfg: GraphCastConfig, params, grid_feats, target, topo):
+    pred = forward(cfg, params, grid_feats, topo)
+    return jnp.mean((pred - target) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# processor mode: run the 16-layer GraphNet stack directly on an arbitrary
+# input graph (used for the assigned graph-benchmark shapes; the native
+# encoder/decoder path above is exercised by the weather example).
+# ---------------------------------------------------------------------------
+
+def init_processor_params(cfg: GraphCastConfig, key, d_in: int):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 2 + cfg.n_layers * 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge": mlp_init(ks[2 + 2 * i], [3 * d, d, d]),
+            "node": mlp_init(ks[2 + 2 * i + 1], [2 * d, d, d]),
+        })
+    return {"enc": mlp_init(ks[0], [d_in, d, d]),
+            "layers": layers,
+            "dec": mlp_init(ks[1], [d, d, d])}
+
+
+def processor_node_repr(cfg: GraphCastConfig, params, nodes, src, dst,
+                        edge_mask=None):
+    """nodes: (N, d_in) → per-node hidden (N, d_hidden)."""
+    N = nodes.shape[0]
+    h = mlp_apply(params["enc"], nodes)
+    e = jnp.zeros((src.shape[0], cfg.d_hidden), h.dtype)
+    if edge_mask is not None:
+        em = edge_mask[:, None].astype(h.dtype)
+    def one_layer(lp, h, e):
+        msg_in = jnp.concatenate([e, h[src], h[dst]], -1)
+        e_new = e + mlp_apply(lp["edge"], msg_in)
+        if edge_mask is not None:
+            e_new = e_new * em
+        agg = jax.ops.segment_sum(e_new, dst, num_segments=N)
+        h_new = layer_norm(h + mlp_apply(lp["node"],
+                                         jnp.concatenate([h, agg], -1)))
+        return (constrain(h_new.astype(h.dtype)),
+                constrain(layer_norm(e_new).astype(e.dtype)))
+
+    one_layer = layer_remat(one_layer)
+    h, e = constrain(h), constrain(e)
+    # scan over stacked layers: ONE body in HLO -> XLA reuses the gather /
+    # scatter buffers across layers (an unrolled loop keeps every layer's
+    # all-gathered node matrix alive: 300+ GiB on ogb_products)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+
+    def scan_body(carry, lp):
+        h, e = carry
+        return one_layer(lp, h, e), None
+
+    (h, e), _ = jax.lax.scan(scan_body, (h, e), stacked)
+    return mlp_apply(params["dec"], h)

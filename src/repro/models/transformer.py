@@ -1,0 +1,583 @@
+"""Decoder-only transformer family: dense + MoE, GQA, RoPE, SwiGLU,
+local/global alternating attention, logit soft-capping.
+
+Covers the assigned LM architectures: granite-34b (dense, kv=1),
+gemma2-9b (dense, local+global alternating, softcaps), phi3-mini-3.8b
+(dense, MHA-ish GQA kv=32), llama4-scout-17b (MoE 16e top-1),
+grok-1-314b (MoE 8e top-2).
+
+Implementation notes:
+  * layers are STACKED (leading L axis) and run with ``lax.scan`` — one
+    layer gets traced/compiled regardless of depth, which keeps the
+    88-layer dry-run compile tractable.
+  * gemma2's local/global alternation scans over layer *pairs* so the
+    sliding window stays a static kernel parameter.
+  * MoE uses fixed-capacity token-choice routing (Switch/GShard style):
+    position-in-expert via cumsum over one-hot assignments, scatter to
+    (E, C, d) buffers, grouped expert matmuls, weighted combine. Expert
+    weights carry a leading E axis — the expert-parallel shard axis.
+  * params are f32; compute in ``cfg.dtype`` (bf16 by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention import (
+    attention_ref, decode_attention_ref, flash_attention,
+    flash_attention_trainable,
+)
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int | None = None
+    max_seq: int = 4096
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    moe_groups: int = 1              # GShard group-local dispatch (per-mesh)
+    moe_shard_experts: bool = True   # experts divide the model axis
+    # attention flavour
+    sliding_window: int | None = None        # static window on all layers
+    local_global_alternate: bool = False     # gemma2: even local / odd global
+    local_window: int = 4096
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    # remat policy: "nothing" recomputes everything (min memory);
+    # "dots_no_batch" saves matmul outputs — 17% less recompute AND 17%
+    # less collective traffic (backward re-gathers disappear) for ~2x
+    # activation memory (EXPERIMENTS.md §Perf cell A iter 3)
+    remat_policy: str = "nothing"
+    use_flash: bool = False                  # Pallas kernel path (TPU)
+    attn_unroll: bool = False                # unroll attn chunks (roofline)
+    scan_layers: bool = True                 # False: Python loop (roofline)
+    # activation sharding constraint applied at layer boundaries; a tuple of
+    # mesh-axis entries for (batch, seq, d_model), e.g.
+    # (("pod", "data"), None, "model") for megatron-style activation TP or
+    # (("pod", "data"), "model", None) for sequence parallelism. None = off.
+    act_sharding: tuple | None = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def params_count(self) -> int:
+        """Total parameter count N (for 6ND MODEL_FLOPS accounting)."""
+        d, hd, H, Hkv = self.d_model, self.hd, self.n_heads, self.n_kv_heads
+        attn = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+        if self.moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d
+        head = 0 if self.tie_embeddings else d * self.vocab
+        return self.n_layers * per_layer + emb + head + d
+
+    @property
+    def active_params_count(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        if not self.moe:
+            return self.params_count
+        d = self.d_model
+        dense_ffn = 3 * d * self.d_ff
+        inactive = (self.n_experts - self.top_k) * dense_ffn
+        return self.params_count - self.n_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale or (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def init_params(cfg: TransformerConfig, key) -> Params:
+    L, d, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    H, Hkv, ff, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    ks = jax.random.split(key, 16)
+    layers = {
+        "attn_norm": jnp.ones((L, d), jnp.float32),
+        "wq": _dense_init(ks[0], (L, d, H * hd)),
+        "wk": _dense_init(ks[1], (L, d, Hkv * hd)),
+        "wv": _dense_init(ks[2], (L, d, Hkv * hd)),
+        "wo": _dense_init(ks[3], (L, H * hd, d)),
+        "ffn_norm": jnp.ones((L, d), jnp.float32),
+    }
+    if cfg.moe:
+        E = cfg.n_experts
+        layers.update({
+            "router": _dense_init(ks[4], (L, d, E)),
+            "w_gate": _dense_init(ks[5], (L, E, d, ff)),
+            "w_up": _dense_init(ks[6], (L, E, d, ff)),
+            "w_down": _dense_init(ks[7], (L, E, ff, d)),
+        })
+    else:
+        layers.update({
+            "w_gate": _dense_init(ks[5], (L, d, ff)),
+            "w_up": _dense_init(ks[6], (L, d, ff)),
+            "w_down": _dense_init(ks[7], (L, ff, d)),
+        })
+    params = {
+        "embed": _dense_init(ks[8], (V, d), scale=1.0),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[9], (d, V))
+    if cfg.param_dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(cfg.param_dtype), params)
+    return params
+
+
+def param_pspecs(cfg: TransformerConfig, data_axes=("pod", "data"),
+                 model_axis="model", fsdp: bool = True) -> Params:
+    """PartitionSpecs matching init_params' tree: TP over heads/ffn/vocab,
+    experts over the model axis (expert parallelism), and — with ``fsdp`` —
+    ZeRO-3/FSDP sharding of the remaining d_model dimension over the data
+    axes so params + optimizer state divide by the FULL mesh. Without it a
+    34B model's f32 master + Adam state is ~33 GiB/device on a 16x16 mesh —
+    over the 16 GiB v5e HBM; with it the same state is ~1.6 GiB/device.
+    XLA all-gathers the shards at use (standard FSDP semantics)."""
+    m = model_axis
+    d = data_axes if fsdp else None
+    layers = {
+        "attn_norm": P(None, None),
+        "wq": P(None, d, m),
+        "wk": P(None, d, m),
+        "wv": P(None, d, m),
+        "wo": P(None, m, d),
+        "ffn_norm": P(None, None),
+    }
+    if cfg.moe:
+        layers.update({
+            "router": P(None, None, None),
+            "w_gate": P(None, m, d, None),
+            "w_up": P(None, m, d, None),
+            "w_down": P(None, m, None, d),
+        })
+    else:
+        layers.update({
+            "w_gate": P(None, d, m),
+            "w_up": P(None, d, m),
+            "w_down": P(None, m, d),
+        })
+    specs = {
+        # vocab-only sharding: 2-axis sharding of the table makes the
+        # embedding-gradient scatter unpartitionable (GSPMD replicates the
+        # full f32 cotangent — ~15 GiB/device for grok train); the table is
+        # small enough that FSDP on d buys nothing.
+        "embed": P(m, None),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(d, m)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    """f32 only inside the variance reduction; the normalised activation
+    stays in x.dtype. Upcasting x itself makes GSPMD's TP all-gathers move
+    f32 activations — measured 2x the collective bytes of the whole train
+    step on granite-34b (EXPERIMENTS.md §Perf iteration 1)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (B, H, S, hd) -> rotated. positions: (B, S)."""
+    B, H, S, hd = x.shape
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attention(cfg: TransformerConfig, q, k, v, window, positions):
+    if cfg.use_flash:
+        # differentiable flash: Pallas forward + chunked backward on TPU;
+        # chunked end-to-end elsewhere (same O(S·block) memory profile, so
+        # the 512-device dry-run reflects production memory)
+        return flash_attention_trainable(q, k, v, causal=True, window=window,
+                                         softcap=cfg.attn_softcap,
+                                         unroll=cfg.attn_unroll)
+    return attention_ref(q, k, v, causal=True, window=window,
+                         softcap=cfg.attn_softcap)
+
+
+def attention_block(cfg: TransformerConfig, lp, x, positions, window):
+    """lp: single-layer params (no leading L). x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = (h @ lp["wq"].astype(h.dtype)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (h @ lp["wk"].astype(h.dtype)).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = (h @ lp["wv"].astype(h.dtype)).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = _attention(cfg, q, k, v, window, positions)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return x + o @ lp["wo"].astype(o.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jax.nn.silu(x @ w_gate.astype(x.dtype))
+    u = x @ w_up.astype(x.dtype)
+    return (g * u) @ w_down.astype(x.dtype)
+
+
+def moe_block(cfg: TransformerConfig, lp, h):
+    """Fixed-capacity token-choice MoE with GShard-style GROUPED dispatch.
+
+    Tokens are split into ``cfg.moe_groups`` groups (one per data shard on
+    the production mesh, set by ``LMArch.for_mesh``), each with LOCAL
+    capacity C/G. Position-in-expert, scatter and combine-gather are then
+    group-local — without grouping, the capacity axis is global and every
+    device materialises all-expert × all-capacity activation buffers
+    (observed: 20 GiB per FFN tensor for grok-1 prefill on 16×16).
+
+    h: (B, S, d) normalised input. Returns (B, S, d)."""
+    B, S, d = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = cfg.moe_groups if N % max(cfg.moe_groups, 1) == 0 else 1
+    Ng = N // G
+    C = max(int(cfg.capacity_factor * Ng * K / E), 1)
+    xg = h.reshape(G, Ng, d)
+    dp = cfg.act_sharding[0] if cfg.act_sharding is not None else None
+    m = "model" if cfg.moe_shard_experts else None
+    if dp is not None:
+        xg = jax.lax.with_sharding_constraint(xg, P(dp, None, None))
+
+    def dispatch(x):
+        """x: (Ng, d) -> (buf (E, C, d), e_idx, c_idx, keep, top_w)."""
+        logits = (x @ lp["router"].astype(x.dtype)).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(gates, K)             # (Ng, K)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)  # (Ng, K, E)
+        flat = onehot.reshape(Ng * K, E)
+        pos = jnp.cumsum(flat, axis=0) - flat
+        pos_in_e = jnp.sum(pos * flat, axis=-1).reshape(Ng, K)
+        keep = pos_in_e < C
+        e_idx = jnp.where(keep, top_e, 0)
+        c_idx = jnp.where(keep, pos_in_e, 0)
+        contrib = jnp.where(keep[..., None], x[:, None, :], 0.0)
+        buf = jnp.zeros((E, C, d), dtype=x.dtype)
+        buf = buf.at[e_idx, c_idx].add(contrib.astype(x.dtype))
+        return buf, e_idx, c_idx, keep, top_w
+
+    buf, e_idx, c_idx, keep, top_w = jax.vmap(dispatch)(xg)
+    if dp is not None:
+        buf = jax.lax.with_sharding_constraint(buf, P(dp, m, None, None))
+    # expert FFN over all groups: (G, E, C, d) x (E, d, ff)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                               lp["w_gate"].astype(h.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", buf, lp["w_up"].astype(h.dtype))
+    y = jnp.einsum("gecf,efd->gecd", g * u, lp["w_down"].astype(h.dtype))
+    if dp is not None:
+        y = jax.lax.with_sharding_constraint(y, P(dp, m, None, None))
+
+    def combine(y_g, e, c, k, w):
+        out_tok = y_g[e, c]                                # (Ng, K, d)
+        out_tok = jnp.where(k[..., None], out_tok, 0.0)
+        return jnp.sum(out_tok * w[..., None].astype(y_g.dtype), axis=1)
+
+    out = jax.vmap(combine)(y, e_idx, c_idx, keep, top_w)
+    return out.reshape(B, S, d)
+
+
+def ffn_block(cfg: TransformerConfig, lp, x):
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        return x + moe_block(cfg, lp, h)
+    return x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _constrain(cfg: TransformerConfig, x):
+    if cfg.act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, P(*cfg.act_sharding))
+    return x
+
+
+def layer_fn(cfg: TransformerConfig, lp, x, positions, window):
+    x = attention_block(cfg, lp, x, positions, window)
+    x = ffn_block(cfg, lp, x)
+    return _constrain(cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: TransformerConfig, params: Params, tokens,
+                   positions=None):
+    """tokens: (B, S) int32 -> final-norm hidden states (B, S, d)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(layer_params, x):
+        if cfg.local_global_alternate:
+            lp0 = jax.tree.map(lambda a: a[0], layer_params)
+            lp1 = jax.tree.map(lambda a: a[1], layer_params)
+            x = layer_fn(cfg, lp0, x, positions, cfg.local_window)
+            x = layer_fn(cfg, lp1, x, positions, None)
+        else:
+            x = layer_fn(cfg, layer_params, x, positions, cfg.sliding_window)
+        return x
+
+    if cfg.remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_saveable,
+            "dots_no_batch":
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+
+    layers = params["layers"]
+    if cfg.local_global_alternate:
+        assert cfg.n_layers % 2 == 0
+        layers = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // 2, 2) + a.shape[1:]), layers)
+
+    if cfg.scan_layers:
+        def scan_body(x, lp):
+            return body(lp, x), None
+
+        x, _ = jax.lax.scan(scan_body, x, layers)
+    else:
+        # unrolled layers: every layer appears in the HLO, so
+        # HloCostAnalysis counts it (the roofline depth variants use this;
+        # scan bodies are counted once regardless of length)
+        n_steps = jax.tree.leaves(layers)[0].shape[0]
+        for i in range(n_steps):
+            lp = jax.tree.map(lambda a: a[i], layers)
+            x = body(lp, x)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward_logits_from_hidden(cfg: TransformerConfig, params: Params, x):
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def forward(cfg: TransformerConfig, params: Params, tokens,
+            positions=None):
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    x = forward_hidden(cfg, params, tokens, positions)
+    return forward_logits_from_hidden(cfg, params, x)
+
+
+def loss_fn(cfg: TransformerConfig, params: Params, tokens, targets,
+            chunk: int = 512):
+    """Cross-entropy with a vocab-sharding-friendly formulation.
+
+    Two memory hazards in the naive version, both hit at 34B/256-chip scale:
+      * ``take_along_axis`` along the vocab axis forces XLA to all-gather
+        the (B, S, V) f32 logits per device (12.9 GiB for granite-34b's
+        train_4k cell) — replaced by a one-hot masked sum, which reduces
+        locally and all-reduces a scalar per token;
+      * even the sharded logits of the full sequence are large — the head
+        matmul + CE is chunked over S with recompute-on-backward, the same
+        treatment as chunked attention.
+    """
+    x = forward_hidden(cfg, params, tokens)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    Sp = ((S + chunk - 1) // chunk) * chunk
+    dp = None
+    if cfg.act_sharding is not None:
+        dp = cfg.act_sharding[0]
+
+    def chunk_loss(i):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        logits = (xc @ head.astype(xc.dtype)).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        if cfg.act_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(dp, None, "model"))
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum(logz - tgt)
+
+    if Sp == S and S // chunk > 1:
+        if cfg.attn_unroll:  # unroll inner maps for HLO flop accounting
+            total = sum(chunk_loss(jnp.int32(i)) for i in range(S // chunk))
+        else:
+            total = jnp.sum(jax.lax.map(jax.checkpoint(chunk_loss),
+                                        jnp.arange(S // chunk)))
+    else:
+        total = chunk_loss(jnp.int32(0)) if S <= chunk else None
+        if total is None:  # ragged: fall back to one shot over full S
+            logits = forward_logits_from_hidden(cfg, params, x)
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(targets, logits.shape[-1],
+                                    dtype=logits.dtype)
+            tgt = jnp.sum(logits * onehot, axis=-1)
+            total = jnp.sum(logz - tgt)
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve path)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, seq: int):
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    shape = (L, batch, Hkv, seq, hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def kv_cache_pspecs(cfg: TransformerConfig, data_axes=("pod", "data"),
+                    model_axis="model"):
+    return {"k": P(None, data_axes, model_axis, None, None),
+            "v": P(None, data_axes, model_axis, None, None)}
+
+
+def decode_step(cfg: TransformerConfig, params: Params, token, cache,
+                cache_len, cache_pspec=None):
+    """One-token decode: token (B,) int32, cache from init_kv_cache,
+    cache_len scalar int32 (current fill). Returns (logits (B, V), cache').
+
+    ``cache_pspec``: PartitionSpec of one LAYER's cache slice (B, Hkv, S,
+    hd). Constraining the updated slice inside the layer scan keeps GSPMD
+    from resharding/replicating the cache per layer (the 'involuntary full
+    rematerialization' warnings on the decode cells)."""
+    B = token.shape[0]
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def _pin(x):
+        if cache_pspec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, cache_pspec)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(cache_len, (B, 1)).astype(jnp.int32)
+
+    def one_layer(carry, inp):
+        x, = carry
+        lp, k_cache, v_cache, layer_i = inp
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = (h @ lp["wq"].astype(h.dtype)).reshape(B, 1, Hq, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"].astype(h.dtype)).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"].astype(h.dtype)).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # masked elementwise cache update instead of dynamic_update_slice:
+        # a traced-index update along a SHARDED seq axis forces GSPMD to
+        # all-gather the whole cache (observed: 13-25 GiB temp per decode
+        # step); the mask form stays elementwise and shards perfectly.
+        # Bandwidth is O(S) like the attention read itself.
+        upd_mask = (jnp.arange(k_cache.shape[2]) == cache_len)[None, None,
+                                                               :, None]
+        k_cache = _pin(jnp.where(upd_mask, k.astype(k_cache.dtype),
+                                 _pin(k_cache)))
+        v_cache = _pin(jnp.where(upd_mask, v.astype(v_cache.dtype),
+                                 _pin(v_cache)))
+        if cfg.local_global_alternate:
+            window = jnp.where(layer_i % 2 == 0, cfg.local_window,
+                               jnp.int32(2**30))
+            o = _decode_attn_dyn_window(cfg, q, k_cache, v_cache,
+                                        cache_len + 1, window)
+        else:
+            o = decode_attention_ref(q, k_cache, v_cache, cache_len + 1,
+                                     softcap=cfg.attn_softcap,
+                                     window=cfg.sliding_window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, 1, Hq * hd)
+        x = x + o @ lp["wo"].astype(o.dtype)
+        x = ffn_block(cfg, lp, x)
+        return (x,), (k_cache, v_cache)
+
+    L = cfg.n_layers
+    layer_ids = jnp.arange(L, dtype=jnp.int32)
+    if cfg.scan_layers:
+        (x,), (k_new, v_new) = jax.lax.scan(
+            one_layer, (x,),
+            (params["layers"], cache["k"], cache["v"], layer_ids))
+    else:  # unrolled for HLO flop accounting (see forward_hidden)
+        ks, vs = [], []
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (x,), (k_i, v_i) = one_layer(
+                (x,), (lp, cache["k"][i], cache["v"][i], layer_ids[i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, {"k": k_new, "v": v_new}
+
+
+def _decode_attn_dyn_window(cfg, q, k_cache, v_cache, cache_len, window):
+    """decode attention with a traced window size (gemma2 scan over layers).
+    Grouped-GQA form — see decode_attention_ref for the sharding rationale."""
+    B, Hq, Q, D = q.shape
+    Hkv = k_cache.shape[1]
+    rep = Hq // Hkv
+    qg = q.reshape(B, Hkv, rep, Q, D)
+    scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bkrqd,bksd->bkrqs", qg,
+                        k_cache).astype(jnp.float32) * scale
+    if cfg.attn_softcap is not None:
+        logits = cfg.attn_softcap * jnp.tanh(logits / cfg.attn_softcap)
+    pos = jnp.arange(k_cache.shape[2])[None, None, None, None, :]
+    mask = (pos < cache_len) & (pos > cache_len - 1 - window)
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkrqs,bksd->bkrqd", p.astype(q.dtype), v_cache)
+    return out.reshape(B, Hq, Q, D)

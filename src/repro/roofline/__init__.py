@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, collective_bytes, dominant_term, roofline_terms,
+)

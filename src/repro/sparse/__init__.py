@@ -1,0 +1,28 @@
+"""Sparse substrate: segment ops, COO utilities, EmbeddingBag, SpMM/SDDMM.
+
+JAX has no native EmbeddingBag or CSR/CSC sparse support (BCOO only), so
+message passing / embedding lookup are built from ``jnp.take`` +
+``jax.ops.segment_sum`` over edge/offset indices. This package IS part of the
+system: it backs both the RAMA multicut core (edge contraction = sorted-key
+segment reduction) and the GNN / recsys model families.
+"""
+from repro.sparse.segment_ops import (
+    segment_sum,
+    segment_max,
+    segment_min,
+    segment_mean,
+    segment_softmax,
+    segment_argmax,
+    coo_dedupe_sum,
+    canonical_edge_key,
+)
+from repro.sparse.embedding_bag import embedding_bag, EmbeddingBagParams
+from repro.sparse.spmm import spmm, sddmm, gather_scatter_mp
+from repro.sparse.sampler import NeighborSampler, CSRGraph
+
+__all__ = [
+    "segment_sum", "segment_max", "segment_min", "segment_mean",
+    "segment_softmax", "segment_argmax", "coo_dedupe_sum",
+    "canonical_edge_key", "embedding_bag", "EmbeddingBagParams",
+    "spmm", "sddmm", "gather_scatter_mp", "NeighborSampler", "CSRGraph",
+]

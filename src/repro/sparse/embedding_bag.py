@@ -1,0 +1,59 @@
+"""EmbeddingBag built from ``jnp.take`` + ``jax.ops.segment_sum``.
+
+JAX has no native ``nn.EmbeddingBag``; recsys models (wide&deep) and any
+multi-hot categorical feature need gather + segment-reduce over a ragged
+(bag-offset) layout. We use the fixed-shape variant: each bag has up to
+``max_indices_per_bag`` slots with a validity mask (TPU-friendly; the ragged
+offsets layout is converted by the host pipeline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EmbeddingBagParams(NamedTuple):
+    table: jax.Array  # (vocab, dim)
+
+
+def init_embedding_bag(key, vocab: int, dim: int, dtype=jnp.float32) -> EmbeddingBagParams:
+    scale = 1.0 / jnp.sqrt(dim)
+    return EmbeddingBagParams(table=jax.random.uniform(
+        key, (vocab, dim), dtype=dtype, minval=-scale, maxval=scale))
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array, mask: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """Lookup-and-reduce.
+
+    table:   (vocab, dim)
+    indices: (..., bag) int32 — indices into the table, padded
+    mask:    (..., bag) bool — validity of each slot (None = all valid)
+    returns: (..., dim)
+    """
+    emb = jnp.take(table, indices, axis=0)          # (..., bag, dim)
+    if mask is not None:
+        emb = emb * mask[..., None].astype(emb.dtype)
+    if mode == "sum":
+        return emb.sum(axis=-2)
+    if mode == "mean":
+        if mask is None:
+            return emb.mean(axis=-2)
+        cnt = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(emb.dtype)
+        return emb.sum(axis=-2) / cnt
+    if mode == "max":
+        if mask is not None:
+            emb = jnp.where(mask[..., None], emb, -jnp.inf)
+        out = emb.max(axis=-2)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def embedding_bag_ragged(table: jax.Array, flat_indices: jax.Array,
+                         bag_ids: jax.Array, num_bags: int) -> jax.Array:
+    """Ragged variant: flat index list + per-index bag id (offsets layout),
+    reduced with ``segment_sum``. Matches ``torch.nn.EmbeddingBag(mode=sum)``."""
+    emb = jnp.take(table, flat_indices, axis=0)     # (nnz, dim)
+    return jax.ops.segment_sum(emb, bag_ids, num_segments=num_bags)

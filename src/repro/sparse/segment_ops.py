@@ -1,0 +1,119 @@
+"""Segment reductions + COO utilities.
+
+All ops are jit-safe: static output sizes, masked/padded semantics. Invalid
+entries are routed to a dead segment or pre-masked to the identity element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+
+def segment_sum(values, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def segment_max(values, segment_ids, num_segments: int):
+    return jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+
+
+def segment_min(values, segment_ids, num_segments: int):
+    return jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(values, segment_ids, num_segments: int):
+    ones = jnp.ones(values.shape[: segment_ids.ndim], dtype=values.dtype)
+    tot = segment_sum(values, segment_ids, num_segments)
+    cnt = segment_sum(ones, segment_ids, num_segments)
+    return tot / jnp.maximum(cnt, 1).reshape(cnt.shape + (1,) * (tot.ndim - cnt.ndim))
+
+
+def segment_softmax(logits, segment_ids, num_segments: int, mask=None):
+    """Numerically-stable softmax within each segment (e.g. GAT edge scores)."""
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    if mask is not None:
+        expd = jnp.where(mask, expd, 0.0)
+    denom = segment_sum(expd, segment_ids, num_segments)
+    return expd / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+def segment_argmax(values, segment_ids, num_segments: int, mask=None):
+    """Index (into ``values``) of the max element of each segment.
+
+    Returns (argmax_idx, max_val); empty segments get idx = -1, val = -inf.
+    """
+    if mask is not None:
+        values = jnp.where(mask, values, NEG_INF)
+    seg_max = segment_max(values, segment_ids, num_segments)
+    n = values.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # positions attaining the max; tie-break toward the smallest index
+    is_max = values >= seg_max[segment_ids]
+    cand = jnp.where(is_max, idx, n)
+    arg = segment_min(cand, segment_ids, num_segments)
+    arg = jnp.where(arg >= n, -1, arg).astype(jnp.int32)
+    return arg, seg_max
+
+
+def canonical_edge_key(u, v, num_nodes: int):
+    """Order-independent dense key for an undirected edge. Only safe when
+    ``num_nodes**2`` fits the default int width; large-N paths use the
+    lexicographic machinery in :func:`coo_dedupe_sum` instead."""
+    lo = jnp.minimum(u, v)
+    hi = jnp.maximum(u, v)
+    return lo * num_nodes + hi
+
+
+def coo_dedupe_sum(u, v, w, valid, num_nodes: int):
+    """Merge parallel edges of a padded COO list, summing weights.
+
+    The Thrust ``sort_by_key`` + ``reduce_by_key`` of RAMA Alg. 4, expressed
+    with static shapes: lexicographically sort by canonical (lo, hi) endpoint
+    pairs, prefix-sum "is-new-key" flags to assign each unique edge a dense
+    slot, scatter-add weights. Avoids 64-bit keys so it is safe for any N.
+
+    Returns (u', v', w', valid', n_unique) with the same padded length; slots
+    beyond n_unique are invalid (u=v=0, w=0). Self loops (u==v) and invalid
+    entries are dropped.
+    """
+    E = u.shape[0]
+    drop = jnp.logical_or(~valid, u == v)
+    lo = jnp.minimum(u, v).astype(jnp.int32)
+    hi = jnp.maximum(u, v).astype(jnp.int32)
+    # Dead rows get sentinel endpoints that sort after every live row.
+    lo = jnp.where(drop, num_nodes, lo)
+    hi = jnp.where(drop, num_nodes, hi)
+    order = jnp.lexsort((hi, lo))
+    lo_s, hi_s = lo[order], hi[order]
+    w_s = jnp.where(drop, 0.0, w)[order]
+    live = lo_s < num_nodes
+
+    is_new = jnp.concatenate([
+        jnp.ones((1,), dtype=jnp.int32),
+        jnp.logical_or(lo_s[1:] != lo_s[:-1], hi_s[1:] != hi_s[:-1]).astype(jnp.int32),
+    ])
+    is_new = jnp.where(live, is_new, 0)
+    slot = jnp.cumsum(is_new) - 1                      # dense slot per row
+    n_unique = jnp.sum(is_new)
+    slot = jnp.where(live, slot, E - 1)                # dead rows -> junk slot
+
+    w_acc = jax.ops.segment_sum(w_s, slot, num_segments=E)
+    # first row of each segment carries the endpoints
+    first = jnp.where(is_new == 1, jnp.arange(E), E)
+    first_of_slot = jax.ops.segment_min(first, slot, num_segments=E)
+    first_of_slot = jnp.clip(first_of_slot, 0, E - 1)
+    u_out = lo_s[first_of_slot]
+    v_out = hi_s[first_of_slot]
+    valid_out = jnp.arange(E) < n_unique
+    u_out = jnp.where(valid_out, u_out, 0)
+    v_out = jnp.where(valid_out, v_out, 0)
+    w_out = jnp.where(valid_out, w_acc, 0.0)
+    return u_out, v_out, w_out, valid_out, n_unique

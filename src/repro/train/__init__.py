@@ -1,0 +1,19 @@
+from repro.train.optimizer import (
+    OptimizerConfig, OptState, init_opt_state, apply_update, schedule_lr,
+    clip_by_global_norm,
+)
+from repro.train.checkpoint import (
+    save_checkpoint, save_checkpoint_async, load_checkpoint, latest_step,
+)
+from repro.train.compression import (
+    quantize_leaf, dequantize_leaf, fake_quantize_ef, init_error_buffers,
+)
+from repro.train.loop import TrainConfig, make_train_step, train
+
+__all__ = [
+    "OptimizerConfig", "OptState", "init_opt_state", "apply_update",
+    "schedule_lr", "clip_by_global_norm", "save_checkpoint",
+    "save_checkpoint_async", "load_checkpoint", "latest_step",
+    "quantize_leaf", "dequantize_leaf", "fake_quantize_ef",
+    "init_error_buffers", "TrainConfig", "make_train_step", "train",
+]

@@ -1,0 +1,120 @@
+"""Optimizers in pure JAX (no optax dependency): AdamW + SGD-momentum,
+cosine/linear schedules, global-norm clipping, gradient accumulation.
+
+Optimizer state is a pytree shaped like the params (ZeRO-1-style sharding
+falls out of giving the state the same PartitionSpecs as the params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"   # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_opt_state(params, state_dtype=None) -> OptState:
+    def z(p):
+        return jnp.zeros(p.shape, state_dtype or p.dtype)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(z, params),
+                    nu=jax.tree.map(z, params))
+
+
+def schedule_lr(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    else:  # cosine
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * decay
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale grads so the global norm is ≤ max_norm; max_norm ≤ 0 disables
+    clipping (the norm is still computed for metrics)."""
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    if max_norm <= 0:
+        return grads, gnorm
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: OptState):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.betas
+    # .astype preserves each leaf's storage dtype (bf16 optimizer state for
+    # the very large MoE configs; see DESIGN.md memory budget notes)
+    mu = jax.tree.map(lambda m, g: (b1 * m + (1 - b1) * g).astype(m.dtype),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v + (1 - b2) * jnp.square(g)).astype(v.dtype),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        # reduced-precision state (grok-1 posture) also updates in that
+        # precision: f32 temporaries of 314B-param tensors are ~1.5 GiB
+        # apiece on the unfused path and dominate the step's temp memory
+        ct = jnp.float32 if m.dtype == jnp.float32 else m.dtype
+        mhat = m.astype(ct) / bc1.astype(ct)
+        vhat = v.astype(ct) / bc2.astype(ct)
+        step_ = mhat / (jnp.sqrt(vhat) + jnp.asarray(cfg.eps, ct))
+        return (p - lr.astype(ct) * (step_ + jnp.asarray(cfg.weight_decay,
+                                                         ct) * p.astype(ct))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def sgd_update(cfg: OptimizerConfig, params, grads, state: OptState):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    mu = jax.tree.map(lambda m, g: 0.9 * m + g, state.mu, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+    return new_params, OptState(step=step, mu=mu, nu=state.nu), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def apply_update(cfg: OptimizerConfig, params, grads, state: OptState):
+    if cfg.kind == "adamw":
+        return adamw_update(cfg, params, grads, state)
+    if cfg.kind == "sgd":
+        return sgd_update(cfg, params, grads, state)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    bec, brute_force, gaec, gef, greedy_join_local_search, icp, objective,
+)
+from repro.core.graph import make_instance, random_instance
+
+
+def test_brute_force_triangle(triangle_instance):
+    opt, lab = brute_force(triangle_instance)
+    assert opt == pytest.approx(0.0)
+    lab = lab[:3]
+    assert (lab == lab[0]).all()
+
+
+@pytest.mark.parametrize("algo", [gaec, bec, gef])
+def test_heuristics_feasible_and_above_opt(algo, tiny_instances):
+    inst = tiny_instances
+    opt, _ = brute_force(inst)
+    lab = algo(inst)
+    assert lab.shape[0] == inst.num_nodes
+    assert objective(inst, lab) >= opt - 1e-6
+
+
+def test_gaec_optimal_on_easy():
+    """Star of attractive edges: GAEC must join everything."""
+    inst = make_instance([0, 0, 0], [1, 2, 3], [1.0, 1.0, 1.0], 4,
+                         pad_edges=8)
+    lab = gaec(inst)
+    assert (lab[:4] == lab[0]).all()
+
+
+def test_gef_respects_forbidden():
+    """Strong repulsive edge forces a cut even against weak attraction chain."""
+    # 0 -(+0.1)- 1,  0 -(-10)- 1 aggregated would be negative; instead:
+    # 0 -(+0.1)- 1 -(+0.1)- 2 with 0 -(-10)- 2: GEF fixes 0|2 first.
+    inst = make_instance([0, 1, 0], [1, 2, 2], [0.1, 0.1, -10.0], 3,
+                         pad_edges=8)
+    lab = gef(inst)
+    assert lab[0] != lab[2]
+
+
+def test_icp_lb_below_opt(tiny_instances):
+    inst = tiny_instances
+    opt, _ = brute_force(inst)
+    assert icp(inst) <= opt + 1e-6
+
+
+def test_icp_trivial_lb_bound():
+    """ICP's LB is at least the sum of negative costs (packing only
+    improves the trivial bound)."""
+    inst = random_instance(15, 0.5, seed=3, pad_edges=128, pad_nodes=16)
+    from repro.core.graph import to_host_edges
+    _, _, c = to_host_edges(inst)
+    trivial = float(c[c < 0].sum())
+    assert icp(inst) >= trivial - 1e-6
+
+
+def test_local_search_never_degrades(tiny_instances):
+    inst = tiny_instances
+    lab0 = gaec(inst)
+    lab1 = greedy_join_local_search(inst, lab0)
+    assert objective(inst, lab1) <= objective(inst, lab0) + 1e-6

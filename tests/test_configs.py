@@ -1,0 +1,120 @@
+"""Registry completeness: every assigned architecture is selectable with the
+exact published configuration, and every (arch × shape) cell is defined."""
+import jax.numpy as jnp
+import pytest
+
+import repro.configs  # noqa: F401
+from repro.configs.base import REGISTRY, all_arch_ids, get_arch
+
+ASSIGNED = {
+    "granite-34b", "gemma2-9b", "phi3-mini-3.8b", "llama4-scout-17b-a16e",
+    "grok-1-314b", "dimenet", "egnn", "mace", "graphcast", "wide-deep",
+}
+
+
+def test_all_assigned_archs_registered():
+    missing = ASSIGNED - set(all_arch_ids())
+    assert not missing, f"missing archs: {missing}"
+
+
+def test_rama_arch_registered():
+    assert "rama-multicut" in all_arch_ids()
+
+
+def test_40_cells_defined():
+    cells = sum(len(get_arch(a).shapes) for a in ASSIGNED)
+    assert cells == 40
+
+
+@pytest.mark.parametrize("aid", sorted(ASSIGNED))
+def test_abstract_inputs_no_allocation(aid):
+    """abstract_inputs must return ShapeDtypeStructs (never real arrays)."""
+    import jax
+    arch = get_arch(aid)
+    for shape in arch.shapes.values():
+        tree = arch.abstract_inputs(shape)
+        for leaf in jax.tree.leaves(tree):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (aid, shape.name)
+
+
+def test_granite_exact_config():
+    cfg = get_arch("granite-34b").cfg
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (88, 6144, 48, 1, 24576, 49152)
+
+
+def test_gemma2_exact_config():
+    cfg = get_arch("gemma2-9b").cfg
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (42, 3584, 16, 8, 14336, 256000)
+    assert cfg.local_global_alternate and cfg.attn_softcap is not None
+
+
+def test_phi3_exact_config():
+    cfg = get_arch("phi3-mini-3.8b").cfg
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (32, 3072, 32, 32, 8192, 32064)
+
+
+def test_llama4_exact_config():
+    cfg = get_arch("llama4-scout-17b-a16e").cfg
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (48, 5120, 40, 8, 8192, 202048)
+    assert cfg.moe and cfg.n_experts == 16 and cfg.top_k == 1
+
+
+def test_grok_exact_config():
+    cfg = get_arch("grok-1-314b").cfg
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (64, 6144, 48, 8, 32768, 131072)
+    assert cfg.moe and cfg.n_experts == 8 and cfg.top_k == 2
+
+
+def test_gnn_exact_configs():
+    dn = get_arch("dimenet").cfg
+    assert (dn.n_blocks, dn.d_hidden, dn.n_bilinear, dn.n_spherical,
+            dn.n_radial) == (6, 128, 8, 7, 6)
+    egc = get_arch("egnn").cfg
+    assert (egc.n_layers, egc.d_hidden) == (4, 64)
+    mcc = get_arch("mace").cfg
+    assert (mcc.n_layers, mcc.d_hidden, mcc.l_max, mcc.correlation,
+            mcc.n_rbf) == (2, 128, 2, 3, 8)
+    gcc = get_arch("graphcast").cfg
+    assert (gcc.n_layers, gcc.d_hidden, gcc.mesh_refinement,
+            gcc.n_vars) == (16, 512, 6, 227)
+
+
+def test_widedeep_exact_config():
+    cfg = get_arch("wide-deep").cfg
+    assert (cfg.n_sparse, cfg.embed_dim, cfg.mlp_dims) == \
+        (40, 32, (1024, 512, 256))
+
+
+def test_lm_shape_cells():
+    shapes = get_arch("granite-34b").shapes
+    assert shapes["train_4k"].dims == dict(seq_len=4096, global_batch=256)
+    assert shapes["prefill_32k"].dims == dict(seq_len=32768, global_batch=32)
+    assert shapes["decode_32k"].dims == dict(seq_len=32768, global_batch=128)
+    assert shapes["long_500k"].dims == dict(seq_len=524288, global_batch=1)
+    assert shapes["decode_32k"].kind == "decode"   # lowers serve_step
+
+
+def test_recsys_shape_cells():
+    shapes = get_arch("wide-deep").shapes
+    assert shapes["train_batch"].dims["batch"] == 65536
+    assert shapes["serve_p99"].dims["batch"] == 512
+    assert shapes["serve_bulk"].dims["batch"] == 262144
+    assert shapes["retrieval_cand"].dims["n_candidates"] == 1_000_000
+
+
+def test_grok_params_order_of_magnitude():
+    """grok-1 is ~314B total params; our analytic count must land there."""
+    cfg = get_arch("grok-1-314b").cfg
+    assert 2.5e11 < cfg.params_count < 3.9e11
+
+
+def test_model_flops_positive():
+    for aid in sorted(ASSIGNED):
+        arch = get_arch(aid)
+        for shape in arch.shapes.values():
+            assert arch.model_flops(shape) > 0, (aid, shape.name)

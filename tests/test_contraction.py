@@ -1,0 +1,138 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.contraction import (
+    adjacency_dense, choose_contraction_set, connected_components, contract,
+    contract_dense, maximum_matching, spanning_forest_contraction,
+)
+from repro.core.graph import make_instance, random_instance, to_host_edges
+
+
+def _nx_components(u, v, n):
+    import networkx as nx
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from(zip(u.tolist(), v.tolist()))
+    lab = np.empty(n, dtype=np.int64)
+    for comp in nx.connected_components(g):
+        m = min(comp)
+        for x in comp:
+            lab[x] = m
+    return lab
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_connected_components_vs_networkx(seed):
+    rng = np.random.default_rng(seed)
+    n, e = 40, 40
+    u = rng.integers(0, n, e).astype(np.int32)
+    v = rng.integers(0, n, e).astype(np.int32)
+    mask = rng.random(e) < 0.7
+    labels = connected_components(jnp.asarray(u), jnp.asarray(v),
+                                  jnp.asarray(mask), n)
+    want = _nx_components(u[mask], v[mask], n)
+    np.testing.assert_array_equal(np.asarray(labels), want)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_matching_is_matching(seed):
+    """Handshaking output must be a matching on attractive edges."""
+    inst = random_instance(30, 0.3, seed=seed, pad_edges=256, pad_nodes=32)
+    S = maximum_matching(inst)
+    S = np.asarray(S)
+    u, v = np.asarray(inst.u), np.asarray(inst.v)
+    c = np.asarray(inst.cost)
+    assert (c[S] > 0).all(), "matched a non-attractive edge"
+    deg = np.zeros(inst.num_nodes)
+    np.add.at(deg, u[S], 1)
+    np.add.at(deg, v[S], 1)
+    assert deg.max() <= 1, "node matched twice"
+
+
+def test_matching_takes_global_max():
+    """The globally heaviest attractive edge is always mutual-best."""
+    inst = make_instance([0, 1, 2], [1, 2, 3], [1.0, 5.0, 2.0], 4,
+                         pad_edges=8, pad_nodes=4)
+    S = np.asarray(maximum_matching(inst))
+    u, v, c = to_host_edges(inst)
+    heavy = np.where((np.asarray(inst.cost) == 5.0))[0][0]
+    assert S[heavy]
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_forest_no_internal_repulsive(seed):
+    """Component freezing: contraction must never merge the endpoints of a
+    repulsive edge (the invariant the paper's path-repair maintains)."""
+    inst = random_instance(30, 0.4, seed=seed, pad_edges=256, pad_nodes=32)
+    S = spanning_forest_contraction(inst)
+    labels = connected_components(inst.u, inst.v, S & inst.edge_valid,
+                                  inst.num_nodes)
+    labels = np.asarray(labels)
+    u, v, c = np.asarray(inst.u), np.asarray(inst.v), np.asarray(inst.cost)
+    ev = np.asarray(inst.edge_valid)
+    neg = ev & (c < 0)
+    assert not (labels[u[neg]] == labels[v[neg]]).any()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_contract_matches_dense_lemma4(seed):
+    """Sparse contraction == dense KᵀAK − diag (Lemma 4a) on the live part."""
+    inst = random_instance(20, 0.4, seed=seed, pad_edges=256, pad_nodes=20)
+    S = maximum_matching(inst)
+    res = contract(inst, S)
+    n_new = int(res.n_new)
+    A = adjacency_dense(inst)
+    Ad = contract_dense(A, res.mapping, n_new)
+    # rebuild dense adjacency from contracted sparse instance
+    out = res.instance
+    B = np.zeros((n_new, n_new), np.float32)
+    u, v, c = np.asarray(out.u), np.asarray(out.v), np.asarray(out.cost)
+    ev = np.asarray(out.edge_valid)
+    nv_count = int(np.asarray(out.node_valid).sum())
+    assert nv_count == n_new
+    for a, b, w in zip(u[ev], v[ev], c[ev]):
+        B[a, b] += w
+        B[b, a] += w
+    np.testing.assert_allclose(B, np.asarray(Ad)[:n_new, :n_new], atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_contract_objective_consistency(seed):
+    """Objective of any labeling of the contracted graph + self-loop gain ==
+    objective of the lifted labeling on the original graph (Lemma 1b/4b)."""
+    inst = random_instance(20, 0.4, seed=seed, pad_edges=256, pad_nodes=20)
+    S = choose_contraction_set(inst)
+    res = contract(inst, S)
+    n_new = int(res.n_new)
+    rng = np.random.default_rng(seed)
+    lab_new = jnp.asarray(rng.integers(0, 3, res.instance.num_nodes),
+                          jnp.int32)
+    lifted = lab_new[res.mapping]
+    obj_orig = float(inst.objective(lifted))
+    obj_new = float(res.instance.objective(lab_new))
+    # cost inside merged clusters never appears in the contracted objective
+    assert obj_orig == pytest.approx(obj_new, abs=1e-3)
+
+
+def test_contract_gain_positive_for_matching():
+    """Matching only contracts attractive edges, so the absorbed self-loop
+    mass (Lemma 4b) must be positive — the join decreases the objective."""
+    inst = random_instance(30, 0.4, seed=7, pad_edges=256, pad_nodes=32)
+    S = maximum_matching(inst)
+    if not bool(S.any()):
+        pytest.skip("no matching found")
+    res = contract(inst, S)
+    assert float(res.self_loop_gain) > 0
+
+
+def test_choose_contraction_never_empty_while_positive():
+    """Regression: forest fallback returning fewer edges than matching must
+    not lose the matching (premature solver termination)."""
+    inst = random_instance(12, 0.5, seed=11, pad_edges=64, pad_nodes=16)
+    c = np.asarray(inst.cost)
+    if not (c[np.asarray(inst.edge_valid)] > 0).any():
+        pytest.skip("instance has no positive edges")
+    S = choose_contraction_set(inst)
+    assert int(jnp.sum(S)) >= 1

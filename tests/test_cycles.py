@@ -1,0 +1,92 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cycles import (
+    build_dense, select_repulsive_edges, separate, separate_triangles,
+)
+from repro.core.graph import make_instance, random_instance
+
+
+def test_build_dense_roundtrip():
+    inst = make_instance([0, 1, 0], [1, 2, 3], [1.0, -2.0, 0.5], 4,
+                         pad_edges=16, pad_nodes=4)
+    dg = build_dense(inst)
+    A = np.asarray(dg.A)
+    assert A[0, 1] == 1.0 and A[1, 0] == 1.0
+    assert A[1, 2] == -2.0
+    assert A[0, 3] == 0.5
+    eidx = np.asarray(dg.eidx)
+    assert eidx[0, 1] == 0 and eidx[1, 2] == 1 and eidx[0, 3] == 2
+    assert eidx[0, 0] == -1  # repaired cell
+    assert (np.asarray(dg.Apos) == (A > 0)).all()
+
+
+def test_select_repulsive_edges_order():
+    inst = make_instance([0, 1, 2, 3], [1, 2, 3, 4],
+                         [-3.0, 2.0, -1.0, -5.0], 5, pad_edges=8)
+    idx, ok = select_repulsive_edges(inst, max_neg=8)
+    idx, ok = np.asarray(idx), np.asarray(ok)
+    got = idx[ok]
+    # most repulsive first: edge 3 (−5), edge 0 (−3), edge 2 (−1)
+    np.testing.assert_array_equal(got, [3, 0, 2])
+
+
+def test_triangles_are_conflicted():
+    """Every separated 3-cycle must consist of the repulsive base edge plus
+    two attractive edges sharing a common neighbour (Def. 5)."""
+    inst = random_instance(15, 0.5, seed=4, pad_edges=128, pad_nodes=16)
+    dg = build_dense(inst)
+    tri = separate_triangles(inst, dg, max_neg=64, max_tri_per_edge=4)
+    edges = np.asarray(tri.edges)[np.asarray(tri.valid)]
+    cost = np.asarray(inst.cost)
+    u, v = np.asarray(inst.u), np.asarray(inst.v)
+    for (e0, e1, e2) in edges:
+        assert cost[e0] < 0, "base edge not repulsive"
+        assert cost[e1] > 0 and cost[e2] > 0, "side edges not attractive"
+        # the three edges must close a triangle on node sets
+        nodes = {u[e0], v[e0], u[e1], v[e1], u[e2], v[e2]}
+        assert len(nodes) == 3
+
+
+def test_triangle_edges_share_endpoints():
+    inst = random_instance(15, 0.5, seed=5, pad_edges=128, pad_nodes=16)
+    sep = separate(inst, max_neg=64, max_tri_per_edge=4, with_cycles45=False)
+    tri = np.asarray(sep.triangles.edges)[np.asarray(sep.triangles.valid)]
+    assert (tri >= 0).all()
+    # no duplicate edge ids within one triangle
+    for row in tri:
+        assert len(set(row.tolist())) == 3
+
+
+def test_cycles45_chords_are_zero_cost():
+    """4/5-cycle triangulation allocates chords with cost exactly 0, so the
+    relaxation (and the objective) is unchanged."""
+    inst = random_instance(20, 0.25, seed=6, pad_edges=512, pad_nodes=24)
+    before = np.asarray(inst.edge_valid).sum()
+    sep = separate(inst, max_neg=64, max_tri_per_edge=4, with_cycles45=True)
+    inst2 = sep.instance
+    ev2 = np.asarray(inst2.edge_valid)
+    new = ev2 & ~np.asarray(inst.edge_valid)
+    assert (np.asarray(inst2.cost)[new] == 0.0).all()
+    # original edges untouched
+    old = np.asarray(inst.edge_valid)
+    np.testing.assert_allclose(np.asarray(inst2.cost)[old],
+                               np.asarray(inst.cost)[old])
+
+
+def test_cycles45_triangles_valid_ids():
+    inst = random_instance(20, 0.25, seed=7, pad_edges=512, pad_nodes=24)
+    sep = separate(inst, max_neg=64, max_tri_per_edge=4, with_cycles45=True)
+    tri = np.asarray(sep.triangles.edges)
+    val = np.asarray(sep.triangles.valid)
+    E = inst.num_edges
+    assert (tri[val] >= 0).all() and (tri[val] < E).all()
+
+
+def test_no_triangles_on_all_positive():
+    """A graph with no repulsive edges has no conflicted cycles."""
+    inst = make_instance([0, 1, 2], [1, 2, 0], [1.0, 1.0, 1.0], 3,
+                         pad_edges=16)
+    sep = separate(inst, max_neg=8, max_tri_per_edge=4)
+    assert not bool(np.asarray(sep.triangles.valid).any())

@@ -1,0 +1,61 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (
+    grid_instance, make_instance, random_instance, to_host_edges,
+)
+
+
+def test_make_instance_padding():
+    inst = make_instance([0, 2], [1, 1], [1.0, -2.0], 3, pad_edges=8,
+                         pad_nodes=5)
+    assert inst.num_edges == 8 and inst.num_nodes == 5
+    assert int(inst.edge_valid.sum()) == 2
+    assert int(inst.node_valid.sum()) == 3
+    u, v, c = to_host_edges(inst)
+    # canonicalised u < v
+    assert (u < v).all()
+    np.testing.assert_allclose(sorted(c), [-2.0, 1.0])
+
+
+def test_objective_counts_cut_edges_only():
+    inst = make_instance([0, 1, 0], [1, 2, 2], [3.0, -1.0, 2.0], 3,
+                         pad_edges=8, pad_nodes=4)
+    # all in one cluster: nothing cut
+    assert float(inst.objective(jnp.zeros(4, jnp.int32))) == 0.0
+    # all separate: everything cut
+    lab = jnp.arange(4, dtype=jnp.int32)
+    assert float(inst.objective(lab)) == 4.0
+    # cut only the repulsive edge (1|2 separated, 0 with 1)
+    lab = jnp.array([0, 0, 1, 9], jnp.int32)
+    assert float(inst.objective(lab)) == -1.0 + 2.0  # edges 12 and 02 cut
+
+
+def test_objective_ignores_padded_edges():
+    inst = make_instance([0], [1], [5.0], 2, pad_edges=10, pad_nodes=4)
+    lab = jnp.array([0, 1, 2, 3], jnp.int32)
+    # padded edges are (0,0) self-loops with cost 0 and invalid
+    assert float(inst.objective(lab)) == 5.0
+
+
+def test_random_instance_shapes():
+    inst = random_instance(20, 0.3, seed=1, pad_edges=256, pad_nodes=32)
+    assert inst.num_edges == 256 and inst.num_nodes == 32
+    u, v, _ = to_host_edges(inst)
+    assert u.max() < 20 and v.max() < 20
+
+
+def test_grid_instance_structure():
+    inst = grid_instance(8, 8, seed=0, long_range=False)
+    u, v, c = to_host_edges(inst)
+    # 4-connectivity grid: 2*8*7 edges
+    assert len(u) == 2 * 8 * 7
+    # planted structure: more attractive than repulsive mass overall is not
+    # guaranteed, but both signs must be present
+    assert (c > 0).any() and (c < 0).any()
+
+
+def test_grid_instance_long_range():
+    base = grid_instance(8, 8, seed=0, long_range=False)
+    lr = grid_instance(8, 8, seed=0, long_range=True)
+    assert int(lr.edge_valid.sum()) > int(base.edge_valid.sum())

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.contract_matmul.ops import contract_matmul
+from repro.kernels.contract_matmul.ref import contract_matmul_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.triangle_mp.ops import mp_sweep
+from repro.kernels.triangle_mp.ref import mp_sweep_ref
+
+
+# ---------------------------------------------------------------------------
+# triangle_mp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T", [1, 7, 128, 1024, 4097, 32768 + 3])
+def test_triangle_mp_shapes(T):
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, 3), jnp.float32) * 3
+    np.testing.assert_allclose(np.asarray(mp_sweep(x)),
+                               np.asarray(mp_sweep_ref(x)), atol=1e-5)
+
+
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e3])
+def test_triangle_mp_scales(scale):
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 3)) * scale
+    got = np.asarray(mp_sweep(x))
+    want = np.asarray(mp_sweep_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * scale)
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 256])
+def test_triangle_mp_block_sweep(block_rows):
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, 3))
+    got = np.asarray(mp_sweep(x, block_rows=block_rows))
+    np.testing.assert_allclose(got, np.asarray(mp_sweep_ref(x)), atol=1e-5)
+
+
+def test_triangle_mp_zero_input():
+    x = jnp.zeros((256, 3), jnp.float32)
+    np.testing.assert_allclose(np.asarray(mp_sweep(x)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# contract_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,M", [(8, 3), (64, 17), (256, 256), (300, 77),
+                                 (513, 100)])
+def test_contract_matmul_shapes(N, M):
+    key = jax.random.PRNGKey(N * 1000 + M)
+    A = jax.random.normal(key, (N, N), jnp.float32)
+    A = (A + A.T) / 2
+    f = jax.random.randint(jax.random.PRNGKey(N + M), (N,), 0, M)
+    got = np.asarray(contract_matmul(A, f, M))
+    want = np.asarray(contract_matmul_ref(A, f, M))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_contract_matmul_identity_mapping():
+    """f = identity: contraction is a no-op up to the diagonal removal."""
+    N = 32
+    A = jax.random.normal(jax.random.PRNGKey(0), (N, N))
+    A = (A + A.T) / 2
+    f = jnp.arange(N)
+    got = np.asarray(contract_matmul(A, f, N))
+    want = np.asarray(A - jnp.diag(jnp.diag(A)))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_contract_matmul_all_to_one():
+    """Everything merges: result is a single cluster, zero off-diagonal."""
+    N = 16
+    A = jax.random.normal(jax.random.PRNGKey(1), (N, N))
+    A = (A + A.T) / 2
+    f = jnp.zeros((N,), jnp.int32)
+    got = np.asarray(contract_matmul(A, f, 4))
+    np.testing.assert_allclose(got, 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    dict(B=1, H=2, S=256, D=64, causal=True, window=None, cap=None),
+    dict(B=2, H=1, S=512, D=128, causal=True, window=256, cap=None),
+    dict(B=1, H=1, S=512, D=64, causal=True, window=None, cap=50.0),
+    dict(B=1, H=2, S=384, D=64, causal=False, window=None, cap=None),
+    dict(B=1, H=4, S=256, D=32, causal=True, window=128, cap=30.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_vs_ref(case):
+    B, H, S, D = case["B"], case["H"], case["S"], case["D"]
+    ks = jax.random.split(jax.random.PRNGKey(B * H * S), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    got = flash_attention(q, k, v, causal=case["causal"],
+                          window=case["window"], softcap=case["cap"],
+                          use_pallas=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=case["causal"],
+                         window=case["window"], softcap=case["cap"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, use_pallas=True,
+                          block_q=128, block_k=128, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_flash_attention_block_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 1, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1, 512, 64), jnp.float32)
+    want = attention_ref(q, k, v, causal=True)
+    for bq, bk in [(128, 256), (256, 128), (512, 512)]:
+        got = flash_attention(q, k, v, causal=True, use_pallas=True,
+                              block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-3)

@@ -1,0 +1,160 @@
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cycles import Triangles, separate
+from repro.core.graph import make_instance, random_instance
+from repro.core.message_passing import (
+    MPState, edges_to_triangles, init_mp, lower_bound,
+    mp_sweep_reference, reparametrized_costs, run_message_passing,
+    triangle_min_marginals, triangles_to_edges,
+)
+
+M_T = [(0, 0, 0), (1, 1, 0), (1, 0, 1), (0, 1, 1), (1, 1, 1)]
+
+
+def _enum_min_marginal(tc, slot):
+    """Brute-force min-marginal (Def. 7) by enumerating M_T."""
+    best1 = min(sum(c * y for c, y in zip(tc, lab))
+                for lab in M_T if lab[slot] == 1)
+    best0 = min(sum(c * y for c, y in zip(tc, lab))
+                for lab in M_T if lab[slot] == 0)
+    return best1 - best0
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_min_marginal_closed_form(seed):
+    """Closed-form min-marginals == enumeration over the 5 labelings."""
+    rng = np.random.default_rng(seed)
+    tc = rng.normal(0, 2, 3)
+    mm = triangle_min_marginals(jnp.asarray(tc, jnp.float32))
+    for slot in range(3):
+        want = _enum_min_marginal(tc, slot)
+        assert float(mm[slot]) == pytest.approx(want, abs=1e-5)
+
+
+def test_edges_to_triangles_zeroes_covered_edges():
+    """After the edge→triangle sweep every covered edge has c^λ = 0
+    (Alg. 2 lines 1–6)."""
+    inst = random_instance(12, 0.6, seed=2, pad_edges=128, pad_nodes=16)
+    sep = separate(inst, max_neg=32, max_tri_per_edge=4)
+    state = init_mp(sep.triangles)
+    state = edges_to_triangles(state, sep.instance.cost)
+    c_rep = reparametrized_costs(sep.instance.cost, state)
+    tri = np.asarray(state.tri)[np.asarray(state.tri_valid)]
+    covered = np.unique(tri.reshape(-1))
+    np.testing.assert_allclose(np.asarray(c_rep)[covered], 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_lb_monotone_per_sweep(seed):
+    """Lemma 17: every Alg. 2 iteration is non-decreasing in LB(λ)."""
+    inst = random_instance(14, 0.5, seed=seed, pad_edges=128, pad_nodes=16)
+    sep = separate(inst, max_neg=64, max_tri_per_edge=4)
+    inst2 = sep.instance
+    state = init_mp(sep.triangles)
+    prev = float(lower_bound(inst2.cost, inst2.edge_valid, state))
+    for _ in range(12):
+        state = edges_to_triangles(state, inst2.cost)
+        state = triangles_to_edges(state)
+        cur = float(lower_bound(inst2.cost, inst2.edge_valid, state))
+        assert cur >= prev - 1e-4, "LB decreased"
+        prev = cur
+
+
+def test_lb_converges_triangle_example(triangle_instance):
+    """On the canonical conflicted triangle (+2, +2, −1) the cycle relaxation
+    is tight: LB must converge to OPT = cutting nothing but paying... OPT is
+    join-all = cut nothing except the repulsive edge is inside the cluster.
+    Costs: join all → 0 cut → pay 0... but the repulsive edge (cost −1) would
+    then not be cut, so objective 0? Cutting node 2 off pays +2+2? No —
+    cut {0,1}|{2}: edges 12 and 02 cut → −1 + 2 = +1. Join all: 0.
+    Cut everything: 2 + 2 − 1 = 3. OPT = min(0, ...) with y=0 → 0? Wait:
+    y=0 everywhere cuts nothing, objective 0. But cutting ONLY the repulsive
+    edge is infeasible (cycle inequality). OPT = 0 (all one cluster).
+    The LP relaxation without cycles would give −1 (cut only repulsive).
+    With the triangle subproblem LB must reach 0."""
+    inst = triangle_instance
+    sep = separate(inst, max_neg=8, max_tri_per_edge=2, with_cycles45=False)
+    state = init_mp(sep.triangles)
+    state, c_rep, lb = run_message_passing(
+        sep.instance.cost, sep.instance.edge_valid, state, 50)
+    assert float(lb) == pytest.approx(0.0, abs=1e-3)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_reparametrization_preserves_objective(seed):
+    """Lagrangian consistency: for EVERY node labeling y,
+    ⟨c, y⟩ = ⟨c^λ, y⟩ + Σ_t ⟨c_t^λ, y_t⟩ where y_t is y restricted to the
+    triangle's edges. Holds for any λ by construction (6a/6b)."""
+    inst = random_instance(10, 0.6, seed=seed, pad_edges=96, pad_nodes=10)
+    sep = separate(inst, max_neg=32, max_tri_per_edge=3)
+    inst2 = sep.instance
+    state = init_mp(sep.triangles)
+    state, c_rep, _ = run_message_passing(inst2.cost, inst2.edge_valid,
+                                          state, 7)
+
+    rng = np.random.default_rng(seed)
+    u, v = np.asarray(inst2.u), np.asarray(inst2.v)
+    ev = np.asarray(inst2.edge_valid)
+    cost = np.asarray(inst2.cost)
+    crep = np.asarray(c_rep)
+    tri = np.asarray(state.tri)
+    tval = np.asarray(state.tri_valid)
+    tcost = np.asarray(state.t_cost)
+    for _ in range(5):
+        lab = rng.integers(0, 4, inst2.num_nodes)
+        y = (lab[u] != lab[v]) & ev
+        orig = float((cost * y).sum())
+        rep = float((crep * y).sum())
+        tri_part = float((tcost[tval] * y[tri[tval]]).sum())
+        assert orig == pytest.approx(rep + tri_part, abs=1e-3)
+
+
+def test_sweep_reference_matches_manual_sequence():
+    """The fused reference sweep equals six single-slot updates applied
+    sequentially with the paper's γ schedule (Alg. 2 lines 8–13)."""
+    rng = np.random.default_rng(0)
+    tc = jnp.asarray(rng.normal(0, 2, (17, 3)), jnp.float32)
+
+    def _mm_slot(t, slot):
+        a = t[..., slot]
+        b = t[..., (slot + 1) % 3]
+        c = t[..., (slot + 2) % 3]
+        return a + jnp.minimum(jnp.minimum(b, c), b + c) \
+            - jnp.minimum(0.0, b + c)
+
+    manual = tc
+    for slot, gamma in [(0, 1 / 3), (1, 1 / 2), (2, 1.0),
+                        (0, 1 / 2), (1, 1.0), (0, 1.0)]:
+        m = _mm_slot(manual, slot)
+        manual = manual.at[..., slot].add(-gamma * m)
+    np.testing.assert_allclose(np.asarray(mp_sweep_reference(tc)),
+                               np.asarray(manual), atol=1e-5)
+
+
+def test_sweep_invariant_to_triangle_order():
+    """Schedule invariance (the paper's parallelisation argument): permuting
+    triangle rows commutes with the sweep."""
+    rng = np.random.default_rng(3)
+    tc = jnp.asarray(rng.normal(0, 1, (64, 3)), jnp.float32)
+    perm = rng.permutation(64)
+    out1 = np.asarray(mp_sweep_reference(tc))[perm]
+    out2 = np.asarray(mp_sweep_reference(tc[perm]))
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_fixed_point_keeps_lb(triangle_instance):
+    """Iterating past convergence never degrades the LB (Thm. 11 fixed
+    points are stable)."""
+    inst = triangle_instance
+    sep = separate(inst, max_neg=8, max_tri_per_edge=2, with_cycles45=False)
+    state = init_mp(sep.triangles)
+    state, _, lb1 = run_message_passing(sep.instance.cost,
+                                        sep.instance.edge_valid, state, 60)
+    state, _, lb2 = run_message_passing(sep.instance.cost,
+                                        sep.instance.edge_valid, state, 20)
+    assert float(lb2) >= float(lb1) - 1e-5

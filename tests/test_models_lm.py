@@ -1,0 +1,140 @@
+"""Per-LM-arch smoke tests on reduced configs: one forward + one train step
+on CPU, asserting shapes and finiteness; plus decode/prefill consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs  # noqa: F401  (registers archs)
+from repro.configs.base import REGISTRY
+from repro.models import transformer as tfm
+from repro.train.optimizer import OptimizerConfig, apply_update, init_opt_state
+
+LM_IDS = ["granite-34b", "gemma2-9b", "phi3-mini-3.8b",
+          "llama4-scout-17b-a16e", "grok-1-314b"]
+
+
+def _reduced(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4), head_dim=16, d_ff=128, vocab=256,
+        act_sharding=None, remat=False,
+        n_experts=min(cfg.n_experts, 4) if cfg.moe else 0)
+
+
+@pytest.fixture(params=LM_IDS)
+def reduced(request):
+    arch = REGISTRY[request.param]
+    return request.param, _reduced(arch.cfg)
+
+
+def test_forward_shapes_no_nan(reduced):
+    aid, cfg = reduced
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, tok)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{aid} produced NaN/inf"
+
+
+def test_train_step_no_nan(reduced):
+    aid, cfg = reduced
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+
+    def loss(p):
+        return tfm.loss_fn(cfg, p, tok, tok)
+
+    l, grads = jax.value_and_grad(loss)(params)
+    params2, opt2, om = apply_update(OptimizerConfig(), params, grads, opt)
+    assert bool(jnp.isfinite(l))
+    leaves = jax.tree.leaves(params2)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves), aid
+    # params actually moved
+    moved = any(bool((a != b).any()) for a, b in
+                zip(jax.tree.leaves(params), leaves))
+    assert moved
+
+
+def test_decode_matches_forward(reduced):
+    """Greedy prefill-by-decode must reproduce forward()'s last-position
+    logits (KV-cache correctness)."""
+    aid, cfg = reduced
+    if cfg.moe:
+        pytest.skip("MoE capacity differs between B*S=prefill and B*1=decode")
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full = tfm.forward(cfg, params, tok)
+    cache = tfm.init_kv_cache(cfg, B, 16)
+    for t in range(S):
+        logits, cache = tfm.decode_step(cfg, params, tok[:, t], cache,
+                                        jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, -1]), atol=2e-3,
+                               err_msg=aid)
+
+
+def test_gqa_kv_heads_smaller():
+    cfg = _reduced(REGISTRY["granite-34b"].cfg)
+    cfg = dataclasses.replace(cfg, n_kv_heads=1)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    assert params["layers"]["wk"].shape[-1] == cfg.hd  # single KV head
+    tok = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, tok)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = _reduced(REGISTRY["gemma2-9b"].cfg)
+    assert cfg.final_softcap is not None
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    # blow up the head to force saturation
+    params["lm_head"] = params["lm_head"] * 100.0
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, tok)
+    assert float(jnp.abs(logits).max()) <= cfg.final_softcap + 1e-3
+
+
+def test_moe_routing_conservation():
+    """Each token's combined expert weights sum to 1 (after renorm)."""
+    cfg = _reduced(REGISTRY["grok-1-314b"].cfg)
+    assert cfg.moe and cfg.top_k == 2
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, tok)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_moe_capacity_drops_gracefully():
+    """Tiny capacity factor must not produce NaNs (dropped tokens fall back
+    to the residual stream)."""
+    cfg = _reduced(REGISTRY["llama4-scout-17b-a16e"].cfg)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.05)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, tok)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_params_count_matches_tree():
+    """Analytic params_count (used by 6ND roofline) == actual tree size."""
+    for aid in LM_IDS:
+        cfg = _reduced(REGISTRY[aid].cfg)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        n_tree = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        assert cfg.params_count == n_tree, aid
+
+
+def test_remat_same_output():
+    cfg = _reduced(REGISTRY["phi3-mini-3.8b"].cfg)
+    cfg_r = dataclasses.replace(cfg, remat=True)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    a = tfm.forward(cfg, params, tok)
+    b = tfm.forward(cfg_r, params, tok)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,81 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs  # noqa: F401
+from repro.configs.base import REGISTRY
+from repro.models import recsys as rs
+from repro.train.optimizer import OptimizerConfig, apply_update, init_opt_state
+
+
+@pytest.fixture
+def small_cfg():
+    return dataclasses.replace(REGISTRY["wide-deep"].cfg,
+                               vocab_per_field=100, mlp_dims=(32, 16))
+
+
+def _batch(cfg, B=8, seed=0):
+    rng = np.random.default_rng(seed)
+    si = jnp.asarray(rng.integers(0, cfg.vocab_per_field,
+                                  (B, cfg.n_sparse, cfg.multi_hot)),
+                     jnp.int32)
+    df = jnp.asarray(rng.normal(0, 1, (B, cfg.n_dense)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 2, (B,)), jnp.float32)
+    return si, df, lab
+
+
+def test_forward_shape(small_cfg):
+    params = rs.init_params(small_cfg, jax.random.PRNGKey(0))
+    si, df, _ = _batch(small_cfg)
+    logit = rs.forward(small_cfg, params, si, df)
+    assert logit.shape == (8,)
+    assert bool(jnp.isfinite(logit).all())
+
+
+def test_train_step_learns(small_cfg):
+    """A few steps on a fixed batch must reduce the BCE loss."""
+    params = rs.init_params(small_cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    si, df, lab = _batch(small_cfg)
+    cfg_opt = OptimizerConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
+
+    def loss(p):
+        return rs.loss_fn(small_cfg, p, si, df, lab)
+
+    l0 = float(loss(params))
+    for _ in range(20):
+        l, grads = jax.value_and_grad(loss)(params)
+        params, opt, _ = apply_update(cfg_opt, params, grads, opt)
+    assert float(loss(params)) < l0
+
+
+def test_retrieval_score_is_batched_dot():
+    q = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16,)), jnp.float32)
+    cands = jnp.asarray(np.random.default_rng(1).normal(0, 1, (1000, 16)),
+                        jnp.float32)
+    got = rs.retrieval_score(q, cands)
+    want = cands @ q
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_retrieval_topk_correct():
+    q = jnp.ones((4,), jnp.float32)
+    cands = jnp.asarray(np.eye(8, 4), jnp.float32) * \
+        jnp.arange(1, 9, dtype=jnp.float32)[:, None]
+    scores = rs.retrieval_score(q, cands)
+    vals, idx = jax.lax.top_k(scores, 3)
+    # candidate rows 3 (value 4), 2 (3), 1 (2)... actually eye(8,4) rows 0-3
+    assert int(idx[0]) == 3
+
+
+def test_wide_path_contributes(small_cfg):
+    """Zeroing the deep MLP leaves the wide linear path active."""
+    params = rs.init_params(small_cfg, jax.random.PRNGKey(0))
+    params["mlp_w"] = [w * 0 for w in params["mlp_w"]]
+    params["mlp_b"] = [b * 0 for b in params["mlp_b"]]
+    si, df, _ = _batch(small_cfg)
+    logit = rs.forward(small_cfg, params, si, df)
+    assert float(jnp.abs(logit).max()) > 0, "wide path dead"

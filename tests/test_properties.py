@@ -1,0 +1,120 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import brute_force
+from repro.core.contraction import choose_contraction_set, contract
+from repro.core.cycles import separate
+from repro.core.graph import make_instance
+from repro.core.message_passing import (
+    init_mp, lower_bound, run_message_passing, triangle_min_marginals,
+)
+from repro.core.solver import SolverConfig, solve_pd
+from repro.kernels.triangle_mp.ref import mp_sweep_ref
+
+M_T = [(0, 0, 0), (1, 1, 0), (1, 0, 1), (0, 1, 1), (1, 1, 1)]
+
+
+@st.composite
+def instances(draw, max_nodes=9):
+    n = draw(st.integers(4, max_nodes))
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    chosen = draw(st.lists(st.sampled_from(pairs), min_size=3,
+                           max_size=len(pairs), unique=True))
+    costs = draw(st.lists(
+        st.floats(-5, 5, allow_nan=False).filter(lambda x: abs(x) > 1e-3),
+        min_size=len(chosen), max_size=len(chosen)))
+    u = [p[0] for p in chosen]
+    v = [p[1] for p in chosen]
+    return make_instance(u, v, costs, n, pad_edges=96, pad_nodes=16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances())
+def test_lb_never_exceeds_opt(inst):
+    """LB(λ) ≤ OPT for any λ the solver produces (relaxation soundness)."""
+    opt, _ = brute_force(inst)
+    res = solve_pd(inst, SolverConfig(mp_iters=8, max_neg=64))
+    assert res.lower_bound <= opt + 1e-3
+    assert res.objective >= opt - 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances())
+def test_mp_monotone_lb(inst):
+    """Per-iteration LB monotonicity over arbitrary instances (Lemma 17)."""
+    sep = separate(inst, max_neg=64, max_tri_per_edge=4)
+    inst2 = sep.instance
+    state = init_mp(sep.triangles)
+    prev = float(lower_bound(inst2.cost, inst2.edge_valid, state))
+    for _ in range(4):
+        state, _, lb = run_message_passing(inst2.cost, inst2.edge_valid,
+                                           state, 1)
+        lb = float(lb)
+        assert lb >= prev - 1e-3
+        prev = lb
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances())
+def test_contraction_objective_invariant(inst):
+    """For any labeling of the contracted graph, the lifted labeling has the
+    same objective on the original graph (Lemma 1b)."""
+    S = choose_contraction_set(inst)
+    res = contract(inst, S)
+    rng = np.random.default_rng(0)
+    lab = jnp.asarray(rng.integers(0, 4, res.instance.num_nodes), jnp.int32)
+    lifted = lab[res.mapping]
+    assert float(inst.objective(lifted)) == pytest.approx(
+        float(res.instance.objective(lab)), abs=1e-2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-20, 20, allow_nan=False), min_size=3, max_size=3))
+def test_min_marginal_sign_predicts_local_optimum(tc):
+    """m_{t→e} > 0 ⇒ every minimiser has y_e = 0; m < 0 ⇒ y_e = 1."""
+    costs = np.array(tc, np.float32)
+    mm = np.asarray(triangle_min_marginals(jnp.asarray(costs)))
+    vals = [sum(c * y for c, y in zip(costs, lab)) for lab in M_T]
+    best = min(vals)
+    for slot in range(3):
+        minimisers = {lab[slot] for lab, v in zip(M_T, vals)
+                      if v <= best + 1e-7}
+        if mm[slot] > 1e-5:
+            assert minimisers == {0}
+        elif mm[slot] < -1e-5:
+            assert minimisers == {1}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False, allow_infinity=False),
+                min_size=3, max_size=3))
+def test_sweep_preserves_triangle_lb(tc):
+    """One triangle sweep never decreases the triangle's own LB
+    min_{y∈M_T}⟨c_t, y⟩ + (pushed mass appears as edge LB ≥ its min).
+    Weaker invariant checked: total mass accounting — the sweep moves
+    min-marginals out, so the new triangle min plus the moved mass equals at
+    least the old min (Lemma 16 (i) restricted to one triangle)."""
+    t = jnp.asarray(np.array(tc, np.float32))[None, :]
+    out = np.asarray(mp_sweep_ref(t))[0]
+    tc = np.array(tc)
+
+    def tri_lb(c):
+        return min(sum(ci * yi for ci, yi in zip(c, lab)) for lab in M_T)
+
+    moved = tc - out         # mass pushed onto the three edges (λ deltas)
+    edge_lb = np.minimum(moved, 0.0).sum()
+    # LB before: tri_lb(tc) (+ edges at 0). After: tri_lb(out) + edge part.
+    assert tri_lb(out) + edge_lb >= tri_lb(tc) - 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500))
+def test_mp_sweep_kernel_matches_ref_random_T(T):
+    import jax
+    from repro.kernels.triangle_mp.ops import mp_sweep
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, 3), jnp.float32) * 5
+    np.testing.assert_allclose(np.asarray(mp_sweep(x)),
+                               np.asarray(mp_sweep_ref(x)), atol=1e-4)

@@ -1,0 +1,72 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    HW, collective_bytes, dominant_term, roofline_fraction, roofline_terms,
+    step_time_estimate,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+%x = f32[128,256]{1,0} all-gather(%p0), replica_groups=[...]
+%y = bf16[64]{0} all-reduce(%p1), to_apply=%add
+%z = (f32[32,32]{1,0}) reduce-scatter(%p2)
+%w = f32[16,16]{1,0} collective-permute(%p3)
+%notacoll = f32[999,999]{1,0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 128 * 256 * 4
+    assert out["all-reduce"] == 64 * 2 * 2          # bf16, 2x ring factor
+    assert out["reduce-scatter"] == 32 * 32 * 4
+    assert out["collective-permute"] == 16 * 16 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_bytes_ignores_elementwise():
+    out = collective_bytes("%a = f32[10]{0} add(%x, %y)\n")
+    assert out["total"] == 0
+
+
+def test_roofline_terms_units():
+    terms = roofline_terms(flops=HW.peak_flops, bytes_accessed=HW.hbm_bw,
+                           coll_bytes=HW.ici_bw)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert terms["collective_s"] == pytest.approx(1.0)
+
+
+def test_dominant_term():
+    assert dominant_term({"compute_s": 3, "memory_s": 1,
+                          "collective_s": 2}) == "compute"
+    assert dominant_term({"compute_s": 0, "memory_s": 1,
+                          "collective_s": 2}) == "collective"
+
+
+def test_step_time_overlap_vs_serial():
+    t = {"compute_s": 3.0, "memory_s": 1.0, "collective_s": 2.0}
+    assert step_time_estimate(t, overlap=True) == 3.0
+    assert step_time_estimate(t, overlap=False) == 6.0
+
+
+def test_roofline_fraction_bounds():
+    terms = {"compute_s": 1.0, "memory_s": 0.5, "collective_s": 0.1}
+    # if all HLO flops were useful, fraction == compute_s / step_time == 1
+    frac = roofline_fraction(HW.peak_flops * 1.0, terms)
+    assert frac == pytest.approx(1.0)
+    # half-useful flops -> 0.5
+    frac = roofline_fraction(HW.peak_flops * 0.5, terms)
+    assert frac == pytest.approx(0.5)
+
+
+def test_collective_bytes_on_real_compile():
+    """Compile a psum on 1 device — no cross-device collective should be
+    charged (XLA elides trivial groups) or, if present, counted finitely."""
+    f = jax.jit(lambda x: x * 2 + 1)
+    hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
+    out = collective_bytes(hlo)
+    assert out["total"] == 0

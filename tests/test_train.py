@@ -1,0 +1,197 @@
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    latest_step, load_checkpoint, save_checkpoint,
+)
+from repro.train.compression import (
+    dequantize_leaf, fake_quantize_ef, init_error_buffers, quantize_leaf,
+)
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import (
+    OptimizerConfig, OptState, apply_update, clip_by_global_norm,
+    init_opt_state, schedule_lr,
+)
+
+
+def _loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] + params["b"] - y) ** 2)
+
+
+def _batch(step):
+    k = jax.random.PRNGKey(step)
+    x = jax.random.normal(k, (32, 8))
+    return x, x @ jnp.arange(8.0) + 1.0
+
+
+def _params():
+    return {"w": jnp.zeros((8,)), "b": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    cfg = OptimizerConfig(lr=1e-2, betas=(0.9, 0.999), eps=1e-8,
+                          weight_decay=0.0, grad_clip=0.0,  # 0 = no clip
+                          warmup_steps=0, schedule="constant")
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.25])}
+    st = init_opt_state(p)
+    p2, st2, _ = apply_update(cfg, p, g, st)
+    m = 0.1 * np.array([0.5, 0.25])
+    v = 0.001 * np.array([0.25, 0.0625])
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = np.array([1.0, -2.0]) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+
+
+def test_weight_decay_decoupled():
+    cfg = OptimizerConfig(lr=1e-2, weight_decay=0.1, grad_clip=0.0,
+                          warmup_steps=0, schedule="constant")
+    p = {"w": jnp.array([10.0])}
+    g = {"w": jnp.array([0.0])}
+    p2, _, _ = apply_update(cfg, p, g, init_opt_state(p))
+    # zero grad → only decay shrinks the weight
+    assert float(p2["w"][0]) == pytest.approx(10.0 * (1 - 1e-2 * 0.1),
+                                              rel=1e-6)
+
+
+def test_grad_clip_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((3,)) * 4.0}
+    clipped, gnorm = clip_by_global_norm(g, 1.0)
+    norm = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(norm) == pytest.approx(1.0, rel=1e-5)
+    assert float(gnorm) == pytest.approx(np.sqrt(9 * 4 + 16 * 3), rel=1e-5)
+    same, _ = clip_by_global_norm(g, 0.0)  # 0 = disabled
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine", min_lr_frac=0.1)
+    assert float(schedule_lr(cfg, jnp.int32(0))) == 0.0
+    assert float(schedule_lr(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(schedule_lr(cfg, jnp.int32(100))) == pytest.approx(0.1,
+                                                                    abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = quantize_leaf(g)
+    err = np.abs(np.asarray(dequantize_leaf(q, s)) - np.asarray(g))
+    assert err.max() <= float(s) / 2 + 1e-7
+
+
+def test_error_feedback_cancels_bias():
+    """With a CONSTANT gradient, EF-compressed updates must average to the
+    true gradient (the residual is bounded, so the running mean converges)."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, 64),
+                          jnp.float32)}
+    err = init_error_buffers(g)
+    total = jnp.zeros_like(g["w"])
+    T = 200
+    for _ in range(T):
+        deq, err = fake_quantize_ef(g, err)
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total / T), np.asarray(g["w"]),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_nested():
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": OptState(step=jnp.int32(7),
+                            mu={"w": jnp.ones((2, 3))},
+                            nu={"w": jnp.zeros((2, 3))})}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, tree)
+        assert latest_step(d) == 5
+        restored, info = load_checkpoint(d, tree)
+        assert info["step"] == 5
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+        assert int(restored["opt"].step) == 7
+
+
+def test_checkpoint_retention():
+    tree = {"w": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        for s in [1, 2, 3, 4, 5]:
+            save_checkpoint(d, s, tree, keep=2)
+        steps = sorted(int(f.split("_")[1].split(".")[0])
+                       for f in os.listdir(d) if f.startswith("step_"))
+        assert steps == [4, 5]
+
+
+def test_checkpoint_no_tmp_left():
+    tree = {"w": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# train loop: restart determinism + failure recovery
+# ---------------------------------------------------------------------------
+
+def test_resume_is_bitwise_deterministic():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = TrainConfig(opt=OptimizerConfig(lr=0.1), ckpt_dir=d,
+                          ckpt_every=5, log_every=5)
+        train(_loss, _params(), _batch, cfg, num_steps=10)   # "crash" at 10
+        p_resumed, _, _ = train(_loss, _params(), _batch, cfg, num_steps=20)
+    with tempfile.TemporaryDirectory() as d2:
+        cfg2 = TrainConfig(opt=OptimizerConfig(lr=0.1), ckpt_dir=d2,
+                           ckpt_every=1000, log_every=5)
+        p_straight, _, _ = train(_loss, _params(), _batch, cfg2,
+                                 num_steps=20)
+    np.testing.assert_allclose(np.asarray(p_resumed["w"]),
+                               np.asarray(p_straight["w"]), atol=1e-6)
+
+
+def test_grad_accum_equals_large_batch():
+    """accum=4 over a 32-batch == one step on the same 32 rows."""
+    cfg_a = TrainConfig(opt=OptimizerConfig(lr=0.1, grad_clip=0.0),
+                        grad_accum=4)
+    cfg_b = TrainConfig(opt=OptimizerConfig(lr=0.1, grad_clip=0.0),
+                        grad_accum=1)
+    pa, _, _ = train(_loss, _params(), _batch, cfg_a, num_steps=3)
+    pb, _, _ = train(_loss, _params(), _batch, cfg_b, num_steps=3)
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]),
+                               atol=1e-4)
+
+
+def test_loss_decreases():
+    cfg = TrainConfig(opt=OptimizerConfig(lr=0.05, grad_clip=0.0,
+                                          warmup_steps=0,
+                                          schedule="constant",
+                                          weight_decay=0.0), log_every=1)
+    _, _, hist = train(_loss, _params(), _batch, cfg, num_steps=40)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.5
+
+
+def test_compressed_training_still_converges():
+    cfg = TrainConfig(opt=OptimizerConfig(lr=0.05, grad_clip=0.0,
+                                          warmup_steps=0,
+                                          schedule="constant",
+                                          weight_decay=0.0), log_every=1,
+                      compress_grads=True)
+    _, _, hist = train(_loss, _params(), _batch, cfg, num_steps=40)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.5
