@@ -7,6 +7,10 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Emits ``bench,case,metric,value`` CSV on stdout.
+
+``--smoke`` runs the fast per-mode solver benchmark instead and writes
+``BENCH_solver.json`` (per-mode wall-clock + objective/LB) for CI perf
+tracking.
 """
 from __future__ import annotations
 
@@ -17,13 +21,20 @@ from benchmarks.common import Csv
 
 
 def main(argv=None) -> None:
-    argv = argv if argv is not None else sys.argv[1:]
+    argv = list(argv if argv is not None else sys.argv[1:])
+    csv = Csv()
+    csv.emit_header()
+    if "--smoke" in argv:
+        extra = [a for a in argv if a != "--smoke"]
+        if extra:
+            raise SystemExit(f"--smoke runs alone; unexpected args: {extra}")
+        from benchmarks import solver_smoke
+        solver_smoke.run_smoke(csv=csv)
+        return
     from benchmarks import breakdown, kernels, scaling, table1
     mods = {"table1": table1, "scaling": scaling, "breakdown": breakdown,
             "kernels": kernels}
     wanted = argv or list(mods)
-    csv = Csv()
-    csv.emit_header()
     for name in wanted:
         t0 = time.time()
         mods[name].run(csv)

@@ -13,12 +13,12 @@ import time
 
 import numpy as np
 
+from repro import api
 from repro.core.baselines import gaec, objective
 from repro.core.graph import grid_instance
-from repro.core.solver import SolverConfig, solve_p, solve_pd
 
 SIZES = [8, 12, 16, 24, 32]
-CFG = SolverConfig(max_neg=2048, mp_iters=5)
+CFG = api.SolverConfig(max_neg=2048, mp_iters=5)
 
 
 def run(csv):
@@ -32,13 +32,13 @@ def run(csv):
         gaec(inst)
         rows["GAEC"].append(time.perf_counter() - t0)
         # warm the jit cache out-of-measurement at each new padded shape
-        solve_p(inst, CFG)
+        api.solve(inst, mode="p", config=CFG).labels.block_until_ready()
         t0 = time.perf_counter()
-        solve_p(inst, CFG)
+        api.solve(inst, mode="p", config=CFG).labels.block_until_ready()
         rows["P"].append(time.perf_counter() - t0)
-        solve_pd(inst, CFG)
+        api.solve(inst, mode="pd", config=CFG).labels.block_until_ready()
         t0 = time.perf_counter()
-        solve_pd(inst, CFG)
+        api.solve(inst, mode="pd", config=CFG).labels.block_until_ready()
         rows["PD"].append(time.perf_counter() - t0)
         for name in rows:
             csv.add("scaling", f"{name}/E={n_edges}", "time_s",

@@ -1,0 +1,76 @@
+"""Solver smoke benchmark: per-mode wall-clock + objective/LB on one small
+seeded instance, written to ``BENCH_solver.json`` so CI can track the perf
+trajectory across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+
+Each mode runs through :mod:`repro.api` — i.e. the timings measure the
+device-resident executable (compile excluded via one warmup), plus a
+batched PD solve to cover the vmapped path.
+"""
+from __future__ import annotations
+
+import json
+import math
+import platform
+
+import jax
+
+from repro import api
+from repro.core.graph import random_instance
+
+from benchmarks.common import timed
+
+SMOKE_CFG = api.SolverConfig(max_neg=512, max_tri_per_edge=8, nbr_k=8,
+                             mp_iters=8)
+SMOKE_BATCH = 4
+
+
+def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
+    inst = random_instance(n=100, p=0.1, seed=0, pad_edges=1024,
+                           pad_nodes=128)
+    report = {
+        "bench": "solver_smoke",
+        "instance": {"n": 100, "p": 0.1, "seed": 0,
+                     "pad_edges": 1024, "pad_nodes": 128},
+        "config": {"max_neg": SMOKE_CFG.max_neg, "mp_iters": SMOKE_CFG.mp_iters,
+                   "max_tri_per_edge": SMOKE_CFG.max_tri_per_edge,
+                   "nbr_k": SMOKE_CFG.nbr_k},
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "modes": {},
+    }
+    def finite(x):
+        x = float(x)
+        return x if math.isfinite(x) else None   # strict-JSON (no Infinity)
+
+    for mode in api.MODES:
+        t, res = timed(api.solve, inst, mode=mode, config=SMOKE_CFG)
+        entry = {
+            "wall_s": round(t, 4),
+            "objective": finite(res.objective),
+            "lower_bound": finite(res.lower_bound),
+            "rounds": int(res.rounds),
+        }
+        report["modes"][mode] = entry
+        if csv is not None:
+            csv.add("smoke", mode, "wall_s", entry["wall_s"])
+            if entry["objective"] is not None:   # keep value column numeric
+                csv.add("smoke", mode, "objective", entry["objective"])
+
+    batch = api.stack_instances([
+        random_instance(n=100, p=0.1, seed=s, pad_edges=1024, pad_nodes=128)
+        for s in range(SMOKE_BATCH)])
+    t, res = timed(api.solve_batch, batch, mode="pd", config=SMOKE_CFG)
+    report["modes"][f"pd-batch{SMOKE_BATCH}"] = {
+        "wall_s": round(t, 4),
+        "objective": [float(o) for o in res.objective],
+    }
+    if csv is not None:
+        csv.add("smoke", f"pd-batch{SMOKE_BATCH}", "wall_s", round(t, 4))
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return report

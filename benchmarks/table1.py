@@ -15,15 +15,16 @@ from __future__ import annotations
 
 import time
 
+from repro import api
 from repro.core.baselines import (
     bec, gaec, gef, greedy_join_local_search, icp, objective,
 )
 from repro.core.graph import grid_instance, random_instance
-from repro.core.solver import SolverConfig, solve_dual, solve_p, solve_pd
 
-PD_CFG = SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8, mp_iters=10)
-PD_OPT = SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8, mp_iters=10,
-                      contract_frac=0.5, max_rounds=40)
+PD_CFG = api.SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8,
+                          mp_iters=10)
+PD_OPT = api.SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8,
+                          mp_iters=10, contract_frac=0.5, max_rounds=40)
 
 
 def _instances(regime: str, n: int = 3):
@@ -56,16 +57,27 @@ def run(csv):
             f"{tag}/KLj-lite",
             lambda i: objective(i, greedy_join_local_search(i, gaec(i))),
             insts, csv)
-        _run_primal(f"{tag}/P", lambda i: solve_p(i, PD_CFG).objective,
-                    insts, csv)
-        _run_primal(f"{tag}/PD", lambda i: solve_pd(i, PD_CFG).objective,
-                    insts, csv)
-        _run_primal(f"{tag}/PD+",
-                    lambda i: solve_pd(i, PD_CFG, plus=True).objective,
-                    insts, csv)
-        _run_primal(f"{tag}/PD-opt", lambda i: solve_pd(i, PD_OPT).objective,
-                    insts, csv)
+        _run_primal(
+            f"{tag}/P",
+            lambda i: float(api.solve(i, mode="p", config=PD_CFG).objective),
+            insts, csv)
+        _run_primal(
+            f"{tag}/PD",
+            lambda i: float(api.solve(i, mode="pd", config=PD_CFG).objective),
+            insts, csv)
+        _run_primal(
+            f"{tag}/PD+",
+            lambda i: float(api.solve(i, mode="pd+",
+                                      config=PD_CFG).objective),
+            insts, csv)
+        _run_primal(
+            f"{tag}/PD-opt",
+            lambda i: float(api.solve(i, mode="pd", config=PD_OPT).objective),
+            insts, csv)
         # dual side
         _run_primal(f"{tag}/ICP(lb)", icp, insts, csv)
-        _run_primal(f"{tag}/D(lb)",
-                    lambda i: solve_dual(i, PD_CFG)[1], insts, csv)
+        _run_primal(
+            f"{tag}/D(lb)",
+            lambda i: float(api.solve(i, mode="d",
+                                      config=PD_CFG).lower_bound),
+            insts, csv)

@@ -25,11 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.dist import (
     make_dist_pd_round, merge_blocks_quotient, partition_instance,
 )
 from repro.core.graph import random_instance
-from repro.core.solver import SolverConfig, solve_pd
 from repro.launch.mesh import make_debug_mesh
 
 N_NODES = 4000
@@ -61,7 +61,8 @@ def main():
         parts["boundary_cost"], BLK_NODES, pad_edges=65536)
     nq = int(np.asarray(q.node_valid).sum())
     print(f"quotient instance: {nq} super-nodes")
-    res_q = solve_pd(q, SolverConfig(max_neg=1024, mp_iters=8))
+    res_q = api.solve(q, mode="pd",
+                      config=api.SolverConfig(max_neg=1024, mp_iters=8))
 
     # compose: original node -> block cluster -> quotient cluster
     final = np.asarray(res_q.labels)[global_labels][:N_NODES]
@@ -69,9 +70,11 @@ def main():
         np.concatenate([final, np.zeros(inst.num_nodes - N_NODES,
                                         np.int32)]))))
     # single-device reference
-    ref = solve_pd(inst, SolverConfig(max_neg=1024, mp_iters=8))
+    ref = api.solve(inst, mode="pd",
+                    config=api.SolverConfig(max_neg=1024, mp_iters=8))
     print(f"distributed objective {obj:.2f}   "
-          f"single-device PD {ref.objective:.2f}   LB {float(lb[0]):.2f}")
+          f"single-device PD {float(ref.objective):.2f}   "
+          f"LB {float(lb[0]):.2f}")
     assert float(lb[0]) <= obj + 1e-3, "LB must bound any feasible solution"
     print("OK: LB <= distributed objective (certificate holds)")
 

@@ -1,51 +1,62 @@
-"""Quickstart: solve a multicut instance with the RAMA primal-dual solver.
+"""Quickstart: solve a multicut instance with the unified RAMA solver API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a random signed graph, runs the paper's three solver modes and the
-GAEC baseline, and prints objectives, the dual lower bound and the
-primal-dual gap."""
+Builds a random signed graph, runs the paper's solver modes through
+``repro.api`` (one device-resident executable per mode), a vmapped batch
+solve, and the GAEC baseline, and prints objectives, the dual lower bound
+and the primal-dual gap."""
 import sys
 
 sys.path.insert(0, "src")
 
+from repro import api
 from repro.core.baselines import gaec, objective
 from repro.core.graph import random_instance
-from repro.core.solver import SolverConfig, solve_dual, solve_p, solve_pd
 
 
 def main():
     inst = random_instance(n=200, p=0.08, seed=0, pad_edges=4096,
                            pad_nodes=256)
-    cfg = SolverConfig(max_neg=1024, max_tri_per_edge=8, mp_iters=10)
-    opt = SolverConfig(max_neg=1024, max_tri_per_edge=8, mp_iters=10,
-                       contract_frac=0.5, max_rounds=40)
+    cfg = api.SolverConfig(max_neg=1024, max_tri_per_edge=8, mp_iters=10)
 
     print("== RAMA quickstart: 200-node random signed graph ==")
-    res_p = solve_p(inst, cfg)
-    print(f"P   (primal only)     objective {res_p.objective:10.3f}   "
-          f"rounds {res_p.rounds}")
+    res_p = api.solve(inst, mode="p", config=cfg)
+    print(f"P   (primal only)     objective {float(res_p.objective):10.3f}   "
+          f"rounds {int(res_p.rounds)}")
 
-    res_pd = solve_pd(inst, cfg)
-    gap = res_pd.objective - res_pd.lower_bound
-    print(f"PD  (primal-dual)     objective {res_pd.objective:10.3f}   "
-          f"LB {res_pd.lower_bound:10.3f}   gap {gap:.3f}")
+    res_pd = api.solve(inst, mode="pd", config=cfg)
+    gap = float(res_pd.objective) - float(res_pd.lower_bound)
+    print(f"PD  (primal-dual)     objective {float(res_pd.objective):10.3f}   "
+          f"LB {float(res_pd.lower_bound):10.3f}   gap {gap:.3f}")
 
-    res_pdp = solve_pd(inst, cfg, plus=True)
-    print(f"PD+ (5-cycles always) objective {res_pdp.objective:10.3f}")
-    # the contract_frac=0.5 'PD-opt' variant (see benchmarks/table1) helps on
+    res_pdp = api.solve(inst, mode="pd+", config=cfg)
+    print(f"PD+ (5-cycles always) objective {float(res_pdp.objective):10.3f}")
+    # the contract_frac=0.5 'pd-opt' preset (see benchmarks/table1) helps on
     # structured grids; ER graphs do better with the paper configuration
 
-    _, lb, per_round = solve_dual(inst, cfg)
-    print(f"D   (dual only)       LB {lb:10.3f}   per-round {['%.1f' % x for x in per_round]}")
+    res_d = api.solve(inst, mode="d", config=cfg)
+    per_round = ["%.1f" % x for x in res_d.lb_history.tolist()]
+    print(f"D   (dual only)       LB {float(res_d.lower_bound):10.3f}   "
+          f"per-round {per_round}")
 
     g = objective(inst, gaec(inst))
     print(f"GAEC (CPU baseline)   objective {g:10.3f}")
 
     n_clusters = len(set(res_pd.labels.tolist()))
     print(f"\nPD found {n_clusters} clusters; certificate: solution is within "
-          f"{gap:.3f} ({abs(gap / max(abs(res_pd.objective), 1e-9)) * 100:.1f}%) "
+          f"{gap:.3f} ({abs(gap / max(abs(float(res_pd.objective)), 1e-9)) * 100:.1f}%) "
           f"of the optimum.")
+
+    # batched serving path: one vmapped executable over a stacked batch
+    insts = [random_instance(n=200, p=0.08, seed=s, pad_edges=4096,
+                             pad_nodes=256) for s in range(4)]
+    batch = api.stack_instances(insts)
+    mc = api.Multicut.from_preset("paper-pd")
+    res_b = mc.solve_batch(batch)
+    objs = ", ".join(f"{o:.1f}" for o in res_b.objective.tolist())
+    print(f"\nbatched solve of {len(insts)} instances (one executable): "
+          f"objectives [{objs}]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,231 @@
+"""Unified multicut solver API: one device-resident, vmap-able entrypoint.
+
+All four paper variants (P / PD / PD+ / D) sit behind a single
+:func:`solve` driven by :class:`SolverConfig`, with named presets and a
+backend selector for the message-passing sweep:
+
+    from repro import api
+
+    res = api.solve(inst)                          # paper PD defaults
+    res = api.solve(inst, mode="d")                # dual-only lower bound
+    res = api.solve(inst, preset="pd-opt")         # named preset
+    res = api.solve(inst, backend="pallas")        # kernel-backed MP sweep
+
+    mc = api.Multicut.from_preset("paper-pd+")
+    res = mc.solve(inst)
+
+    batch = api.stack_instances([inst0, inst1, ...])
+    results = mc.solve_batch(batch)                # one vmapped executable
+
+Every entrypoint returns a :class:`SolveResult` of device arrays — the
+full solve (outer rounds included) is one compiled executable, and the
+only host synchronisation happens when the caller reads the result.
+Compiled callables are cached per (mode, config, backend), so repeated
+solves over same-shaped instances never retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import MulticutInstance, make_instance
+from repro.core.solver import (
+    BACKENDS, MODES, SolveResult, SolverConfig, resolve_sweep, solve_device,
+)
+
+__all__ = [
+    "BACKENDS", "MODES", "Multicut", "MulticutInstance", "Preset", "PRESETS",
+    "SolveResult", "SolverConfig", "get_preset", "list_presets",
+    "make_instance", "register_preset", "solve", "solve_batch",
+    "stack_instances", "unstack_results",
+]
+
+
+# ---------------------------------------------------------------------------
+# Preset registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """A named (mode, config) pair. Frozen + hashable, like SolverConfig."""
+    name: str
+    mode: str
+    config: SolverConfig
+    description: str = ""
+
+
+PRESETS: dict[str, Preset] = {}
+
+
+def register_preset(preset: Preset, overwrite: bool = False) -> Preset:
+    if preset.mode not in MODES:
+        raise ValueError(f"preset {preset.name!r}: unknown mode "
+                         f"{preset.mode!r}; expected one of {MODES}")
+    if preset.name in PRESETS and not overwrite:
+        raise ValueError(f"preset {preset.name!r} already registered")
+    PRESETS[preset.name] = preset
+    return preset
+
+
+def get_preset(name: str) -> Preset:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; available: "
+                       f"{sorted(PRESETS)}") from None
+
+
+def list_presets() -> list[str]:
+    return sorted(PRESETS)
+
+
+_PAPER = SolverConfig()
+for _p in (
+    Preset("paper-p", "p", _PAPER,
+           "purely primal contraction (paper's P)"),
+    Preset("paper-pd", "pd", _PAPER,
+           "interleaved primal-dual, 5-cycles on the original graph"),
+    Preset("paper-pd+", "pd+", _PAPER,
+           "primal-dual with 5-cycle separation every round"),
+    Preset("paper-d", "d", _PAPER,
+           "dual-only lower bound (paper's D)"),
+    Preset("pd-opt", "pd",
+           dataclasses.replace(_PAPER, contract_frac=0.5, max_rounds=40),
+           "beyond-paper GAEC-conservative PD (contract_frac=0.5)"),
+):
+    register_preset(_p)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-executable cache
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool):
+    """One jitted callable per (mode, config, backend, batched) — the
+    executable registry behind every public entrypoint."""
+    sweep = resolve_sweep(backend)
+
+    if not batched:
+        # route through solver.solve_device_jit so the API and the legacy
+        # shims share one compile cache per (mode, cfg, sweep)
+        from repro.core.solver import solve_device_jit
+
+        def run_single(inst: MulticutInstance) -> SolveResult:
+            return solve_device_jit(inst, mode=mode, cfg=cfg, sweep=sweep)
+
+        return run_single
+
+    def run(inst: MulticutInstance) -> SolveResult:
+        return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep)
+
+    return jax.jit(jax.vmap(run))
+
+
+def _normalize(mode, config, backend, preset):
+    if preset is not None:
+        p = get_preset(preset) if isinstance(preset, str) else preset
+        mode = p.mode if mode is None else mode
+        config = p.config if config is None else config
+    mode = "pd" if mode is None else mode
+    config = SolverConfig() if config is None else config
+    if backend is None:
+        backend = "pallas" if config.use_pallas_sweep else "reference"
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    return mode, config, backend
+
+
+# ---------------------------------------------------------------------------
+# Functional entrypoints
+# ---------------------------------------------------------------------------
+
+def solve(inst: MulticutInstance, mode: str | None = None,
+          config: SolverConfig | None = None, backend: str | None = None,
+          preset: str | Preset | None = None) -> SolveResult:
+    """Solve one multicut instance. The whole solve — separation, message
+    passing, contraction, outer rounds — is a single device executable."""
+    mode, config, backend = _normalize(mode, config, backend, preset)
+    return _compiled(mode, config, backend, batched=False)(inst)
+
+
+def solve_batch(batch: MulticutInstance, mode: str | None = None,
+                config: SolverConfig | None = None,
+                backend: str | None = None,
+                preset: str | Preset | None = None) -> SolveResult:
+    """Solve a stacked batch of same-shape instances with one vmapped
+    executable. ``batch`` is a MulticutInstance whose every leaf carries a
+    leading batch axis (see :func:`stack_instances`); the returned
+    SolveResult is batched the same way (see :func:`unstack_results`)."""
+    mode, config, backend = _normalize(mode, config, backend, preset)
+    return _compiled(mode, config, backend, batched=True)(batch)
+
+
+def stack_instances(instances: list[MulticutInstance]) -> MulticutInstance:
+    """Stack same-shape instances along a new leading batch axis."""
+    if not instances:
+        raise ValueError("need at least one instance")
+    shapes = {(i.num_nodes, i.num_edges) for i in instances}
+    if len(shapes) > 1:
+        raise ValueError(f"instances must share padded shapes; got {shapes} "
+                         "(re-pad with make_instance(pad_nodes=, pad_edges=))")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *instances)
+
+
+def unstack_results(batched: SolveResult) -> list[SolveResult]:
+    """Split a batched SolveResult back into per-instance results."""
+    B = batched.labels.shape[0]
+    return [jax.tree.map(lambda x: x[b], batched) for b in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+class Multicut:
+    """Device-resident multicut solver bound to a (mode, config, backend).
+
+    Thin, stateless facade over :func:`solve` / :func:`solve_batch`; the
+    compiled executables live in the module-level cache, so constructing
+    facades is free and two facades with equal settings share executables.
+    """
+
+    def __init__(self, mode: str = "pd",
+                 config: SolverConfig | None = None,
+                 backend: str = "reference"):
+        self.mode, self.config, self.backend = _normalize(
+            mode, config, backend, preset=None)
+
+    @classmethod
+    def from_preset(cls, name: str | Preset,
+                    backend: str = "reference") -> "Multicut":
+        p = get_preset(name) if isinstance(name, str) else name
+        return cls(mode=p.mode, config=p.config, backend=backend)
+
+    def replace(self, **kwargs) -> "Multicut":
+        """New facade with some settings replaced; config fields (e.g.
+        ``mp_iters=8``) are forwarded to ``dataclasses.replace`` on it."""
+        cfg_fields = {f.name for f in dataclasses.fields(SolverConfig)}
+        cfg_kw = {k: kwargs.pop(k) for k in list(kwargs) if k in cfg_fields}
+        new = dict(mode=self.mode, backend=self.backend,
+                   config=dataclasses.replace(self.config, **cfg_kw))
+        new.update(kwargs)
+        return Multicut(**new)
+
+    def solve(self, inst: MulticutInstance) -> SolveResult:
+        return solve(inst, mode=self.mode, config=self.config,
+                     backend=self.backend)
+
+    def solve_batch(self, batch: MulticutInstance) -> SolveResult:
+        return solve_batch(batch, mode=self.mode, config=self.config,
+                           backend=self.backend)
+
+    def __repr__(self):
+        return (f"Multicut(mode={self.mode!r}, backend={self.backend!r}, "
+                f"config={self.config})")

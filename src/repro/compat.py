@@ -1,0 +1,31 @@
+"""Version-compatibility shims for the moving parts of the JAX API.
+
+``shard_map`` has lived in three places across JAX releases:
+
+  * ``jax.experimental.shard_map.shard_map``  (0.4.x)
+  * ``jax.shard_map``                         (0.6+)
+
+and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+Everything in this repo imports :func:`shard_map` from here and passes
+``check_vma``; the wrapper translates to whatever the installed JAX expects.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # old home (jax <= 0.5)
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # new home (jax >= 0.6)
+    from jax import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KWARG = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """`jax.shard_map` with the replication-check kwarg normalised."""
+    if check_vma is not None and _CHECK_KWARG is not None:
+        kwargs[_CHECK_KWARG] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

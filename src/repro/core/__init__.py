@@ -12,7 +12,10 @@ from repro.core.message_passing import (
     MPState, init_mp, run_message_passing, lower_bound, mp_sweep_reference,
     triangle_min_marginals, reparametrized_costs,
 )
-from repro.core.solver import SolverConfig, SolveResult, solve_p, solve_pd, solve_dual
+from repro.core.solver import (
+    SolverConfig, SolveResult, fused_pd_round, solve_device, solve_p,
+    solve_pd, solve_dual,
+)
 
 __all__ = [
     "MulticutInstance", "make_instance", "random_instance", "grid_instance",
@@ -21,6 +24,6 @@ __all__ = [
     "adjacency_dense", "contract_dense", "build_dense", "separate",
     "separate_triangles", "MPState", "init_mp", "run_message_passing",
     "lower_bound", "mp_sweep_reference", "triangle_min_marginals",
-    "reparametrized_costs", "SolverConfig", "SolveResult", "solve_p",
-    "solve_pd", "solve_dual",
+    "reparametrized_costs", "SolverConfig", "SolveResult", "fused_pd_round",
+    "solve_device", "solve_p", "solve_pd", "solve_dual",
 ]

@@ -22,31 +22,25 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.contraction import choose_contraction_set, contract
-from repro.core.cycles import separate
+from repro.compat import shard_map
+
 from repro.core.graph import MulticutInstance
-from repro.core.message_passing import init_mp, run_message_passing
+from repro.core.solver import SolverConfig, fused_pd_round
 
 
 def local_pd_round(u, v, cost, edge_valid, node_valid, *, mp_iters: int,
                    max_neg: int, max_tri_per_edge: int):
-    """One PD round on a single block. All arrays carry a leading block axis
-    of size 1 inside shard_map."""
+    """One PD round on a single block — the same fused separation → message
+    passing → contraction unit the single-device solver loops over. All
+    arrays carry a leading block axis of size 1 inside shard_map."""
     inst = MulticutInstance(u=u[0], v=v[0], cost=cost[0],
                             edge_valid=edge_valid[0],
                             node_valid=node_valid[0])
-    sep = separate(inst, max_neg=max_neg, max_tri_per_edge=max_tri_per_edge,
-                   with_cycles45=False)
-    inst2 = sep.instance
-    state = init_mp(sep.triangles)
-    state, c_rep, lb = run_message_passing(inst2.cost, inst2.edge_valid,
-                                           state, mp_iters)
-    inst3 = inst2._replace(cost=c_rep)
-    S = choose_contraction_set(inst3)
-    res = contract(inst3, S)
+    cfg = SolverConfig(mp_iters=mp_iters, max_neg=max_neg,
+                       max_tri_per_edge=max_tri_per_edge)
+    res, lb = fused_pd_round(inst, cfg, with45=False)
     out = res.instance
     return (out.u[None], out.v[None], out.cost[None], out.edge_valid[None],
             out.node_valid[None], res.mapping[None], lb[None])

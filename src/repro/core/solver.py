@@ -9,15 +9,30 @@
   D   — dual only: separation + message passing on the original graph,
         producing the lower bound.
 
-The outer loop runs at the Python level over a *fixed-shape* instance (the
-padded arrays never change size; contraction shrinks the set of valid
-nodes/edges), so each round hits the same jitted executable.
+The whole solve is DEVICE-RESIDENT: one jitted executable per
+(mode, config, sweep) combination. The outer recursion runs as a
+``jax.lax.while_loop`` over the fixed-shape padded instance (the padded
+arrays never change size; contraction shrinks the set of valid
+nodes/edges), with early exit driven by the carried contraction count —
+no host round-trips inside the loop, and history is accumulated into
+stacked per-round arrays written in place. The only host synchronisation
+happens when the caller reads the returned :class:`SolveResult`.
+
+Because every step is a pure fixed-shape jaxpr, the solve composes with
+``jax.vmap`` over a leading instance-batch axis (see
+:func:`repro.api.solve_batch`) and with ``shard_map`` (see
+:mod:`repro.core.dist`).
+
+The free functions ``solve_p`` / ``solve_pd`` / ``solve_dual`` are kept as
+thin deprecated shims over the unified entrypoint; new code should use
+:mod:`repro.api`.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -25,14 +40,19 @@ import jax.numpy as jnp
 from repro.core.contraction import choose_contraction_set, contract
 from repro.core.cycles import separate
 from repro.core.graph import MulticutInstance
-from repro.core.message_passing import (
-    init_mp, run_message_passing, lower_bound,
-)
+from repro.core.message_passing import init_mp, run_message_passing
+
+MODES = ("p", "pd", "pd+", "d")
+BACKENDS = ("reference", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    """RAMA solver hyper-parameters (paper defaults in brackets)."""
+    """RAMA solver hyper-parameters (paper defaults in brackets).
+
+    Hashable + frozen so a config can serve as a jit static argument — each
+    distinct config keys its own compiled executable.
+    """
     max_rounds: int = 16            # outer PD rounds
     mp_iters: int = 5               # k message-passing iterations per round
     max_neg: int = 256              # repulsive edges separated per round
@@ -44,24 +64,226 @@ class SolverConfig:
     forest_rounds: int = 4
     switch_frac: float = 0.1
     contract_frac: float = 0.0      # GAEC-like conservatism (0 = paper)
-    use_pallas_sweep: bool = False  # route the MP sweep through the kernel
+    dual_rounds: int = 4            # D: separation+MP rounds
+    use_pallas_sweep: bool = False  # deprecated: pass backend="pallas" instead
 
 
-@dataclasses.dataclass
-class SolveResult:
-    labels: jax.Array           # (N,) final cluster id per original node
-    objective: float            # primal multicut objective on the original
-    lower_bound: float          # dual LB (PD/D; -inf for P)
-    rounds: int
-    history: list               # per-round dicts (diagnostics)
+class SolveResult(NamedTuple):
+    """Solve output. A NamedTuple of arrays, i.e. a pytree — it passes
+    transparently through ``jit``/``vmap`` (under :func:`repro.api.solve_batch`
+    every leaf gains a leading batch axis).
+
+    History is stacked per-round arrays of static length ``max_rounds``
+    (P/PD/PD+) or ``dual_rounds`` (D); slots past ``rounds`` keep their
+    initial values (lb = -inf, counts = 0).
+    """
+    labels: jax.Array        # (N,) final cluster id per original node
+    objective: jax.Array     # () primal objective on the original (+inf for D)
+    lower_bound: jax.Array   # () dual LB (PD/PD+/D; -inf for P)
+    rounds: jax.Array        # () i32: rounds actually run
+    lb_history: jax.Array    # (R,) f32 per-round dual LB
+    n_contracted: jax.Array  # (R,) i32 edges contracted per round
+    n_clusters: jax.Array    # (R,) i32 live clusters after each round
+
+    @property
+    def history(self) -> list:
+        """Legacy diagnostics view: per-round dicts rebuilt from the stacked
+        arrays. Syncs to host; single-instance results only (not batched)."""
+        r = int(self.rounds)
+        return [{"round": i, "lb": float(self.lb_history[i]),
+                 "n_contracted": int(self.n_contracted[i]),
+                 "n_clusters": int(self.n_clusters[i])} for i in range(r)]
 
 
-def _sweep_fn(cfg: SolverConfig):
-    if cfg.use_pallas_sweep:
+def resolve_sweep(backend: str | None, cfg: SolverConfig | None = None):
+    """Map a backend name to the triangle-sweep implementation.
+
+    ``None`` defers to the deprecated ``cfg.use_pallas_sweep`` flag (kept so
+    pre-API configs keep routing through the kernel)."""
+    if backend is None:
+        backend = "pallas" if (cfg is not None and cfg.use_pallas_sweep) \
+            else "reference"
+    if backend == "pallas":
         from repro.kernels.triangle_mp.ops import mp_sweep
         return mp_sweep
-    return None
+    if backend == "reference":
+        return None     # run_message_passing falls back to the jnp oracle
+    raise ValueError(f"unknown backend {backend!r}; expected one of "
+                     f"{BACKENDS}")
 
+
+# ---------------------------------------------------------------------------
+# Round primitives (pure, traceable; shapes in == shapes out)
+# ---------------------------------------------------------------------------
+
+def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
+                     with45: bool, sweep=None):
+    """One separation + message-passing round. Returns (inst', c_rep, lb)."""
+    sep = separate(inst, max_neg=cfg.max_neg,
+                   max_tri_per_edge=cfg.max_tri_per_edge,
+                   with_cycles45=with45, nbr_k=cfg.nbr_k)
+    inst2 = sep.instance
+    state = init_mp(sep.triangles)
+    state, c_rep, lb = run_message_passing(
+        inst2.cost, inst2.edge_valid, state, cfg.mp_iters, sweep=sweep)
+    return inst2, c_rep, lb
+
+
+def _primal_round_core(inst: MulticutInstance, cfg: SolverConfig):
+    S = choose_contraction_set(inst, matching_rounds=cfg.matching_rounds,
+                               forest_rounds=cfg.forest_rounds,
+                               switch_frac=cfg.switch_frac,
+                               contract_frac=cfg.contract_frac)
+    return contract(inst, S)
+
+
+def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
+                   with45: bool, sweep=None):
+    """Alg. 3 lines 3–8 as one traceable unit: separation → message passing
+    → reparametrize → contract. Returns (ContractionResult, lb). Input and
+    output instances share shapes, so the outer while_loop carries it."""
+    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep)
+    res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
+    return res, lb
+
+
+# ---------------------------------------------------------------------------
+# Device-resident solves (one executable per mode; no host sync inside)
+# ---------------------------------------------------------------------------
+
+def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
+    """Purely primal Algorithm 1 loop (paper's P)."""
+    N, R = inst.num_nodes, cfg.max_rounds
+    mapping0 = jnp.arange(N, dtype=jnp.int32)
+    hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32)
+    hist_nc = jnp.zeros((R,), dtype=jnp.int32)
+    hist_nk = jnp.zeros((R,), dtype=jnp.int32)
+
+    def cond(carry):
+        r, _, _, nc_last, _, _ = carry
+        return (r < R) & (nc_last != 0)
+
+    def body(carry):
+        r, cur, mapping, _, hist_nc, hist_nk = carry
+        res = _primal_round_core(cur, cfg)
+        nc = res.n_contracted.astype(jnp.int32)
+        hist_nc = hist_nc.at[r].set(nc)
+        hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
+        return (r + 1, res.instance, res.mapping[mapping], nc,
+                hist_nc, hist_nk)
+
+    init = (jnp.int32(0), inst, mapping0, jnp.int32(1), hist_nc, hist_nk)
+    r, _, mapping, _, hist_nc, hist_nk = jax.lax.while_loop(cond, body, init)
+    return SolveResult(labels=mapping, objective=inst.objective(mapping),
+                       lower_bound=jnp.float32(-jnp.inf), rounds=r,
+                       lb_history=hist_lb, n_contracted=hist_nc,
+                       n_clusters=hist_nk)
+
+
+def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
+                     sweep=None) -> SolveResult:
+    """Interleaved primal-dual Algorithm 3 (paper's PD / PD+).
+
+    Round 0 runs outside the while_loop: it may use 4/5-cycle separation
+    (a different — still static — trace than later rounds) and its LB is the
+    one computed on the original graph, hence the only globally valid one.
+    """
+    N, R = inst.num_nodes, cfg.max_rounds
+    mapping0 = jnp.arange(N, dtype=jnp.int32)
+    with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
+    with45_rest = cfg.always_cycles45 or plus
+
+    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep)
+    nc0 = res0.n_contracted.astype(jnp.int32)
+    hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
+    hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
+    hist_nk = jnp.zeros((R,), dtype=jnp.int32).at[0].set(
+        res0.n_new.astype(jnp.int32))
+    mapping = res0.mapping[mapping0]
+
+    def cond(carry):
+        r, _, _, nc_last, _, _, _ = carry
+        return (r < R) & (nc_last != 0)
+
+    def body(carry):
+        r, cur, mapping, _, hist_lb, hist_nc, hist_nk = carry
+        res, lb = fused_pd_round(cur, cfg, with45_rest, sweep)
+        nc = res.n_contracted.astype(jnp.int32)
+        hist_lb = hist_lb.at[r].set(lb)
+        hist_nc = hist_nc.at[r].set(nc)
+        hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
+        return (r + 1, res.instance, res.mapping[mapping], nc,
+                hist_lb, hist_nc, hist_nk)
+
+    init = (jnp.int32(1), res0.instance, mapping, nc0,
+            hist_lb, hist_nc, hist_nk)
+    r, _, mapping, _, hist_lb, hist_nc, hist_nk = \
+        jax.lax.while_loop(cond, body, init)
+    return SolveResult(labels=mapping, objective=inst.objective(mapping),
+                       lower_bound=lb0, rounds=r, lb_history=hist_lb,
+                       n_contracted=hist_nc, n_clusters=hist_nk)
+
+
+def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None):
+    """Dual-only solver (paper's D): repeated separation + MP on the original
+    graph; LB is monotone across rounds. Returns (SolveResult, final inst).
+
+    LB accounting across rounds: for any multicut y,
+      ⟨c, y⟩ = ⟨c^rep_1, y⟩ + Σ_t ⟨c_t, y_t⟩ ≥ ⟨c^rep_1, y⟩ + triLB_1,
+    and recursively for later rounds on the reparametrized costs, so
+      LB_total = Σ_r triLB_r + Σ_e min(0, c^rep_final).
+    run_message_passing returns lb_r = edgeLB_r + triLB_r; we split out the
+    edge part each round and keep only the final one. (Validity of
+    LB_total ≤ OPT is asserted against brute force in tests/test_solver.py.)
+    """
+    R = cfg.dual_rounds
+
+    def body(carry, _):
+        cur, tri_lb_sum = carry
+        cur2, c_rep, lb = _dual_round_core(cur, cfg, True, sweep)
+        edge_lb = jnp.sum(jnp.where(cur2.edge_valid,
+                                    jnp.minimum(0.0, c_rep), 0.0))
+        tri_lb_sum = tri_lb_sum + (lb - edge_lb)
+        return (cur2._replace(cost=c_rep), tri_lb_sum), tri_lb_sum + edge_lb
+
+    (final, _), per_round = jax.lax.scan(body, (inst, jnp.float32(0.0)),
+                                         None, length=R)
+    N = inst.num_nodes
+    n_nodes = jnp.sum(inst.node_valid).astype(jnp.int32)
+    res = SolveResult(labels=jnp.arange(N, dtype=jnp.int32),
+                      objective=jnp.float32(jnp.inf),
+                      lower_bound=per_round[-1], rounds=jnp.int32(R),
+                      lb_history=per_round,
+                      n_contracted=jnp.zeros((R,), dtype=jnp.int32),
+                      n_clusters=jnp.broadcast_to(n_nodes, (R,)))
+    return res, final
+
+
+def solve_device(inst: MulticutInstance, mode: str = "pd",
+                 cfg: SolverConfig = SolverConfig(),
+                 sweep=None) -> SolveResult:
+    """The unified, pure, traceable solve: dispatches on the (static) mode.
+    Safe to wrap in ``jax.jit`` / ``jax.vmap`` / ``shard_map``; prefer the
+    cached entrypoints in :mod:`repro.api`."""
+    if mode == "p":
+        return _solve_p_device(inst, cfg)
+    if mode == "pd":
+        return _solve_pd_device(inst, cfg, plus=False, sweep=sweep)
+    if mode == "pd+":
+        return _solve_pd_device(inst, cfg, plus=True, sweep=sweep)
+    if mode == "d":
+        return _solve_d_device(inst, cfg, sweep)[0]
+    raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+
+
+solve_device_jit = jax.jit(solve_device,
+                           static_argnames=("mode", "cfg", "sweep"))
+_solve_d_jit = jax.jit(_solve_d_device, static_argnames=("cfg", "sweep"))
+
+
+# ---------------------------------------------------------------------------
+# Legacy round entrypoints (kept for configs/rama_multicut.py and dist.py)
+# ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("mp_iters", "max_neg", "max_tri_per_edge",
                                    "nbr_k", "with_cycles45", "sweep",
@@ -92,93 +314,40 @@ def _primal_round(inst: MulticutInstance, matching_rounds: int,
     return contract(inst, S)
 
 
-def solve_p(inst: MulticutInstance, cfg: SolverConfig = SolverConfig()):
-    """Purely primal Algorithm 1 loop (paper's P)."""
-    N = inst.num_nodes
-    mapping = jnp.arange(N, dtype=jnp.int32)
-    original = inst
-    history = []
-    rounds = 0
-    for _ in range(cfg.max_rounds):
-        res = _primal_round(inst, cfg.matching_rounds, cfg.forest_rounds,
-                            cfg.switch_frac, cfg.contract_frac)
-        n_contracted = int(res.n_contracted)
-        history.append({"n_contracted": n_contracted,
-                        "n_clusters": int(res.n_new),
-                        "gain": float(res.self_loop_gain)})
-        rounds += 1
-        if n_contracted == 0:
-            break
-        mapping = res.mapping[mapping]
-        inst = res.instance
-    obj = float(original.objective(mapping))
-    return SolveResult(labels=mapping, objective=obj,
-                       lower_bound=float("-inf"), rounds=rounds,
-                       history=history)
+def _sweep_fn(cfg: SolverConfig):
+    return resolve_sweep(None, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims (use repro.api instead)
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, new: str):
+    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
+                  stacklevel=3)
+
+
+def solve_p(inst: MulticutInstance,
+            cfg: SolverConfig = SolverConfig()) -> SolveResult:
+    """Deprecated shim: use ``repro.api.solve(inst, mode='p')``."""
+    _warn_deprecated("solve_p", "repro.api.solve(inst, mode='p')")
+    return solve_device_jit(inst, mode="p", cfg=cfg,
+                            sweep=resolve_sweep(None, cfg))
+
+
+def solve_pd(inst: MulticutInstance, cfg: SolverConfig = SolverConfig(),
+             plus: bool = False) -> SolveResult:
+    """Deprecated shim: use ``repro.api.solve(inst, mode='pd'|'pd+')``."""
+    _warn_deprecated("solve_pd", "repro.api.solve(inst, mode='pd')")
+    return solve_device_jit(inst, mode="pd+" if plus else "pd", cfg=cfg,
+                            sweep=resolve_sweep(None, cfg))
 
 
 def solve_dual(inst: MulticutInstance, cfg: SolverConfig = SolverConfig(),
                rounds: int = 4):
-    """Dual-only solver (paper's D): repeated separation + MP on the original
-    graph; LB is monotone across rounds (each round only adds subproblems
-    and re-optimises the same relaxation)."""
-    sweep = _sweep_fn(cfg)
-    # LB accounting across rounds: for any multicut y,
-    #   ⟨c, y⟩ = ⟨c^rep_1, y⟩ + Σ_t ⟨c_t, y_t⟩ ≥ ⟨c^rep_1, y⟩ + triLB_1,
-    # and recursively for later rounds on the reparametrized costs, so
-    #   LB_total = Σ_r triLB_r + Σ_e min(0, c^rep_final).
-    # run_message_passing returns lb_r = edgeLB_r + triLB_r; we split out the
-    # edge part each round and keep only the final one.
-    tri_lb_sum = 0.0
-    edge_lb = float("-inf")
-    per_round = []
-    cur = inst
-    for r in range(rounds):
-        cur, c_rep, lb = _dual_round(
-            cur, cfg.mp_iters, cfg.max_neg, cfg.max_tri_per_edge, cfg.nbr_k,
-            True, sweep)
-        edge_lb = float(jnp.sum(jnp.where(cur.edge_valid,
-                                          jnp.minimum(0.0, c_rep), 0.0)))
-        tri_lb_sum += float(lb) - edge_lb
-        per_round.append(tri_lb_sum + edge_lb)
-        cur = cur._replace(cost=c_rep)
-    lb_total = per_round[-1] if per_round else float("-inf")
-    # validity of LB_total ≤ OPT is asserted against brute force in
-    # tests/test_solver.py.
-    return cur, lb_total, per_round
-
-
-def solve_pd(inst: MulticutInstance, cfg: SolverConfig = SolverConfig(),
-             plus: bool = False):
-    """Interleaved primal-dual Algorithm 3 (paper's PD / PD+)."""
-    sweep = _sweep_fn(cfg)
-    N = inst.num_nodes
-    mapping = jnp.arange(N, dtype=jnp.int32)
-    original = inst
-    history = []
-    lb = float("-inf")
-    rounds = 0
-    cur = inst
-    for r in range(cfg.max_rounds):
-        with45 = cfg.always_cycles45 or plus or \
-            (cfg.first_round_cycles45 and r == 0)
-        cur2, c_rep, lb_r = _dual_round(
-            cur, cfg.mp_iters, cfg.max_neg, cfg.max_tri_per_edge, cfg.nbr_k,
-            with45, sweep)
-        if r == 0:
-            lb = float(lb_r)   # valid LB: computed on the original graph
-        cur2 = cur2._replace(cost=c_rep)   # line 6: reparametrize
-        res = _primal_round(cur2, cfg.matching_rounds, cfg.forest_rounds,
-                            cfg.switch_frac, cfg.contract_frac)
-        n_contracted = int(res.n_contracted)
-        history.append({"round": r, "lb": float(lb_r),
-                        "n_contracted": n_contracted,
-                        "n_clusters": int(res.n_new)})
-        rounds += 1
-        if n_contracted == 0:
-            break
-        mapping = res.mapping[mapping]
-        cur = res.instance
-    obj = float(original.objective(mapping))
-    return SolveResult(labels=mapping, objective=obj, lower_bound=lb,
-                       rounds=rounds, history=history)
+    """Deprecated shim: use ``repro.api.solve(inst, mode='d')``.
+    Returns the legacy (final instance, LB, per-round LB) triple."""
+    _warn_deprecated("solve_dual", "repro.api.solve(inst, mode='d')")
+    cfg = dataclasses.replace(cfg, dual_rounds=rounds)
+    res, final = _solve_d_jit(inst, cfg=cfg, sweep=resolve_sweep(None, cfg))
+    return final, res.lower_bound, res.lb_history

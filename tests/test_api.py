@@ -1,0 +1,224 @@
+"""Unified `repro.api` solver API: presets, mode/legacy equivalence,
+batched solves, and device-residency of the jitted solve."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import grid_instance, random_instance
+from repro.core.solver import (
+    SolverConfig, solve_device, solve_dual, solve_p, solve_pd,
+)
+
+CFG = SolverConfig(max_neg=128, max_tri_per_edge=8, nbr_k=8, mp_iters=8)
+
+
+def _insts():
+    out = [random_instance(14, 0.5, seed=s, pad_edges=128, pad_nodes=16)
+           for s in range(2)]
+    out.append(grid_instance(8, 8, seed=0, pad_edges=512))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (a) preset registry
+# ---------------------------------------------------------------------------
+
+def test_preset_registry_roundtrip():
+    for name in ("paper-p", "paper-pd", "paper-pd+", "paper-d", "pd-opt"):
+        p = api.get_preset(name)
+        assert p.name == name
+        assert p.mode in api.MODES
+        assert name in api.list_presets()
+
+    custom = api.Preset("test-tight", "pd",
+                        dataclasses.replace(SolverConfig(), mp_iters=17),
+                        "test preset")
+    api.register_preset(custom)
+    try:
+        assert api.get_preset("test-tight") is custom
+        with pytest.raises(ValueError):
+            api.register_preset(custom)           # duplicate without overwrite
+        api.register_preset(custom, overwrite=True)
+        mc = api.Multicut.from_preset("test-tight")
+        assert mc.mode == "pd" and mc.config.mp_iters == 17
+    finally:
+        api.PRESETS.pop("test-tight", None)
+
+
+def test_preset_modes_match_expected():
+    assert api.get_preset("paper-p").mode == "p"
+    assert api.get_preset("paper-pd+").mode == "pd+"
+    assert api.get_preset("paper-d").mode == "d"
+    assert api.get_preset("pd-opt").config.contract_frac == 0.5
+
+
+def test_bad_mode_backend_preset_raise():
+    inst = _insts()[0]
+    with pytest.raises(ValueError):
+        api.solve(inst, mode="qp")
+    with pytest.raises(ValueError):
+        api.solve(inst, backend="cuda")
+    with pytest.raises(KeyError):
+        api.get_preset("nonexistent")
+    with pytest.raises(ValueError):
+        api.register_preset(api.Preset("bad", "qp", SolverConfig()))
+
+
+# ---------------------------------------------------------------------------
+# (b) mode equivalence with the legacy free functions
+# ---------------------------------------------------------------------------
+
+def test_solve_matches_legacy_all_modes():
+    for inst in _insts():
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            rp = solve_p(inst, CFG)
+            rpd = solve_pd(inst, CFG)
+            rpdp = solve_pd(inst, CFG, plus=True)
+            _, lbd, per_round = solve_dual(inst, CFG)
+
+        ap = api.solve(inst, mode="p", config=CFG)
+        assert float(ap.objective) == pytest.approx(float(rp.objective),
+                                                    abs=1e-4)
+        assert np.asarray(ap.labels).tolist() == \
+            np.asarray(rp.labels).tolist()
+
+        apd = api.solve(inst, mode="pd", config=CFG)
+        assert float(apd.objective) == pytest.approx(float(rpd.objective),
+                                                     abs=1e-4)
+        assert float(apd.lower_bound) == pytest.approx(
+            float(rpd.lower_bound), abs=1e-4)
+
+        apdp = api.solve(inst, mode="pd+", config=CFG)
+        assert float(apdp.objective) == pytest.approx(float(rpdp.objective),
+                                                      abs=1e-4)
+
+        ad = api.solve(inst, mode="d", config=CFG)
+        assert float(ad.lower_bound) == pytest.approx(float(lbd), abs=1e-4)
+        np.testing.assert_allclose(np.asarray(ad.lb_history),
+                                   np.asarray(per_round), atol=1e-3)
+
+
+def test_preset_equals_explicit_mode_config():
+    inst = _insts()[0]
+    via_preset = api.solve(inst, preset="pd-opt")
+    explicit = api.solve(
+        inst, mode="pd",
+        config=dataclasses.replace(SolverConfig(), contract_frac=0.5,
+                                   max_rounds=40))
+    assert float(via_preset.objective) == float(explicit.objective)
+
+
+def test_backend_pallas_matches_reference():
+    inst = _insts()[0]
+    ref = api.solve(inst, mode="pd", config=CFG, backend="reference")
+    pal = api.solve(inst, mode="pd", config=CFG, backend="pallas")
+    assert float(pal.objective) == pytest.approx(float(ref.objective),
+                                                 abs=1e-3)
+    assert float(pal.lower_bound) == pytest.approx(float(ref.lower_bound),
+                                                   abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# (c) batched solve == loop of single solves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["p", "pd", "d"])
+def test_solve_batch_equals_single_solves(mode):
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(8)]
+    batch = api.stack_instances(insts)
+    rb = api.solve_batch(batch, mode=mode, config=CFG)
+    assert rb.labels.shape == (8, 16)
+    singles = [api.solve(i, mode=mode, config=CFG) for i in insts]
+    for b, s in enumerate(singles):
+        assert np.asarray(rb.labels)[b].tolist() == \
+            np.asarray(s.labels).tolist()
+        assert int(np.asarray(rb.rounds)[b]) == int(s.rounds)
+        np.testing.assert_allclose(np.asarray(rb.objective)[b],
+                                   np.asarray(s.objective), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(rb.lower_bound)[b],
+                                   np.asarray(s.lower_bound), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(rb.lb_history)[b],
+                                   np.asarray(s.lb_history), atol=1e-3)
+        assert np.asarray(rb.n_contracted)[b].tolist() == \
+            np.asarray(s.n_contracted).tolist()
+
+
+def test_unstack_results_roundtrip():
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(3)]
+    rb = api.solve_batch(api.stack_instances(insts), mode="pd", config=CFG)
+    parts = api.unstack_results(rb)
+    assert len(parts) == 3
+    assert parts[1].labels.shape == (16,)
+    assert float(parts[1].objective) == float(np.asarray(rb.objective)[1])
+
+
+def test_stack_instances_rejects_mixed_shapes():
+    a = random_instance(12, 0.5, seed=0, pad_edges=96, pad_nodes=16)
+    b = random_instance(12, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    with pytest.raises(ValueError):
+        api.stack_instances([a, b])
+
+
+# ---------------------------------------------------------------------------
+# device-residency: the whole solve is ONE executable, no host sync inside
+# ---------------------------------------------------------------------------
+
+def test_solve_is_device_resident_single_trace():
+    """The full solve traces under jit (a host float()/int() sync inside the
+    round loop would raise a ConcretizationTypeError) and same-shape
+    instances reuse one executable (trace body runs once)."""
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=8)
+    traces = []
+
+    @jax.jit
+    def run(inst):
+        traces.append(1)          # runs at trace time only
+        return solve_device(inst, mode="pd", cfg=cfg)
+
+    i1 = random_instance(10, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    i2 = random_instance(10, 0.5, seed=1, pad_edges=64, pad_nodes=16)
+    r1 = run(i1)
+    r2 = run(i2)
+    assert len(traces) == 1
+    assert float(r1.objective) != float(r2.objective)  # real distinct solves
+
+
+def test_solve_jaxpr_has_no_host_callbacks():
+    """No io_callback / pure_callback / debug_callback anywhere in the solve
+    jaxpr — the round loop never leaves the device."""
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=8)
+    inst = random_instance(10, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    jaxpr = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd", cfg=cfg))(inst)
+    assert "callback" not in str(jaxpr)
+
+
+def test_history_is_stacked_arrays():
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=8)
+    inst = random_instance(10, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    res = api.solve(inst, mode="pd", config=cfg)
+    assert res.lb_history.shape == (8,)
+    assert res.n_contracted.shape == (8,)
+    assert res.n_clusters.shape == (8,)
+    r = int(res.rounds)
+    assert 1 <= r <= 8
+    # slots past `rounds` keep init values
+    assert (np.asarray(res.n_contracted)[r:] == 0).all()
+    # round 0 carries the original-graph LB
+    assert float(np.asarray(res.lb_history)[0]) == float(res.lower_bound)
+
+
+def test_facade_replace():
+    mc = api.Multicut(mode="pd", config=CFG)
+    mc2 = mc.replace(mp_iters=3, mode="p")
+    assert mc2.mode == "p" and mc2.config.mp_iters == 3
+    assert mc.config.mp_iters == 8    # original untouched
+    inst = _insts()[0]
+    assert np.isfinite(float(mc2.solve(inst).objective))

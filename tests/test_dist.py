@@ -90,7 +90,10 @@ def test_lm_train_step_shards_on_debug_mesh():
         tok = jax.ShapeDtypeStruct((8, 16), jnp.int32)
         params_abs = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
         dshard = NamedSharding(mesh, P("data", None))
-        with jax.sharding.set_mesh(mesh):
+        # set_mesh only exists on newer jax; old Mesh is its own context
+        ctx = (jax.sharding.set_mesh(mesh)
+               if hasattr(jax.sharding, "set_mesh") else mesh)
+        with ctx:
             lowered = jax.jit(train_step,
                               in_shardings=(pshard, dshard, dshard)).lower(
                 params_abs, tok, tok)
@@ -125,5 +128,7 @@ def test_recsys_table_sharding_compiles():
                                               ishard["labels"])).lower(
             params, opt, ins["sparse_idx"], ins["dense_feats"], ins["labels"])
         compiled = lowered.compile()
-        print("ok", compiled.cost_analysis()["flops"])
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca   # old jax returns a list
+        print("ok", ca["flops"])
     """, devices=4)
