@@ -1,8 +1,8 @@
 """Paper Table 2: runtime breakdown of the PD algorithm phases —
-finding the contraction set S, contraction, conflicted-cycle separation,
-message passing. Each phase is timed as its own jitted executable on a
-Cityscapes-regime grid instance (same decomposition as the paper's
-profiler table)."""
+finding the contraction set S, contraction, conflicted-cycle separation
+(both graph_impl data paths), message passing. Each phase is timed as its
+own jitted executable on a Cityscapes-regime grid instance (same
+decomposition as the paper's profiler table)."""
 from __future__ import annotations
 
 import jax
@@ -26,8 +26,15 @@ def run(csv):
     t_contract, _ = timed(contract_j, inst, S)
 
     sep = jax.jit(lambda i: separate(i, max_neg=2048, max_tri_per_edge=8,
-                                     with_cycles45=True).triangles.edges)
+                                     with_cycles45=True,
+                                     graph_impl="dense").triangles.edges)
     t_sep, _ = timed(sep, inst)
+
+    sep_sparse = jax.jit(
+        lambda i: separate(i, max_neg=2048, max_tri_per_edge=8,
+                           with_cycles45=True,
+                           graph_impl="sparse").triangles.edges)
+    t_sep_sp, _ = timed(sep_sparse, inst)
 
     sep_res = separate(inst, max_neg=2048, max_tri_per_edge=8,
                        with_cycles45=True)
@@ -43,3 +50,7 @@ def run(csv):
                     ("message_passing", t_mp)]:
         csv.add("breakdown", name, "time_s", round(t, 4))
         csv.add("breakdown", name, "fraction", round(t / total, 3))
+    # the CSR path, same phase, outside the dense total (apples-to-apples
+    # row for the graph_impl decision at this N)
+    csv.add("breakdown", "conflicted_cycles_sparse", "time_s",
+            round(t_sep_sp, 4))

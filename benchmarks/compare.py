@@ -1,0 +1,91 @@
+"""Perf-trajectory compare: print deltas between two BENCH_solver.json
+files (fresh run vs the committed baseline,
+``benchmarks/BENCH_solver.baseline.json`` — refresh that snapshot whenever
+a PR intentionally moves the numbers).
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        benchmarks/BENCH_solver.baseline.json BENCH_solver.json
+
+Exits 0 always — the report is informational (CI prints it next to the
+uploaded artifact); wall-clock on shared CI runners is too noisy to gate
+on. Objective/LB deltas, however, are flagged loudly: those should only
+move when the algorithm changes on purpose.
+
+Handles both schemas: the pre-sparse flat per-mode layout and the current
+per-graph_impl nesting (a flat entry is treated as the "dense" path).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+GRAPH_IMPLS = ("dense", "sparse")
+
+
+def _normalize(report: dict) -> dict:
+    """-> {(mode, impl): entry} with flat legacy entries mapped to dense."""
+    out = {}
+    for mode, entry in report.get("modes", {}).items():
+        if any(k in entry for k in GRAPH_IMPLS):
+            for impl in GRAPH_IMPLS:
+                if impl in entry:
+                    out[(mode, impl)] = entry[impl]
+        else:
+            out[(mode, "dense")] = entry
+    return out
+
+
+def _fmt_delta(old, new, unit=""):
+    if old in (None, 0) or new is None:
+        return f"{old} -> {new}"
+    pct = 100.0 * (new - old) / abs(old)
+    return f"{old}{unit} -> {new}{unit} ({pct:+.1f}%)"
+
+
+def compare(baseline: dict, fresh: dict) -> list[str]:
+    lines = []
+    base = _normalize(baseline)
+    new = _normalize(fresh)
+    for key in sorted(set(base) | set(new)):
+        mode, impl = key
+        b, f = base.get(key), new.get(key)
+        if b is None:
+            lines.append(f"  {mode}/{impl}: NEW case")
+            continue
+        if f is None:
+            lines.append(f"  {mode}/{impl}: case DROPPED")
+            continue
+        lines.append(f"  {mode}/{impl}: wall "
+                     f"{_fmt_delta(b.get('wall_s'), f.get('wall_s'), 's')}")
+        if b.get("peak_mem_bytes") or f.get("peak_mem_bytes"):
+            lines.append(f"    peak_mem {_fmt_delta(b.get('peak_mem_bytes'), f.get('peak_mem_bytes'), 'B')}")
+        for metric in ("objective", "lower_bound"):
+            bv, fv = b.get(metric), f.get(metric)
+            if isinstance(bv, list) or isinstance(fv, list):
+                continue
+            # null means non-finite (smoke writes NaN/inf as null) — a
+            # finite<->non-finite flip is the loudest regression of all
+            if (bv is None) != (fv is None):
+                lines.append(f"    *** {metric} CHANGED: {bv} -> {fv}")
+            elif bv is not None and fv is not None and abs(bv - fv) > 1e-3:
+                lines.append(f"    *** {metric} CHANGED: {bv} -> {fv}")
+    return lines
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 2:
+        raise SystemExit("usage: python -m benchmarks.compare "
+                         "BASELINE.json FRESH.json")
+    with open(argv[0]) as fh:
+        baseline = json.load(fh)
+    with open(argv[1]) as fh:
+        fresh = json.load(fh)
+    print(f"perf trajectory: {argv[0]} -> {argv[1]} "
+          f"(backend {baseline.get('backend')} -> {fresh.get('backend')})")
+    for line in compare(baseline, fresh):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

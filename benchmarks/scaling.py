@@ -6,9 +6,17 @@ are a constant number of bulk data-parallel primitives. We report the
 fitted log-log slope per solver. (Wall-clock absolute numbers on a CPU
 container do not reproduce the paper's GPU speedups; the dry-run/roofline
 covers device-level throughput.)
+
+The sweep runs PD on both separation data paths (dense (N, N) vs CSR), and
+finishes with an XL grid that the dense path *cannot represent at all*:
+at N = 192·192 = 36 864 nodes the dense matrices would need
+N²·(4 + 1 + 4) ≈ 12.2 GiB — the CSR path's working set is O(N + E)
+(~0.5 GiB incl. XLA temps) and solves it outright. That instance is ~90×
+more nodes than the dense ceiling the seed capped out at.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -19,10 +27,23 @@ from repro.core.graph import grid_instance
 
 SIZES = [8, 12, 16, 24, 32]
 CFG = api.SolverConfig(max_neg=2048, mp_iters=5)
+XL_HW = 192                      # 36 864 nodes; dense (N, N) ≈ 12.2 GiB
+XL_CFG = api.SolverConfig(max_neg=256, mp_iters=3, max_rounds=8,
+                          graph_impl="sparse")
+
+
+def _timed_solve(inst, mode, cfg):
+    # warm the jit cache out-of-measurement at each new padded shape
+    api.solve(inst, mode=mode, config=cfg).labels.block_until_ready()
+    t0 = time.perf_counter()
+    res = api.solve(inst, mode=mode, config=cfg)
+    res.labels.block_until_ready()
+    return time.perf_counter() - t0, res
 
 
 def run(csv):
-    rows = {"GAEC": [], "P": [], "PD": []}
+    cfg_sparse = dataclasses.replace(CFG, graph_impl="sparse")
+    rows = {"GAEC": [], "P": [], "PD": [], "PD-sparse": []}
     edges = []
     for hw in SIZES:
         inst = grid_instance(hw, hw, seed=0)
@@ -31,15 +52,9 @@ def run(csv):
         t0 = time.perf_counter()
         gaec(inst)
         rows["GAEC"].append(time.perf_counter() - t0)
-        # warm the jit cache out-of-measurement at each new padded shape
-        api.solve(inst, mode="p", config=CFG).labels.block_until_ready()
-        t0 = time.perf_counter()
-        api.solve(inst, mode="p", config=CFG).labels.block_until_ready()
-        rows["P"].append(time.perf_counter() - t0)
-        api.solve(inst, mode="pd", config=CFG).labels.block_until_ready()
-        t0 = time.perf_counter()
-        api.solve(inst, mode="pd", config=CFG).labels.block_until_ready()
-        rows["PD"].append(time.perf_counter() - t0)
+        rows["P"].append(_timed_solve(inst, "p", CFG)[0])
+        rows["PD"].append(_timed_solve(inst, "pd", CFG)[0])
+        rows["PD-sparse"].append(_timed_solve(inst, "pd", cfg_sparse)[0])
         for name in rows:
             csv.add("scaling", f"{name}/E={n_edges}", "time_s",
                     round(rows[name][-1], 4))
@@ -47,3 +62,28 @@ def run(csv):
     for name, ts in rows.items():
         slope = np.polyfit(le, np.log(ts), 1)[0]
         csv.add("scaling", name, "loglog_slope", round(float(slope), 3))
+
+    run_xl(csv)
+
+
+def run_xl(csv, hw: int = XL_HW):
+    """The beyond-dense-ceiling solve (CSR path only — the dense matrices
+    at this size would not fit in memory, which is the point)."""
+    inst = grid_instance(hw, hw, seed=0)
+    n = hw * hw
+    n_edges = int(np.asarray(inst.edge_valid).sum())
+    dense_bytes = n * n * 9      # f32 A + bool Apos + int32 eidx
+    t0 = time.perf_counter()
+    api.solve(inst, mode="pd", config=XL_CFG).labels.block_until_ready()
+    cold = time.perf_counter() - t0          # compile + first solve
+    t0 = time.perf_counter()
+    res = api.solve(inst, mode="pd", config=XL_CFG)
+    obj = float(res.objective)   # blocks
+    wall = time.perf_counter() - t0          # warm, comparable to the sweep
+    csv.add("scaling", f"xl-sparse/N={n}", "edges", n_edges)
+    csv.add("scaling", f"xl-sparse/N={n}", "wall_s", round(wall, 2))
+    csv.add("scaling", f"xl-sparse/N={n}", "wall_cold_s", round(cold, 2))
+    csv.add("scaling", f"xl-sparse/N={n}", "objective", round(obj, 2))
+    csv.add("scaling", f"xl-sparse/N={n}", "rounds", int(res.rounds))
+    csv.add("scaling", f"xl-sparse/N={n}", "dense_matrices_would_need_GiB",
+            round(dense_bytes / 2 ** 30, 1))

@@ -1,15 +1,19 @@
 """Solver smoke benchmark: per-mode wall-clock + objective/LB on one small
 seeded instance, written to ``BENCH_solver.json`` so CI can track the perf
-trajectory across PRs.
+trajectory across PRs (see benchmarks/compare.py for the delta report).
 
     PYTHONPATH=src python -m benchmarks.run --smoke
 
-Each mode runs through :mod:`repro.api` — i.e. the timings measure the
-device-resident executable (compile excluded via one warmup), plus a
-batched PD solve to cover the vmapped path.
+Each mode is AOT-compiled once (`jit(...).lower(...).compile()`); the same
+executable serves the timed runs (compile excluded via one warmup) and the
+peak-memory estimate (XLA's ``temp_size_in_bytes``: the dense path carries
+the (N, N) matrices, the CSR path O(N + E)). Every mode is recorded for
+BOTH separation data paths (``graph_impl`` "dense" and "sparse"); a
+batched PD solve through :mod:`repro.api` covers the vmapped path.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 import platform
@@ -18,12 +22,36 @@ import jax
 
 from repro import api
 from repro.core.graph import random_instance
+from repro.core.solver import solve_device
 
 from benchmarks.common import timed
 
 SMOKE_CFG = api.SolverConfig(max_neg=512, max_tri_per_edge=8, nbr_k=8,
                              mp_iters=8)
 SMOKE_BATCH = 4
+GRAPH_IMPLS = ("dense", "sparse")
+
+
+def _finite(x):
+    x = float(x)
+    return x if math.isfinite(x) else None   # strict-JSON (no Infinity)
+
+
+def _compile_solve(inst, mode, cfg):
+    """AOT-compile the solve once; the same executable serves the timed
+    runs and the peak-memory estimate (no double compile)."""
+    return jax.jit(
+        lambda i: solve_device(i, mode=mode, cfg=cfg)).lower(inst).compile()
+
+
+def _peak_memory_bytes(compiled):
+    """XLA's compiled temp-buffer estimate (None where the installed
+    jax/backend can't report it)."""
+    try:
+        ma = compiled.memory_analysis()
+        return None if ma is None else int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
 
 
 def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
@@ -40,23 +68,30 @@ def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
         "platform": platform.platform(),
         "modes": {},
     }
-    def finite(x):
-        x = float(x)
-        return x if math.isfinite(x) else None   # strict-JSON (no Infinity)
 
     for mode in api.MODES:
-        t, res = timed(api.solve, inst, mode=mode, config=SMOKE_CFG)
-        entry = {
-            "wall_s": round(t, 4),
-            "objective": finite(res.objective),
-            "lower_bound": finite(res.lower_bound),
-            "rounds": int(res.rounds),
-        }
+        entry = {}
+        for impl in GRAPH_IMPLS:
+            cfg = dataclasses.replace(SMOKE_CFG, graph_impl=impl)
+            compiled = _compile_solve(inst, mode, cfg)
+            t, res = timed(compiled, inst)
+            entry[impl] = {
+                "wall_s": round(t, 4),
+                "objective": _finite(res.objective),
+                "lower_bound": _finite(res.lower_bound),
+                "rounds": int(res.rounds),
+                "peak_mem_bytes": _peak_memory_bytes(compiled),
+            }
+            if csv is not None:
+                csv.add("smoke", f"{mode}/{impl}", "wall_s",
+                        entry[impl]["wall_s"])
+                if entry[impl]["objective"] is not None:
+                    csv.add("smoke", f"{mode}/{impl}", "objective",
+                            entry[impl]["objective"])
+                if entry[impl]["peak_mem_bytes"] is not None:
+                    csv.add("smoke", f"{mode}/{impl}", "peak_mem_bytes",
+                            entry[impl]["peak_mem_bytes"])
         report["modes"][mode] = entry
-        if csv is not None:
-            csv.add("smoke", mode, "wall_s", entry["wall_s"])
-            if entry["objective"] is not None:   # keep value column numeric
-                csv.add("smoke", mode, "objective", entry["objective"])
 
     batch = api.stack_instances([
         random_instance(n=100, p=0.1, seed=s, pad_edges=1024, pad_nodes=128)

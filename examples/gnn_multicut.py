@@ -19,10 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.models.gnn import egnn as eg
 from repro.models.gnn.common import GraphBatch
 from repro.core.graph import make_instance
-from repro.core.solver import SolverConfig, solve_pd
 from repro.train.optimizer import OptimizerConfig, apply_update, init_opt_state
 
 N, E, K = 48, 320, 4          # nodes, candidate edges, planted clusters
@@ -89,7 +89,8 @@ def main():
     logit = edge_logits(cfg, params, pos, src, dst)
     inst = make_instance(np.asarray(src), np.asarray(dst),
                          np.asarray(logit), N, pad_edges=1024, pad_nodes=64)
-    res = solve_pd(inst, SolverConfig(max_neg=256, mp_iters=10))
+    res = api.solve(inst, mode="pd",
+                    config=api.SolverConfig(max_neg=256, mp_iters=10))
 
     # baseline: threshold GNN edges independently (connected components)
     import networkx as nx

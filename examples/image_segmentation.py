@@ -12,9 +12,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro import api
 from repro.core.baselines import gaec, objective
 from repro.core.graph import grid_instance
-from repro.core.solver import SolverConfig, solve_pd
 
 H = W = 24
 GLYPHS = "·#o+x%@*=~^"
@@ -32,9 +32,9 @@ def render(labels, h, w):
 
 def main():
     inst = grid_instance(H, W, seed=3, n_segments=5)
-    cfg = SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8,
-                       mp_iters=10, contract_frac=0.5, max_rounds=40)
-    res = solve_pd(inst, cfg)
+    cfg = api.SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8,
+                           mp_iters=10, contract_frac=0.5, max_rounds=40)
+    res = api.solve(inst, mode="pd", config=cfg)
     lab_gaec = gaec(inst)
 
     print(f"PD:   objective {res.objective:9.2f}  LB {res.lower_bound:9.2f}"

@@ -10,12 +10,19 @@ backend selector for the message-passing sweep:
     res = api.solve(inst, mode="d")                # dual-only lower bound
     res = api.solve(inst, preset="pd-opt")         # named preset
     res = api.solve(inst, backend="pallas")        # kernel-backed MP sweep
+    res = api.solve(inst, graph_impl="sparse")     # force the CSR data path
 
     mc = api.Multicut.from_preset("paper-pd+")
     res = mc.solve(inst)
 
     batch = api.stack_instances([inst0, inst1, ...])
     results = mc.solve_batch(batch)                # one vmapped executable
+
+``graph_impl`` picks the separation data path ("dense" (N, N) MXU
+matrices, "sparse" padded-CSR with O(N + E) memory, or "auto" — the
+default — which flips to sparse above ``SolverConfig.sparse_threshold``
+nodes). Every preset therefore scales past the dense ceiling untouched;
+``"pd-sparse"`` pins the CSR path explicitly for benchmarking.
 
 Every entrypoint returns a :class:`SolveResult` of device arrays — the
 full solve (outer rounds included) is one compiled executable, and the
@@ -31,16 +38,17 @@ from functools import lru_cache
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import MulticutInstance, make_instance
+from repro.core.graph import GRAPH_IMPLS, MulticutInstance, make_instance
 from repro.core.solver import (
-    BACKENDS, MODES, SolveResult, SolverConfig, resolve_sweep, solve_device,
+    BACKENDS, MODES, SolveResult, SolverConfig, resolve_intersect,
+    resolve_sweep, solve_device,
 )
 
 __all__ = [
-    "BACKENDS", "MODES", "Multicut", "MulticutInstance", "Preset", "PRESETS",
-    "SolveResult", "SolverConfig", "get_preset", "list_presets",
-    "make_instance", "register_preset", "solve", "solve_batch",
-    "stack_instances", "unstack_results",
+    "BACKENDS", "GRAPH_IMPLS", "MODES", "Multicut", "MulticutInstance",
+    "Preset", "PRESETS", "SolveResult", "SolverConfig", "get_preset",
+    "list_presets", "make_instance", "register_preset", "solve",
+    "solve_batch", "stack_instances", "unstack_results",
 ]
 
 
@@ -95,6 +103,9 @@ for _p in (
     Preset("pd-opt", "pd",
            dataclasses.replace(_PAPER, contract_frac=0.5, max_rounds=40),
            "beyond-paper GAEC-conservative PD (contract_frac=0.5)"),
+    Preset("pd-sparse", "pd",
+           dataclasses.replace(_PAPER, graph_impl="sparse"),
+           "PD pinned to the CSR data path (no (N, N) allocations)"),
 ):
     register_preset(_p)
 
@@ -108,32 +119,39 @@ def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool):
     """One jitted callable per (mode, config, backend, batched) — the
     executable registry behind every public entrypoint."""
     sweep = resolve_sweep(backend)
+    intersect = resolve_intersect(backend)
 
     if not batched:
-        # route through solver.solve_device_jit so the API and the legacy
-        # shims share one compile cache per (mode, cfg, sweep)
+        # route through solver.solve_device_jit so callers going through
+        # solver directly share one compile cache per (mode, cfg, backend)
         from repro.core.solver import solve_device_jit
 
         def run_single(inst: MulticutInstance) -> SolveResult:
-            return solve_device_jit(inst, mode=mode, cfg=cfg, sweep=sweep)
+            return solve_device_jit(inst, mode=mode, cfg=cfg, sweep=sweep,
+                                    intersect=intersect)
 
         return run_single
 
     def run(inst: MulticutInstance) -> SolveResult:
-        return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep)
+        return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep,
+                            intersect=intersect)
 
     return jax.jit(jax.vmap(run))
 
 
-def _normalize(mode, config, backend, preset):
+def _normalize(mode, config, backend, preset, graph_impl=None):
     if preset is not None:
         p = get_preset(preset) if isinstance(preset, str) else preset
         mode = p.mode if mode is None else mode
         config = p.config if config is None else config
     mode = "pd" if mode is None else mode
     config = SolverConfig() if config is None else config
-    if backend is None:
-        backend = "pallas" if config.use_pallas_sweep else "reference"
+    if graph_impl is not None:
+        if graph_impl not in GRAPH_IMPLS:
+            raise ValueError(f"unknown graph_impl {graph_impl!r}; expected "
+                             f"one of {GRAPH_IMPLS}")
+        config = dataclasses.replace(config, graph_impl=graph_impl)
+    backend = "reference" if backend is None else backend
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
     if backend not in BACKENDS:
@@ -148,22 +166,27 @@ def _normalize(mode, config, backend, preset):
 
 def solve(inst: MulticutInstance, mode: str | None = None,
           config: SolverConfig | None = None, backend: str | None = None,
-          preset: str | Preset | None = None) -> SolveResult:
+          preset: str | Preset | None = None,
+          graph_impl: str | None = None) -> SolveResult:
     """Solve one multicut instance. The whole solve — separation, message
-    passing, contraction, outer rounds — is a single device executable."""
-    mode, config, backend = _normalize(mode, config, backend, preset)
+    passing, contraction, outer rounds — is a single device executable.
+    ``graph_impl`` overrides the config's dense/sparse/auto data path."""
+    mode, config, backend = _normalize(mode, config, backend, preset,
+                                       graph_impl)
     return _compiled(mode, config, backend, batched=False)(inst)
 
 
 def solve_batch(batch: MulticutInstance, mode: str | None = None,
                 config: SolverConfig | None = None,
                 backend: str | None = None,
-                preset: str | Preset | None = None) -> SolveResult:
+                preset: str | Preset | None = None,
+                graph_impl: str | None = None) -> SolveResult:
     """Solve a stacked batch of same-shape instances with one vmapped
     executable. ``batch`` is a MulticutInstance whose every leaf carries a
     leading batch axis (see :func:`stack_instances`); the returned
     SolveResult is batched the same way (see :func:`unstack_results`)."""
-    mode, config, backend = _normalize(mode, config, backend, preset)
+    mode, config, backend = _normalize(mode, config, backend, preset,
+                                       graph_impl)
     return _compiled(mode, config, backend, batched=True)(batch)
 
 
@@ -198,9 +221,10 @@ class Multicut:
 
     def __init__(self, mode: str = "pd",
                  config: SolverConfig | None = None,
-                 backend: str = "reference"):
+                 backend: str = "reference",
+                 graph_impl: str | None = None):
         self.mode, self.config, self.backend = _normalize(
-            mode, config, backend, preset=None)
+            mode, config, backend, preset=None, graph_impl=graph_impl)
 
     @classmethod
     def from_preset(cls, name: str | Preset,

@@ -9,9 +9,13 @@ Fixed-shape TPU adaptations of the paper's GPU primitives:
 * maximum spanning forest — Borůvka rounds (per-component best edge) with
   *component freezing* instead of path-edge removal for repulsive-edge
   conflicts (see DESIGN.md §2).
-* contraction — Lemma 4's ``KᵀAK`` computed either sparsely
-  (sort + segment reduce, Alg. 4) or densely via one-hot matmul (MXU path,
-  mirrored by the ``contract_matmul`` Pallas kernel).
+* contraction — Lemma 4's ``KᵀAK`` computed sparsely: gather the component
+  relabelling, lexsort + ``coo_dedupe_sum`` (Alg. 4's sort + reduce_by_key).
+  This is the ONLY contraction path the solver runs — it allocates O(N + E)
+  for any graph_impl, so the solve jaxpr stays free of (N, N) temporaries.
+  The one-hot-matmul form survives solely as the small-N test oracle
+  (:func:`contract_dense`, mirrored by the ``contract_matmul`` Pallas
+  kernel benchmark).
 """
 from __future__ import annotations
 

@@ -1,14 +1,25 @@
 """Dual: conflicted-cycle separation (RAMA §3.2.2, Alg. 5).
 
-A conflicted cycle contains exactly one repulsive edge (Def. 5). The paper
-enumerates them with CUDA CSR-intersection kernels; on TPU we use the
-matmul formulation instead: 2-path existence between v1 and v3 is
-``(A⁺A⁺)[v1, v3] > 0`` — an MXU-native boolean matrix product. Enumeration is
-capped per repulsive edge (fixed shapes) rather than globally deduplicated.
+A conflicted cycle contains exactly one repulsive edge (Def. 5). Two
+interchangeable data paths implement the enumeration:
 
-Cycles of length 4/5 are triangulated by chord edges of cost 0 (Lemma of
-[15]: chordal triangulation preserves the cycle relaxation); chords are
-allocated from the instance's padded free edge slots.
+* **dense** (``graph_impl="dense"``) — the MXU formulation: 2-path existence
+  between v1 and v3 is ``(A⁺A⁺)[v1, v3] > 0`` over (N, N) boolean
+  adjacency/edge-index matrices. Fast for small N, O(N²) HBM.
+* **sparse** (``graph_impl="sparse"``) — the paper's CSR formulation:
+  common neighbours come from sorted-row intersection over
+  :class:`repro.core.graph.CsrGraph` windows (merge-path membership via
+  ``searchsorted`` / the ``cycle_intersect`` Pallas kernel + segment ops).
+  O(N + E) memory — the data path for instances the dense matrices cannot
+  allocate. Row windows are capped at ``row_cap`` entries; the two paths
+  produce *identical* triangles whenever ``row_cap`` ≥ the maximum
+  attractive degree (see tests/test_graph_impl.py).
+
+Enumeration is capped per repulsive edge (fixed shapes) rather than
+globally deduplicated. Cycles of length 4/5 are triangulated by chord edges
+of cost 0 (Lemma of [15]: chordal triangulation preserves the cycle
+relaxation); chords are allocated from the instance's padded free edge
+slots by :func:`_alloc_chords`, which is graph-impl-agnostic.
 """
 from __future__ import annotations
 
@@ -17,41 +28,55 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import MulticutInstance
+from repro.core.graph import (
+    CsrGraph, MulticutInstance, csr_from_instance, csr_lookup_edge,
+    csr_row_window, resolve_graph_impl,
+)
+from repro.kernels.cycle_intersect.ref import intersect_rows_ref
 
 
-class DenseGraph(NamedTuple):
-    A: jax.Array      # (N, N) symmetric costs
+class DenseAdj(NamedTuple):
+    """The (N, N) boolean/index pair separation reads — no cost matrix, so
+    nothing here can be mistaken for one (the old ``with_costs=False`` path
+    returned a bool array in the f32 ``A`` slot)."""
     Apos: jax.Array   # (N, N) bool attractive adjacency
     eidx: jax.Array   # (N, N) int32 edge index or -1
 
 
-def build_dense(inst: MulticutInstance, with_costs: bool = True) -> DenseGraph:
-    """``with_costs=False`` skips the (N, N) f32 cost matrix — separation
-    only reads the boolean adjacency and the edge-index matrix, and the
-    skipped scatter+read is ~25% of the separation round's HBM traffic
-    (EXPERIMENTS.md §Perf cell C iter 2)."""
+class DenseGraph(NamedTuple):
+    A: jax.Array      # (N, N) symmetric f32 costs
+    Apos: jax.Array   # (N, N) bool attractive adjacency
+    eidx: jax.Array   # (N, N) int32 edge index or -1
+
+
+def build_adjacency(inst: MulticutInstance) -> DenseAdj:
+    """Boolean adjacency + edge-index matrices (what separation reads).
+    Skipping the (N, N) f32 cost scatter+read is ~25% of the separation
+    round's HBM traffic (EXPERIMENTS.md §Perf cell C iter 2)."""
     N, E = inst.num_nodes, inst.num_edges
     pos = inst.edge_valid & (inst.cost > 0)
     su = jnp.where(inst.edge_valid, inst.u, 0)
     sv = jnp.where(inst.edge_valid, inst.v, 0)
     Apos = jnp.zeros((N, N), dtype=bool)
     Apos = Apos.at[su, sv].max(pos).at[sv, su].max(pos)
-    # repair the (0,0) cell polluted by invalid rows (pos there is False,
-    # but a true (0,0) self-entry is impossible anyway)
     eidx = jnp.full((N, N), -1, dtype=jnp.int32)
     e = jnp.arange(E, dtype=jnp.int32)
     eid = jnp.where(inst.edge_valid, e, -1)
     eidx = eidx.at[su, sv].max(eid)
     eidx = eidx.at[sv, su].max(eid)
+    # repair the (0,0) cell polluted by invalid rows (a true (0,0)
+    # self-entry is impossible anyway)
     eidx = eidx.at[0, 0].set(-1)
-    if with_costs:
-        c = jnp.where(inst.edge_valid, inst.cost, 0.0)
-        A = jnp.zeros((N, N), dtype=inst.cost.dtype)
-        A = A.at[inst.u, inst.v].add(c).at[inst.v, inst.u].add(c)
-    else:
-        A = Apos  # placeholder; separation never reads costs
-    return DenseGraph(A=A, Apos=Apos, eidx=eidx)
+    return DenseAdj(Apos=Apos, eidx=eidx)
+
+
+def build_dense(inst: MulticutInstance) -> DenseGraph:
+    """Full dense view including the f32 cost matrix (tests / oracles)."""
+    adj = build_adjacency(inst)
+    c = jnp.where(inst.edge_valid, inst.cost, 0.0)
+    A = jnp.zeros((inst.num_nodes,) * 2, dtype=inst.cost.dtype)
+    A = A.at[inst.u, inst.v].add(c).at[inst.v, inst.u].add(c)
+    return DenseGraph(A=A, Apos=adj.Apos, eidx=adj.eidx)
 
 
 def select_repulsive_edges(inst: MulticutInstance, max_neg: int,
@@ -65,35 +90,10 @@ def select_repulsive_edges(inst: MulticutInstance, max_neg: int,
 
 
 class Triangles(NamedTuple):
-    """Triangle subproblems: rows of edge indices into the instance arrays."""
+    """Triangle subproblems: rows of edge indices into the instance arrays.
+    Invalid rows are zeroed (scatter-safe, impl-independent)."""
     edges: jax.Array   # (T, 3) int32 edge ids
     valid: jax.Array   # (T,) bool
-
-
-def separate_triangles(inst: MulticutInstance, dg: DenseGraph,
-                       max_neg: int, max_tri_per_edge: int) -> Triangles:
-    """3-cycles: for each repulsive edge (i, j) pick up to K common attractive
-    neighbours k; triangle edges (ij, ik, jk). (Lemma 6 specialised to hop
-    distance 2 — the common-neighbour test is one row-AND, i.e. the matmul
-    ``A⁺A⁺`` restricted to the repulsive pairs.)"""
-    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
-    i = inst.u[neg_idx]
-    j = inst.v[neg_idx]
-    max_tri_per_edge = min(max_tri_per_edge, inst.num_nodes)
-
-    def per_edge(i_, j_, e_, ok_):
-        common = (dg.Apos[i_] & dg.Apos[j_]).astype(jnp.float32)
-        vals, ks = jax.lax.top_k(common, max_tri_per_edge)
-        good = (vals > 0) & ok_
-        e_ik = dg.eidx[i_, ks]
-        e_jk = dg.eidx[j_, ks]
-        tri = jnp.stack([jnp.full_like(ks, e_), e_ik, e_jk], axis=-1)
-        good = good & (e_ik >= 0) & (e_jk >= 0)
-        return tri, good
-
-    tris, goods = jax.vmap(per_edge)(i, j, neg_idx, neg_ok)
-    return Triangles(edges=tris.reshape(-1, 3).astype(jnp.int32),
-                     valid=goods.reshape(-1))
 
 
 class CycleSeparationResult(NamedTuple):
@@ -101,27 +101,116 @@ class CycleSeparationResult(NamedTuple):
     triangles: Triangles
 
 
-def _alloc_chords(inst: MulticutInstance, dg: DenseGraph,
-                  ch_u, ch_v, ch_ok):
-    """Allocate chord edges (cost 0) from free padded slots; reuse existing
-    edges where the chord already exists. Returns (inst', eidx', chord_eid).
+# ---------------------------------------------------------------------------
+# 3-cycles
+# ---------------------------------------------------------------------------
 
-    ch_u/ch_v: (M,) endpoints; ch_ok: (M,) candidate validity.
-    Duplicates within the batch are resolved by allocating then deduping via
-    the dense eidx matrix (first writer wins, later readers see its id).
+def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
+                       max_neg: int, max_tri_per_edge: int) -> Triangles:
+    """3-cycles, dense path: for each repulsive edge (i, j) pick up to K
+    common attractive neighbours k; triangle edges (ij, ik, jk). (Lemma 6
+    specialised to hop distance 2 — the common-neighbour test is one
+    row-AND, i.e. the matmul ``A⁺A⁺`` restricted to the repulsive pairs.)
+    top_k over the 0/1 row picks the K smallest common neighbour ids."""
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    i = inst.u[neg_idx]
+    j = inst.v[neg_idx]
+    max_tri_per_edge = min(max_tri_per_edge, inst.num_nodes)
+
+    def per_edge(i_, j_, e_, ok_):
+        common = (adj.Apos[i_] & adj.Apos[j_]).astype(jnp.float32)
+        vals, ks = jax.lax.top_k(common, max_tri_per_edge)
+        good = (vals > 0) & ok_
+        e_ik = adj.eidx[i_, ks]
+        e_jk = adj.eidx[j_, ks]
+        tri = jnp.stack([jnp.full_like(ks, e_), e_ik, e_jk], axis=-1)
+        good = good & (e_ik >= 0) & (e_jk >= 0)
+        return tri, good
+
+    tris, goods = jax.vmap(per_edge)(i, j, neg_idx, neg_ok)
+    tris = tris.reshape(-1, 3).astype(jnp.int32)
+    goods = goods.reshape(-1)
+    return Triangles(edges=jnp.where(goods[:, None], tris, 0), valid=goods)
+
+
+def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
+                              max_neg: int, max_tri_per_edge: int,
+                              row_cap: int = 128,
+                              intersect=None) -> Triangles:
+    """3-cycles, CSR path: the common-neighbour test is a sorted-row
+    intersection of the two endpoints' attractive rows (the paper's CSR
+    kernel). Windows are ascending by node id, so taking the first K
+    matches reproduces the dense top_k exactly (same K smallest common
+    neighbours) whenever ``row_cap`` covers the rows."""
+    if intersect is None:
+        intersect = intersect_rows_ref
+    N = inst.num_nodes
+    K = min(max_tri_per_edge, N)
+    W = max(K, min(row_cap, N))
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    i = inst.u[neg_idx]
+    j = inst.v[neg_idx]
+
+    window = jax.vmap(lambda n: csr_row_window(csr_pos, n, W))
+    ci, ei, oki = window(i)                 # (M, W) each
+    cj, ej, _ = window(j)
+    pos = intersect(ci, cj)                 # (M, W) match position or -1
+    pc = jnp.clip(pos, 0, W - 1)
+    found = (pos >= 0) & oki                # mask ci's sentinel padding
+
+    def per_edge(found_, ei_, ej_, pc_, e_, ok_):
+        vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
+        good = (vals > 0) & ok_
+        e_ik = ei_[idxs]
+        e_jk = ej_[pc_[idxs]]
+        tri = jnp.stack([jnp.full((K,), e_, dtype=jnp.int32), e_ik, e_jk],
+                        axis=-1)
+        good = good & (e_ik >= 0) & (e_jk >= 0)
+        return tri, good
+
+    tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, neg_idx, neg_ok)
+    tris = tris.reshape(-1, 3).astype(jnp.int32)
+    goods = goods.reshape(-1)
+    return Triangles(edges=jnp.where(goods[:, None], tris, 0), valid=goods)
+
+
+# ---------------------------------------------------------------------------
+# Chord allocation (graph-impl-agnostic)
+# ---------------------------------------------------------------------------
+
+class ChordAlloc(NamedTuple):
+    instance: MulticutInstance  # with chords written into free slots
+    eid: jax.Array       # (M,) chord edge id per request or -1
+    ok: jax.Array        # (M,) request satisfied
+    alloc_lo: jax.Array  # (M,) endpoints/slots of *fresh* allocations
+    alloc_hi: jax.Array  # (rows with alloc_ok False carry junk)
+    alloc_slot: jax.Array
+    alloc_ok: jax.Array
+
+
+def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
+                  ch_ok) -> ChordAlloc:
+    """Allocate chord edges (cost 0) from free padded slots; reuse existing
+    edges where the chord already exists.
+
+    ``exists_eid``: (M,) id of an already-existing valid edge (lo, hi), or
+    -1 — the one graph lookup the caller performs (dense eidx gather or CSR
+    bisect), which is what makes this routine shared by both data paths.
+    Duplicates within the batch resolve to the first requester's slot, the
+    same first-writer-wins the dense scatter-max used to give.
     """
     E = inst.num_edges
+    M = ch_u.shape[0]
     lo = jnp.minimum(ch_u, ch_v)
     hi = jnp.maximum(ch_u, ch_v)
-    exists = dg.eidx[lo, hi] >= 0
+    exists = exists_eid >= 0
     need = ch_ok & ~exists & (lo != hi)
-    # dedupe within batch: keep first occurrence of each (lo,hi)
-    M = lo.shape[0]
+    # dedupe within batch: keep first occurrence of each (lo, hi).
+    # O(M²) pairwise check — M is a small static cap (max_neg), never N².
     key_l = jnp.where(need, lo, -1)
     key_h = jnp.where(need, hi, -1)
-    same_as_earlier = jnp.zeros(M, dtype=bool)
-    # O(M^2) pairwise check — M is a small static cap (max_neg * cyc caps)
-    eq = (key_l[:, None] == key_l[None, :]) & (key_h[:, None] == key_h[None, :])
+    eq = (key_l[:, None] == key_l[None, :]) & \
+        (key_h[:, None] == key_h[None, :])
     earlier = jnp.tril(jnp.ones((M, M), dtype=bool), k=-1)
     same_as_earlier = jnp.any(eq & earlier, axis=1) & need
     fresh = need & ~same_as_earlier
@@ -152,31 +241,70 @@ def _alloc_chords(inst: MulticutInstance, dg: DenseGraph,
     v2 = jnp.where(alloc_here, new_v, inst.v).astype(jnp.int32)
     c2 = jnp.where(alloc_here, 0.0, inst.cost)
     ev2 = inst.edge_valid | alloc_here
-
-    eidx2 = dg.eidx.at[jnp.where(ok_alloc, lo, 0),
-                       jnp.where(ok_alloc, hi, 0)].max(
-        jnp.where(ok_alloc, slot, -1))
-    eidx2 = eidx2.at[jnp.where(ok_alloc, hi, 0),
-                     jnp.where(ok_alloc, lo, 0)].max(
-        jnp.where(ok_alloc, slot, -1))
     inst2 = MulticutInstance(u=u2, v=v2, cost=c2, edge_valid=ev2,
                              node_valid=inst.node_valid)
-    chord_eid = eidx2[lo, hi]
+
+    # resolve each request to its chord id: existing edge, own fresh slot,
+    # or the first equal requester's slot (if that one got a slot)
+    first_idx = jnp.argmax(eq & (jnp.arange(M)[None, :] <= jnp.arange(M)[:, None]),
+                           axis=1)
+    own = jnp.where(need & ok_alloc[first_idx], slot[first_idx], -1)
+    chord_eid = jnp.where(exists, exists_eid, own).astype(jnp.int32)
     chord_ok = ch_ok & (chord_eid >= 0) & (lo != hi)
-    return inst2, eidx2, chord_eid, chord_ok
+    return ChordAlloc(instance=inst2, eid=chord_eid, ok=chord_ok,
+                      alloc_lo=lo, alloc_hi=hi, alloc_slot=slot,
+                      alloc_ok=ok_alloc)
 
 
-def separate_cycles45(inst: MulticutInstance, dg: DenseGraph, max_neg: int,
+def _overlay_exists(exists_eid, lo, hi, prev: ChordAlloc):
+    """Merge a previous batch's fresh allocations into an exists lookup
+    (what the dense path used to get for free from the shared eidx)."""
+    match = (lo[:, None] == prev.alloc_lo[None, :]) & \
+        (hi[:, None] == prev.alloc_hi[None, :]) & prev.alloc_ok[None, :]
+    from_prev = jnp.max(jnp.where(match, prev.alloc_slot[None, :], -1),
+                        axis=1)
+    return jnp.where(from_prev >= 0, from_prev, exists_eid)
+
+
+# ---------------------------------------------------------------------------
+# 4/5-cycles
+# ---------------------------------------------------------------------------
+
+def _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup, a1: ChordAlloc,
+                       a2: ChordAlloc):
+    """Shared tail of both 4/5-cycle paths: chord-triangulate the best pair
+    per repulsive edge into triangle rows. ``lookup(a, b)`` resolves an
+    original edge id (dense eidx gather or CSR bisect)."""
+    ch1, ch1_ok = a1.eid, a1.ok
+    ch2, ch2_ok = a2.eid, a2.ok
+    e = lookup
+    # triangles for 4-cycle: {v0v1, v1v4, v4v0}, {v1v3, v3v4, v4v1}
+    t4a = jnp.stack([e(v0, b1), ch1, e(v4, v0)], axis=-1)
+    t4b = jnp.stack([e(b1, b3), e(b3, v4), ch1], axis=-1)
+    ok4 = found & is4 & ch1_ok
+    # triangles for 5-cycle: {v0v1,v1v4,v4v0}, {v1v2,v2v4,v4v1}, {v2v3,v3v4,v4v2}
+    t5b = jnp.stack([e(b1, b2), ch2, ch1], axis=-1)
+    t5c = jnp.stack([e(b2, b3), e(b3, v4), ch2], axis=-1)
+    ok5 = found & ~is4 & ch1_ok & ch2_ok
+
+    tris = jnp.concatenate([t4a, t4b, t5b, t5c], axis=0).astype(jnp.int32)
+    oks = jnp.concatenate([ok4 | ok5, ok4, ok5, ok5], axis=0)
+    oks = oks & jnp.all(tris >= 0, axis=-1)
+    tris = jnp.where(oks[:, None], tris, 0)
+    return Triangles(edges=tris, valid=oks)
+
+
+def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
                       nbr_k: int = 4) -> CycleSeparationResult:
-    """4/5-cycles per Alg. 5: for repulsive edge (v0, v4), scan pairs
-    (v1, v3) ∈ N⁺(v0) × N⁺(v4); a 4-cycle needs v1v3 ∈ E⁺, a 5-cycle a common
-    attractive neighbour v2 (via the A⁺A⁺ matmul). The best pair per repulsive
-    edge is triangulated with zero-cost chords."""
+    """4/5-cycles per Alg. 5, dense path: for repulsive edge (v0, v4), scan
+    pairs (v1, v3) ∈ N⁺(v0) × N⁺(v4); a 4-cycle needs v1v3 ∈ E⁺, a 5-cycle a
+    common attractive neighbour v2 (via the A⁺A⁺ matmul). The best pair per
+    repulsive edge is triangulated with zero-cost chords."""
     N = inst.num_nodes
     nbr_k = min(nbr_k, N)
     # (bf16 rows were tried here and measured 3% WORSE — the convert op
     # costs more than the halved gather at nbr_k=4; §Perf cell C iter 3)
-    Aposf = dg.Apos.astype(jnp.float32)
+    Aposf = adj.Apos.astype(jnp.float32)
     # 2-path existence is only needed for the (v1, v3) candidate pairs of
     # the selected repulsive edges — max_neg·nbr_k² pairs. The full P2 =
     # A⁺A⁺ product costs 2N³ FLOPs (137 GF at the pd_round_lg shape); the
@@ -195,7 +323,7 @@ def separate_cycles45(inst: MulticutInstance, dg: DenseGraph, max_neg: int,
         v1 = jnp.broadcast_to(n0[:, None], (nbr_k, nbr_k))
         v3 = jnp.broadcast_to(n4[None, :], (nbr_k, nbr_k))
         distinct = (v1 != v3) & (v1 != v4_) & (v3 != v0_)
-        is4 = pair_ok & distinct & dg.Apos[v1, v3]
+        is4 = pair_ok & distinct & adj.Apos[v1, v3]
         # (nbr_k, N) @ (N, nbr_k) batched row-dot == P2[v1, v3]
         pair_counts = Aposf[n0] @ Aposf[n4].T
         has2path = pair_counts > 0
@@ -210,7 +338,7 @@ def separate_cycles45(inst: MulticutInstance, dg: DenseGraph, max_neg: int,
         b_v3 = v3[bi, bj]
         b_is4 = is4[bi, bj]
         # for the 5-cycle pick v2 = common attractive neighbour of v1, v3
-        common = (dg.Apos[b_v1] & dg.Apos[b_v3]).astype(jnp.float32)
+        common = (adj.Apos[b_v1] & adj.Apos[b_v3]).astype(jnp.float32)
         common = common.at[v0_].set(0.0).at[v4_].set(0.0)
         b_v2 = jnp.argmax(common).astype(jnp.int32)
         has_v2 = common[b_v2] > 0
@@ -222,43 +350,148 @@ def separate_cycles45(inst: MulticutInstance, dg: DenseGraph, max_neg: int,
 
     # chords: 4-cycle v0-v1-v3-v4 needs chord (v1, v4);
     #         5-cycle v0-v1-v2-v3-v4 needs chords (v1, v4) and (v2, v4)
-    chord1_u, chord1_v = b1, v4
-    chord2_u, chord2_v = b2, v4
-    chord2_ok = found & ~is4
-    inst2, eidx2, ch1, ch1_ok = _alloc_chords(
-        inst, dg, chord1_u, chord1_v, found)
-    dg2 = DenseGraph(A=dg.A, Apos=dg.Apos, eidx=eidx2)
-    inst3, eidx3, ch2, ch2_ok = _alloc_chords(
-        inst2, dg2, chord2_u, chord2_v, chord2_ok)
+    lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
+    a1 = _alloc_chords(inst, adj.eidx[lo1, hi1], b1, v4, found)
+    lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
+    exists2 = _overlay_exists(adj.eidx[lo2, hi2], lo2, hi2, a1)
+    a2 = _alloc_chords(a1.instance, exists2, b2, v4, found & ~is4)
 
-    e = lambda a, b: eidx3[a, b]
-    # triangles for 4-cycle: {v0v1, v1v4, v4v0}, {v1v3, v3v4, v4v1}
-    t4a = jnp.stack([e(v0, b1), ch1, e(v4, v0)], axis=-1)
-    t4b = jnp.stack([e(b1, b3), e(b3, v4), ch1], axis=-1)
-    ok4 = found & is4 & ch1_ok
-    # triangles for 5-cycle: {v0v1,v1v4,v4v0}, {v1v2,v2v4,v4v1}, {v2v3,v3v4,v4v2}
-    t5a = t4a
-    t5b = jnp.stack([e(b1, b2), ch2, ch1], axis=-1)
-    t5c = jnp.stack([e(b2, b3), e(b3, v4), ch2], axis=-1)
-    ok5 = found & ~is4 & ch1_ok & ch2_ok
+    tri = _assemble_cycles45(v0, v4, b1, b2, b3, is4, found,
+                             lambda a, b: adj.eidx[a, b], a1, a2)
+    return CycleSeparationResult(instance=a2.instance, triangles=tri)
 
-    tris = jnp.concatenate([t4a, t4b, t5b, t5c], axis=0).astype(jnp.int32)
-    oks = jnp.concatenate([ok4 | ok5, ok4, ok5, ok5], axis=0)
-    oks = oks & jnp.all(tris >= 0, axis=-1)
-    tris = jnp.where(oks[:, None], tris, 0)
-    return CycleSeparationResult(
-        instance=inst3, triangles=Triangles(edges=tris, valid=oks))
 
+def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
+                             csr_all: CsrGraph, max_neg: int, nbr_k: int = 4,
+                             row_cap: int = 128,
+                             intersect=None) -> CycleSeparationResult:
+    """4/5-cycles, CSR path. Mirrors the dense scan pair for pair:
+
+    * neighbour fans N⁺(v0)/N⁺(v4) = the first ``nbr_k`` entries of each
+      sorted attractive row (== dense top_k over the 0/1 row);
+    * the 4-cycle edge test v1v3 ∈ E⁺ = one CSR bisect;
+    * 2-path existence (the A⁺A⁺ row-dot) = sorted-row intersection of the
+      fan nodes' windows — max_neg·nbr_k² window pairs through
+      ``intersect`` (ref searchsorted or the cycle_intersect kernel);
+    * v2 = first surviving element of the winning pair's intersection.
+    """
+    if intersect is None:
+        intersect = intersect_rows_ref
+    N = inst.num_nodes
+    nbr_k = min(nbr_k, N)
+    W = max(1, min(row_cap, N))
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    v0 = inst.u[neg_idx]
+    v4 = inst.v[neg_idx]
+    M = v0.shape[0]
+
+    fan = jax.vmap(lambda n: csr_row_window(csr_pos, n, nbr_k))
+    n0, _, ok0 = fan(v0)                       # (M, nbr_k)
+    n4, _, ok4 = fan(v4)
+
+    # windows of every fan node's attractive row: (M, nbr_k, W)
+    window = jax.vmap(jax.vmap(lambda n: csr_row_window(csr_pos, n, W)))
+    r1c, _, r1ok = window(n0)
+    r3c, _, _ = window(n4)
+
+    # 2-path existence for every (v1, v3) pair, chunked over the j fan so
+    # only (M·nbr_k, W) windows are live at once — materializing the full
+    # (M·nbr_k², W) pair batch was 27× the dense path's temp memory at the
+    # smoke caps; only the boolean (M, nbr_k, nbr_k) result is kept
+    ci_flat = r1c.reshape(M * nbr_k, W)
+    oki_flat = r1ok.reshape(M * nbr_k, W)
+    has2 = []
+    for j in range(nbr_k):
+        cj_j = jnp.broadcast_to(r3c[:, None, j, :], (M, nbr_k, W)) \
+            .reshape(M * nbr_k, W)
+        pos_j = intersect(ci_flat, cj_j)
+        has2.append(jnp.any((pos_j >= 0) & oki_flat, axis=-1)
+                    .reshape(M, nbr_k))
+    has2path = jnp.stack(has2, axis=-1)                    # (M, nbr_k, nbr_k)
+
+    v1 = jnp.broadcast_to(n0[:, :, None], (M, nbr_k, nbr_k))
+    v3 = jnp.broadcast_to(n4[:, None, :], (M, nbr_k, nbr_k))
+    lookup_pos = jax.vmap(lambda a, b: csr_lookup_edge(csr_pos, a, b))
+    e13 = lookup_pos(v1.reshape(-1), v3.reshape(-1)).reshape(v1.shape)
+
+    pair_ok = ok0[:, :, None] & ok4[:, None, :] & neg_ok[:, None, None]
+    distinct = (v1 != v3) & (v1 != v4[:, None, None]) & \
+        (v3 != v0[:, None, None])
+    is4 = pair_ok & distinct & (e13 >= 0)
+    is5 = pair_ok & distinct & ~is4 & has2path
+    w0 = ok0.astype(jnp.float32)
+    w4 = ok4.astype(jnp.float32)
+    score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
+        + jnp.minimum(w0[:, :, None], w4[:, None, :]) * 1e-3
+    flat = jnp.argmax(score.reshape(M, -1), axis=1)
+    bi, bj = flat // nbr_k, flat % nbr_k
+    m = jnp.arange(M)
+    found = score.reshape(M, -1)[m, flat] > -jnp.inf
+    b1 = n0[m, bi]
+    b3 = n4[m, bj]
+    b_is4 = is4[m, bi, bj]
+    # v2 = smallest common attractive neighbour of (b1, b3), excluding the
+    # repulsive endpoints — first surviving element of the winning pair's
+    # (ascending) intersection, == dense argmax over the 0/1 common row.
+    # Re-intersect just the winning pair per repulsive edge ((M, W), cheap)
+    # instead of keeping the full pair batch alive.
+    win_cols = r1c[m, bi]                                    # (M, W)
+    win_pos = intersect(win_cols, r3c[m, bj])
+    win_common = (win_pos >= 0) & r1ok[m, bi] & \
+        (win_cols != v0[:, None]) & (win_cols != v4[:, None])
+    has_v2 = jnp.any(win_common, axis=1)
+    first = jnp.argmax(win_common, axis=1)
+    b2 = jnp.where(has_v2, win_cols[m, first], 0).astype(jnp.int32)
+    found = found & (b_is4 | has_v2)
+
+    lookup_all = jax.vmap(lambda a, b: csr_lookup_edge(csr_all, a, b))
+    lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
+    a1 = _alloc_chords(inst, lookup_all(lo1, hi1), b1, v4, found)
+    lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
+    exists2 = _overlay_exists(lookup_all(lo2, hi2), lo2, hi2, a1)
+    a2 = _alloc_chords(a1.instance, exists2, b2, v4, found & ~b_is4)
+
+    tri = _assemble_cycles45(v0, v4, b1, b2, b3, b_is4, found, lookup_all,
+                             a1, a2)
+    return CycleSeparationResult(instance=a2.instance, triangles=tri)
+
+
+# ---------------------------------------------------------------------------
+# Full separation round
+# ---------------------------------------------------------------------------
 
 def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
-             with_cycles45: bool = True, nbr_k: int = 4) -> CycleSeparationResult:
+             with_cycles45: bool = True, nbr_k: int = 4,
+             graph_impl: str = "dense", sparse_row_cap: int = 128,
+             sparse_threshold: int = 2048,
+             intersect=None) -> CycleSeparationResult:
     """Full separation round: 3-cycles always; 4/5-cycles optionally
-    (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5)."""
-    dg = build_dense(inst, with_costs=False)
-    tri3 = separate_triangles(inst, dg, max_neg, max_tri_per_edge)
-    if not with_cycles45:
-        return CycleSeparationResult(instance=inst, triangles=tri3)
-    res45 = separate_cycles45(inst, dg, max_neg, nbr_k=nbr_k)
+    (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5).
+
+    ``graph_impl`` selects the data path ("auto" flips to CSR above
+    ``sparse_threshold`` nodes); ``intersect`` swaps the sorted-row
+    intersection implementation (None = jnp ref, or the cycle_intersect
+    Pallas kernel via ``backend="pallas"``)."""
+    impl = resolve_graph_impl(graph_impl, inst.num_nodes, sparse_threshold)
+    if impl == "dense":
+        adj = build_adjacency(inst)
+        tri3 = separate_triangles(inst, adj, max_neg, max_tri_per_edge)
+        if not with_cycles45:
+            return CycleSeparationResult(instance=inst, triangles=tri3)
+        res45 = separate_cycles45(inst, adj, max_neg, nbr_k=nbr_k)
+    else:
+        csr_pos = csr_from_instance(inst, attractive_only=True)
+        tri3 = separate_triangles_sparse(inst, csr_pos, max_neg,
+                                         max_tri_per_edge,
+                                         row_cap=sparse_row_cap,
+                                         intersect=intersect)
+        if not with_cycles45:
+            return CycleSeparationResult(instance=inst, triangles=tri3)
+        csr_all = csr_from_instance(inst)
+        res45 = separate_cycles45_sparse(inst, csr_pos, csr_all, max_neg,
+                                         nbr_k=nbr_k,
+                                         row_cap=sparse_row_cap,
+                                         intersect=intersect)
     edges = jnp.concatenate([tri3.edges, res45.triangles.edges], axis=0)
     valid = jnp.concatenate([tri3.valid, res45.triangles.valid], axis=0)
     return CycleSeparationResult(

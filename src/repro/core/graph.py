@@ -1,10 +1,17 @@
-"""Padded-COO multicut instance + instance generators.
+"""Padded-COO multicut instance, padded-CSR graph view + instance generators.
 
 RAMA's graphs shrink across contraction rounds; XLA needs static shapes. We
 keep (N, E) fixed for the lifetime of a solve and track validity masks:
 ``node_valid`` marks live cluster representatives, ``edge_valid`` live edges.
 Costs follow the paper's sign convention: c > 0 attractive (want joined),
 c < 0 repulsive (want cut).
+
+:class:`CsrGraph` is the device-resident sparse adjacency the large-N data
+path runs on (the paper's CSR representation, §3.2.2): a symmetric, padded
+CSR whose rows are sorted by neighbour id, built jit-safely from the padded
+COO arrays each round. Memory is O(N + E) instead of the O(N²) dense
+adjacency/edge-index matrices, which is what lets separation run on
+instances two orders of magnitude beyond the dense ceiling.
 """
 from __future__ import annotations
 
@@ -13,6 +20,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+GRAPH_IMPLS = ("dense", "sparse", "auto")
 
 
 class MulticutInstance(NamedTuple):
@@ -39,12 +48,33 @@ class MulticutInstance(NamedTuple):
 
 def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
                   pad_nodes: int | None = None) -> MulticutInstance:
-    """Build a padded instance from (possibly unordered) host edge arrays."""
+    """Build a padded instance from (possibly unordered) host edge arrays.
+
+    Parallel edges are merged by summing their costs (the multicut
+    objective is linear in the cut indicator, so this is loss-free). Every
+    instance is therefore a simple graph — the invariant both separation
+    data paths rely on for their bit-identical equivalence (``contract``
+    re-establishes it after each round via ``coo_dedupe_sum``, and chord
+    allocation never duplicates an edge). First-occurrence order is kept,
+    so duplicate-free inputs get identical edge ids as before.
+    """
     u = np.asarray(u, dtype=np.int32)
     v = np.asarray(v, dtype=np.int32)
     cost = np.asarray(cost, dtype=np.float32)
     lo, hi = np.minimum(u, v), np.maximum(u, v)
-    E = len(u)
+    if len(lo):
+        pairs = np.stack([lo, hi], axis=1)
+        _, first_idx, inv = np.unique(pairs, axis=0, return_index=True,
+                                      return_inverse=True)
+        if len(first_idx) < len(lo):
+            order = np.argsort(first_idx)          # first-occurrence order
+            rank = np.empty_like(order)
+            rank[order] = np.arange(len(order))
+            merged = np.zeros(len(first_idx), dtype=np.float32)
+            np.add.at(merged, rank[inv], cost)
+            keep = first_idx[order]
+            lo, hi, cost = lo[keep], hi[keep], merged
+    E = len(lo)
     Ep = pad_edges if pad_edges is not None else E
     Np = pad_nodes if pad_nodes is not None else num_nodes
     assert Ep >= E and Np >= num_nodes
@@ -66,6 +96,124 @@ def to_host_edges(inst: MulticutInstance):
 
 
 # ---------------------------------------------------------------------------
+# Sparse CSR graph view (the paper's representation; memory O(N + E))
+# ---------------------------------------------------------------------------
+
+class CsrGraph(NamedTuple):
+    """Symmetric padded CSR adjacency over a masked edge subset.
+
+    Fixed shapes for jit: ``col``/``edge_id`` always hold 2E slots (each
+    masked-in undirected edge contributes both directions). Row i's entries
+    live at ``col[row_ptr[i]:row_ptr[i+1]]``, sorted ascending by neighbour
+    id (ties by edge id, so duplicate parallel edges resolve to the largest
+    id under :func:`csr_lookup_edge`, matching the dense scatter-max).
+    Dead slots are compacted to the tail and hold the sentinel ``N`` in
+    ``col`` and ``-1`` in ``edge_id``; ``row_ptr[N]`` is the live count.
+    """
+    row_ptr: jax.Array   # (N+1,) int32 CSR offsets
+    col: jax.Array       # (2E,) int32 neighbour node, N = dead sentinel
+    edge_id: jax.Array   # (2E,) int32 edge index into instance arrays, -1 dead
+
+    @property
+    def num_nodes(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def degrees(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+
+def build_csr(u, v, mask, num_nodes: int) -> CsrGraph:
+    """Jit-safe COO→CSR: lexsort the 2E directed copies by (src, dst, eid);
+    masked-out edges get sentinel endpoints that sort past every live row,
+    and ``row_ptr`` falls out of one searchsorted over the sorted src column
+    (Alg. 4's sort_by_key, shape-static)."""
+    E = u.shape[0]
+    src = jnp.concatenate([u, v]).astype(jnp.int32)
+    dst = jnp.concatenate([v, u]).astype(jnp.int32)
+    eid = jnp.tile(jnp.arange(E, dtype=jnp.int32), 2)
+    m = jnp.concatenate([mask, mask])
+    src = jnp.where(m, src, num_nodes)
+    dst = jnp.where(m, dst, num_nodes)
+    order = jnp.lexsort((eid, dst, src))
+    src_s = src[order]
+    row_ptr = jnp.searchsorted(
+        src_s, jnp.arange(num_nodes + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+    return CsrGraph(row_ptr=row_ptr, col=dst[order],
+                    edge_id=jnp.where(m[order], eid[order], -1))
+
+
+def csr_from_instance(inst: MulticutInstance,
+                      attractive_only: bool = False) -> CsrGraph:
+    """CSR over the valid edges; ``attractive_only`` restricts to c > 0
+    (the E⁺ view the paper's cycle kernels intersect over)."""
+    mask = inst.edge_valid & (inst.cost > 0) if attractive_only \
+        else inst.edge_valid
+    return build_csr(inst.u, inst.v, mask, inst.num_nodes)
+
+
+def csr_row_window(csr: CsrGraph, node, cap: int):
+    """First ``cap`` entries of a node's CSR row (ascending neighbour id).
+
+    Returns (cols, eids, valid): (cap,) each, padded with the N sentinel /
+    -1 past the row's degree. Exact (loss-free) whenever cap ≥ degree;
+    larger rows are truncated to their cap smallest neighbours — the same
+    greedy cap the dense path applies through top_k. Gather-based so it
+    vmaps over ``node``.
+    """
+    N = csr.num_nodes
+    start = csr.row_ptr[node]
+    deg = csr.row_ptr[node + 1] - start
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    idx = jnp.clip(start + pos, 0, csr.col.shape[0] - 1)
+    ok = pos < deg
+    cols = jnp.where(ok, csr.col[idx], N)
+    eids = jnp.where(ok, csr.edge_id[idx], -1)
+    return cols, eids, ok
+
+
+def csr_lookup_edge(csr: CsrGraph, a, b) -> jax.Array:
+    """Edge id of (a, b) or -1 — bisect-right over row a's sorted slice.
+
+    Fixed ceil(log2(2E))+1 iterations (jit-safe); duplicate parallel edges
+    resolve to the largest edge id, matching dense eidx's scatter-max.
+    Scalar in, scalar out; vmap for batches.
+    """
+    nnz = csr.col.shape[0]
+    a = jnp.clip(jnp.asarray(a, jnp.int32), 0, csr.num_nodes - 1)
+    lo0 = csr.row_ptr[a]
+    lo, hi = lo0, csr.row_ptr[a + 1]
+    iters = max(1, int(np.ceil(np.log2(max(2, nnz)))) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = jnp.clip((lo + hi) // 2, 0, nnz - 1)
+        go_right = (lo < hi) & (csr.col[mid] <= b)
+        lo2 = jnp.where(go_right, mid + 1, lo)
+        hi2 = jnp.where(lo < hi, jnp.where(go_right, hi, mid), hi)
+        return lo2, hi2
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    p = jnp.clip(lo - 1, 0, nnz - 1)
+    found = (lo > lo0) & (csr.col[p] == b)
+    return jnp.where(found, csr.edge_id[p], -1)
+
+
+def resolve_graph_impl(graph_impl: str, num_nodes: int,
+                       threshold: int = 2048) -> str:
+    """Static dense/sparse dispatch: "auto" flips to the CSR data path once
+    the padded node count crosses ``threshold`` (where the dense (N, N)
+    matrices start to dominate HBM)."""
+    if graph_impl == "auto":
+        return "sparse" if num_nodes > threshold else "dense"
+    if graph_impl not in ("dense", "sparse"):
+        raise ValueError(f"unknown graph_impl {graph_impl!r}; expected one "
+                         f"of {GRAPH_IMPLS}")
+    return graph_impl
+
+
+# ---------------------------------------------------------------------------
 # Instance generators (synthetic datasets standing in for the paper's
 # Cityscapes / Connectomics instances; same structural regimes).
 # ---------------------------------------------------------------------------
@@ -84,7 +232,8 @@ def random_instance(n: int, p: float, seed: int = 0, mu: float = 0.0,
 
 def grid_instance(h: int, w: int, seed: int = 0, noise: float = 0.4,
                   n_segments: int = 6, long_range: bool = True,
-                  pad_edges: int | None = None) -> MulticutInstance:
+                  pad_edges: int | None = None,
+                  pad_nodes: int | None = None) -> MulticutInstance:
     """Cityscapes-like grid instance: 4-connectivity + coarse long-range
     edges, costs derived from a planted segmentation + noise (so ground-truth
     structure exists and objective values are meaningful)."""
@@ -112,7 +261,26 @@ def grid_instance(h: int, w: int, seed: int = 0, noise: float = 0.4,
                 vs.append(idx[dy:, dx:].ravel())
     u = np.concatenate(us); v = np.concatenate(vs)
     c = edge_cost(u, v)
-    return make_instance(u, v, c, h * w, pad_edges=pad_edges)
+    return make_instance(u, v, c, h * w, pad_edges=pad_edges,
+                         pad_nodes=pad_nodes)
+
+
+def cluster_instance(n: int, k: int = 4, p_in: float = 0.6,
+                     p_out: float = 0.1, seed: int = 0, noise: float = 0.5,
+                     pad_edges: int | None = None,
+                     pad_nodes: int | None = None) -> MulticutInstance:
+    """Planted-partition instance (connectomics-like regime): k ground-truth
+    clusters, dense attractive edges inside, sparse repulsive edges across,
+    gaussian cost noise on both."""
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, k, size=n)
+    iu, ju = np.triu_indices(n, k=1)
+    same = assign[iu] == assign[ju]
+    keep = rng.random(len(iu)) < np.where(same, p_in, p_out)
+    u, v = iu[keep], ju[keep]
+    base = np.where(same[keep], 1.0, -1.0).astype(np.float32)
+    c = base + rng.normal(0, noise, size=len(u)).astype(np.float32)
+    return make_instance(u, v, c, n, pad_edges=pad_edges, pad_nodes=pad_nodes)
 
 
 def to_networkx(inst: MulticutInstance):

@@ -10,7 +10,7 @@
         producing the lower bound.
 
 The whole solve is DEVICE-RESIDENT: one jitted executable per
-(mode, config, sweep) combination. The outer recursion runs as a
+(mode, config, backend) combination. The outer recursion runs as a
 ``jax.lax.while_loop`` over the fixed-shape padded instance (the padded
 arrays never change size; contraction shrinks the set of valid
 nodes/edges), with early exit driven by the carried contraction count —
@@ -23,14 +23,20 @@ Because every step is a pure fixed-shape jaxpr, the solve composes with
 :func:`repro.api.solve_batch`) and with ``shard_map`` (see
 :mod:`repro.core.dist`).
 
-The free functions ``solve_p`` / ``solve_pd`` / ``solve_dual`` are kept as
-thin deprecated shims over the unified entrypoint; new code should use
-:mod:`repro.api`.
+``SolverConfig.graph_impl`` selects the separation data path: "dense"
+keeps the (N, N) MXU formulation, "sparse" runs everything over the
+padded-CSR :class:`repro.core.graph.CsrGraph` (O(N + E) memory), and
+"auto" (default) flips to sparse once the padded node count crosses
+``sparse_threshold``. Contraction and message passing are sparse in both
+cases — with ``graph_impl="sparse"`` the whole solve jaxpr is free of
+(N, N) allocations (asserted in tests/test_graph_impl.py).
+
+Entrypoints live in :mod:`repro.api`; the old ``solve_p`` / ``solve_pd``
+/ ``solve_dual`` shims were removed after PR 1's migration window.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -39,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.contraction import choose_contraction_set, contract
 from repro.core.cycles import separate
-from repro.core.graph import MulticutInstance
+from repro.core.graph import GRAPH_IMPLS, MulticutInstance
 from repro.core.message_passing import init_mp, run_message_passing
 
 MODES = ("p", "pd", "pd+", "d")
@@ -65,7 +71,10 @@ class SolverConfig:
     switch_frac: float = 0.1
     contract_frac: float = 0.0      # GAEC-like conservatism (0 = paper)
     dual_rounds: int = 4            # D: separation+MP rounds
-    use_pallas_sweep: bool = False  # deprecated: pass backend="pallas" instead
+    graph_impl: str = "auto"        # separation data path: dense|sparse|auto
+    sparse_row_cap: int = 128       # CSR row window (≥ max attractive degree
+                                    # for exact dense parity)
+    sparse_threshold: int = 2048    # auto: sparse above this padded N
 
 
 class SolveResult(NamedTuple):
@@ -95,19 +104,25 @@ class SolveResult(NamedTuple):
                  "n_clusters": int(self.n_clusters[i])} for i in range(r)]
 
 
-def resolve_sweep(backend: str | None, cfg: SolverConfig | None = None):
-    """Map a backend name to the triangle-sweep implementation.
-
-    ``None`` defers to the deprecated ``cfg.use_pallas_sweep`` flag (kept so
-    pre-API configs keep routing through the kernel)."""
-    if backend is None:
-        backend = "pallas" if (cfg is not None and cfg.use_pallas_sweep) \
-            else "reference"
+def resolve_sweep(backend: str | None):
+    """Map a backend name to the triangle-sweep implementation."""
+    if backend is None or backend == "reference":
+        return None     # run_message_passing falls back to the jnp oracle
     if backend == "pallas":
         from repro.kernels.triangle_mp.ops import mp_sweep
         return mp_sweep
-    if backend == "reference":
-        return None     # run_message_passing falls back to the jnp oracle
+    raise ValueError(f"unknown backend {backend!r}; expected one of "
+                     f"{BACKENDS}")
+
+
+def resolve_intersect(backend: str | None):
+    """Map a backend name to the sorted-row intersection used by sparse
+    separation (None/"reference" → the jnp searchsorted oracle)."""
+    if backend is None or backend == "reference":
+        return None     # separate falls back to intersect_rows_ref
+    if backend == "pallas":
+        from repro.kernels.cycle_intersect.ops import intersect_rows
+        return intersect_rows
     raise ValueError(f"unknown backend {backend!r}; expected one of "
                      f"{BACKENDS}")
 
@@ -117,11 +132,15 @@ def resolve_sweep(backend: str | None, cfg: SolverConfig | None = None):
 # ---------------------------------------------------------------------------
 
 def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
-                     with45: bool, sweep=None):
+                     with45: bool, sweep=None, intersect=None):
     """One separation + message-passing round. Returns (inst', c_rep, lb)."""
     sep = separate(inst, max_neg=cfg.max_neg,
                    max_tri_per_edge=cfg.max_tri_per_edge,
-                   with_cycles45=with45, nbr_k=cfg.nbr_k)
+                   with_cycles45=with45, nbr_k=cfg.nbr_k,
+                   graph_impl=cfg.graph_impl,
+                   sparse_row_cap=cfg.sparse_row_cap,
+                   sparse_threshold=cfg.sparse_threshold,
+                   intersect=intersect)
     inst2 = sep.instance
     state = init_mp(sep.triangles)
     state, c_rep, lb = run_message_passing(
@@ -138,11 +157,11 @@ def _primal_round_core(inst: MulticutInstance, cfg: SolverConfig):
 
 
 def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
-                   with45: bool, sweep=None):
+                   with45: bool, sweep=None, intersect=None):
     """Alg. 3 lines 3–8 as one traceable unit: separation → message passing
     → reparametrize → contract. Returns (ContractionResult, lb). Input and
     output instances share shapes, so the outer while_loop carries it."""
-    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep)
+    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep, intersect)
     res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
     return res, lb
 
@@ -181,7 +200,7 @@ def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
 
 
 def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
-                     sweep=None) -> SolveResult:
+                     sweep=None, intersect=None) -> SolveResult:
     """Interleaved primal-dual Algorithm 3 (paper's PD / PD+).
 
     Round 0 runs outside the while_loop: it may use 4/5-cycle separation
@@ -193,7 +212,7 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
     with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
     with45_rest = cfg.always_cycles45 or plus
 
-    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep)
+    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep, intersect)
     nc0 = res0.n_contracted.astype(jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
     hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
@@ -207,7 +226,7 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
 
     def body(carry):
         r, cur, mapping, _, hist_lb, hist_nc, hist_nk = carry
-        res, lb = fused_pd_round(cur, cfg, with45_rest, sweep)
+        res, lb = fused_pd_round(cur, cfg, with45_rest, sweep, intersect)
         nc = res.n_contracted.astype(jnp.int32)
         hist_lb = hist_lb.at[r].set(lb)
         hist_nc = hist_nc.at[r].set(nc)
@@ -224,7 +243,8 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
                        n_contracted=hist_nc, n_clusters=hist_nk)
 
 
-def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None):
+def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
+                    intersect=None):
     """Dual-only solver (paper's D): repeated separation + MP on the original
     graph; LB is monotone across rounds. Returns (SolveResult, final inst).
 
@@ -240,7 +260,7 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None):
 
     def body(carry, _):
         cur, tri_lb_sum = carry
-        cur2, c_rep, lb = _dual_round_core(cur, cfg, True, sweep)
+        cur2, c_rep, lb = _dual_round_core(cur, cfg, True, sweep, intersect)
         edge_lb = jnp.sum(jnp.where(cur2.edge_valid,
                                     jnp.minimum(0.0, c_rep), 0.0))
         tri_lb_sum = tri_lb_sum + (lb - edge_lb)
@@ -261,24 +281,30 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None):
 
 def solve_device(inst: MulticutInstance, mode: str = "pd",
                  cfg: SolverConfig = SolverConfig(),
-                 sweep=None) -> SolveResult:
+                 sweep=None, intersect=None) -> SolveResult:
     """The unified, pure, traceable solve: dispatches on the (static) mode.
     Safe to wrap in ``jax.jit`` / ``jax.vmap`` / ``shard_map``; prefer the
     cached entrypoints in :mod:`repro.api`."""
+    if cfg.graph_impl not in GRAPH_IMPLS:
+        raise ValueError(f"unknown graph_impl {cfg.graph_impl!r}; expected "
+                         f"one of {GRAPH_IMPLS}")
     if mode == "p":
         return _solve_p_device(inst, cfg)
     if mode == "pd":
-        return _solve_pd_device(inst, cfg, plus=False, sweep=sweep)
+        return _solve_pd_device(inst, cfg, plus=False, sweep=sweep,
+                                intersect=intersect)
     if mode == "pd+":
-        return _solve_pd_device(inst, cfg, plus=True, sweep=sweep)
+        return _solve_pd_device(inst, cfg, plus=True, sweep=sweep,
+                                intersect=intersect)
     if mode == "d":
-        return _solve_d_device(inst, cfg, sweep)[0]
+        return _solve_d_device(inst, cfg, sweep, intersect)[0]
     raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
 
 
-solve_device_jit = jax.jit(solve_device,
-                           static_argnames=("mode", "cfg", "sweep"))
-_solve_d_jit = jax.jit(_solve_d_device, static_argnames=("cfg", "sweep"))
+solve_device_jit = jax.jit(
+    solve_device, static_argnames=("mode", "cfg", "sweep", "intersect"))
+_solve_d_jit = jax.jit(
+    _solve_d_device, static_argnames=("cfg", "sweep", "intersect"))
 
 
 # ---------------------------------------------------------------------------
@@ -314,40 +340,5 @@ def _primal_round(inst: MulticutInstance, matching_rounds: int,
     return contract(inst, S)
 
 
-def _sweep_fn(cfg: SolverConfig):
-    return resolve_sweep(None, cfg)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated free-function shims (use repro.api instead)
-# ---------------------------------------------------------------------------
-
-def _warn_deprecated(old: str, new: str):
-    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
-                  stacklevel=3)
-
-
-def solve_p(inst: MulticutInstance,
-            cfg: SolverConfig = SolverConfig()) -> SolveResult:
-    """Deprecated shim: use ``repro.api.solve(inst, mode='p')``."""
-    _warn_deprecated("solve_p", "repro.api.solve(inst, mode='p')")
-    return solve_device_jit(inst, mode="p", cfg=cfg,
-                            sweep=resolve_sweep(None, cfg))
-
-
-def solve_pd(inst: MulticutInstance, cfg: SolverConfig = SolverConfig(),
-             plus: bool = False) -> SolveResult:
-    """Deprecated shim: use ``repro.api.solve(inst, mode='pd'|'pd+')``."""
-    _warn_deprecated("solve_pd", "repro.api.solve(inst, mode='pd')")
-    return solve_device_jit(inst, mode="pd+" if plus else "pd", cfg=cfg,
-                            sweep=resolve_sweep(None, cfg))
-
-
-def solve_dual(inst: MulticutInstance, cfg: SolverConfig = SolverConfig(),
-               rounds: int = 4):
-    """Deprecated shim: use ``repro.api.solve(inst, mode='d')``.
-    Returns the legacy (final instance, LB, per-round LB) triple."""
-    _warn_deprecated("solve_dual", "repro.api.solve(inst, mode='d')")
-    cfg = dataclasses.replace(cfg, dual_rounds=rounds)
-    res, final = _solve_d_jit(inst, cfg=cfg, sweep=resolve_sweep(None, cfg))
-    return final, res.lower_bound, res.lb_history
+# (The deprecated solve_p / solve_pd / solve_dual shims from PR 1's
+# migration window were removed here — use repro.api.solve.)

@@ -5,6 +5,8 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ref.py (pure-jnp oracle used by the allclose sweeps in tests/).
 
   triangle_mp     — RAMA's dual message-passing sweep (the paper's hot loop)
+  cycle_intersect — sorted CSR row intersection for conflicted-cycle
+                    separation (the paper's CSR kernels, §3.2.2)
   contract_matmul — Lemma 4's KᵀAK contraction product (MXU tiled matmul)
   flash_attention — causal/GQA/sliding-window/softcap attention for the LM
                     architecture family

@@ -1,0 +1,12 @@
+"""Sorted-row intersection for conflicted-cycle separation (RAMA §3.2.2).
+
+``intersect_rows(ci, cj) -> pos`` matches each element of a batch of sorted
+CSR row windows ``ci`` against its paired window ``cj``; the kernel is the
+membership step of the paper's CSR cycle-enumeration kernels. See ops.py for
+the public wrapper, kernel.py for the Pallas TPU kernel, ref.py for the
+pure-jnp searchsorted oracle.
+"""
+from repro.kernels.cycle_intersect.ops import intersect_rows
+from repro.kernels.cycle_intersect.ref import intersect_rows_ref
+
+__all__ = ["intersect_rows", "intersect_rows_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for sorted-row intersection: per-row binary search.
+
+The contract both implementations obey: ``ci``/``cj`` are (R, W) int32 row
+windows, each row sorted ascending (padding = a sentinel that sorts last).
+``pos[r, p]`` is the index into row r of ``cj`` of the LAST element equal to
+``ci[r, p]``, or -1 when absent. "Last" makes duplicate parallel edges
+resolve to the largest edge id, matching the dense eidx scatter-max (rows
+are sorted with edge-id tiebreak, see ``build_csr``). Sentinel padding in
+``ci`` matches sentinel padding in ``cj`` — callers mask by their window
+validity, exactly as the dense path masks its top_k padding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def intersect_rows_ref(ci: jax.Array, cj: jax.Array) -> jax.Array:
+    """(R, W) × (R, Wj) → (R, W) int32 match positions (−1 = no match)."""
+    pos = jax.vmap(lambda a, b: jnp.searchsorted(b, a, side="right"))(
+        ci, cj).astype(jnp.int32) - 1
+    pc = jnp.clip(pos, 0, cj.shape[1] - 1)
+    hit = jnp.take_along_axis(cj, pc, axis=1) == ci
+    return jnp.where((pos >= 0) & hit, pos, -1)

@@ -1,7 +1,6 @@
-"""Unified `repro.api` solver API: presets, mode/legacy equivalence,
+"""Unified `repro.api` solver API: presets, facade/functional equivalence,
 batched solves, and device-residency of the jitted solve."""
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -9,9 +8,7 @@ import pytest
 
 from repro import api
 from repro.core.graph import grid_instance, random_instance
-from repro.core.solver import (
-    SolverConfig, solve_device, solve_dual, solve_p, solve_pd,
-)
+from repro.core.solver import SolverConfig, solve_device
 
 CFG = SolverConfig(max_neg=128, max_tri_per_edge=8, nbr_k=8, mp_iters=8)
 
@@ -69,38 +66,39 @@ def test_bad_mode_backend_preset_raise():
 
 
 # ---------------------------------------------------------------------------
-# (b) mode equivalence with the legacy free functions
+# (b) api entrypoints agree with the raw traceable solve
 # ---------------------------------------------------------------------------
 
-def test_solve_matches_legacy_all_modes():
+def test_solve_matches_solve_device_all_modes():
+    """api.solve (cached executables) == jitting solve_device by hand —
+    the API layer adds routing/caching, never different math."""
+    # one jitted callable per mode, hoisted so same-shape instances reuse it
+    raw_fns = {mode: jax.jit(lambda i, m=mode: solve_device(i, mode=m,
+                                                            cfg=CFG))
+               for mode in api.MODES}
     for inst in _insts():
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            rp = solve_p(inst, CFG)
-            rpd = solve_pd(inst, CFG)
-            rpdp = solve_pd(inst, CFG, plus=True)
-            _, lbd, per_round = solve_dual(inst, CFG)
+        for mode in api.MODES:
+            raw = raw_fns[mode](inst)
+            got = api.solve(inst, mode=mode, config=CFG)
+            # pytest.approx treats ±inf as exact-equal (mode p/d extremes)
+            assert float(got.objective) == pytest.approx(
+                float(raw.objective), abs=1e-4)
+            assert float(got.lower_bound) == pytest.approx(
+                float(raw.lower_bound), abs=1e-4)
+            assert np.asarray(got.labels).tolist() == \
+                np.asarray(raw.labels).tolist()
+            np.testing.assert_allclose(np.asarray(got.lb_history),
+                                       np.asarray(raw.lb_history),
+                                       atol=1e-3)
 
-        ap = api.solve(inst, mode="p", config=CFG)
-        assert float(ap.objective) == pytest.approx(float(rp.objective),
-                                                    abs=1e-4)
-        assert np.asarray(ap.labels).tolist() == \
-            np.asarray(rp.labels).tolist()
 
-        apd = api.solve(inst, mode="pd", config=CFG)
-        assert float(apd.objective) == pytest.approx(float(rpd.objective),
-                                                     abs=1e-4)
-        assert float(apd.lower_bound) == pytest.approx(
-            float(rpd.lower_bound), abs=1e-4)
-
-        apdp = api.solve(inst, mode="pd+", config=CFG)
-        assert float(apdp.objective) == pytest.approx(float(rpdp.objective),
-                                                      abs=1e-4)
-
-        ad = api.solve(inst, mode="d", config=CFG)
-        assert float(ad.lower_bound) == pytest.approx(float(lbd), abs=1e-4)
-        np.testing.assert_allclose(np.asarray(ad.lb_history),
-                                   np.asarray(per_round), atol=1e-3)
+def test_facade_matches_functional():
+    inst = _insts()[0]
+    mc = api.Multicut(mode="pd", config=CFG)
+    a = mc.solve(inst)
+    b = api.solve(inst, mode="pd", config=CFG)
+    assert float(a.objective) == float(b.objective)
+    assert np.asarray(a.labels).tolist() == np.asarray(b.labels).tolist()
 
 
 def test_preset_equals_explicit_mode_config():

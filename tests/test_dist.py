@@ -27,10 +27,11 @@ def test_dist_pd_round_runs_and_lb_valid():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_debug_mesh
+        from repro import api
         from repro.core.dist import (make_dist_pd_round, partition_instance,
                                      merge_blocks_quotient)
         from repro.core.graph import random_instance
-        from repro.core.solver import solve_pd, solve_dual, SolverConfig
+        from repro.core.solver import SolverConfig
 
         mesh = make_debug_mesh(4, 2)
         inst = random_instance(400, 0.05, seed=3, pad_edges=8192,
@@ -45,7 +46,7 @@ def test_dist_pd_round_runs_and_lb_valid():
         lb_dist = float(out[6][0])
         # global solve for comparison: the dist LB must lower-bound the
         # single-device PD primal objective (any feasible solution)
-        r = solve_pd(inst, SolverConfig(max_neg=512))
+        r = api.solve(inst, mode="pd", config=SolverConfig(max_neg=512))
         assert lb_dist <= r.objective + 1e-3, (lb_dist, r.objective)
         # quotient merge produces a coherent instance
         labels = np.asarray(out[5])

@@ -18,6 +18,19 @@ def test_make_instance_padding():
     np.testing.assert_allclose(sorted(c), [-2.0, 1.0])
 
 
+def test_make_instance_merges_parallel_edges():
+    """Duplicate (u, v) pairs sum their costs into one edge (first-
+    occurrence slot) — the simple-graph invariant both separation data
+    paths rely on."""
+    inst = make_instance([0, 0, 0, 1], [1, 2, 2, 2], [-1.0, 1.0, 0.5, 2.0],
+                         3, pad_edges=8)
+    u, v, c = to_host_edges(inst)
+    assert len(u) == 3
+    # first-occurrence order preserved: (0,1), (0,2) merged, (1,2)
+    assert list(zip(u.tolist(), v.tolist())) == [(0, 1), (0, 2), (1, 2)]
+    np.testing.assert_allclose(c, [-1.0, 1.5, 2.0])
+
+
 def test_objective_counts_cut_edges_only():
     inst = make_instance([0, 1, 0], [1, 2, 2], [3.0, -1.0, 2.0], 3,
                          pad_edges=8, pad_nodes=4)

@@ -1,0 +1,228 @@
+"""Dense vs sparse (CSR) data-path equivalence + CsrGraph invariants.
+
+The contract under test: with ``sparse_row_cap`` ≥ the maximum attractive
+degree, the CSR separation path produces *identical* triangles, chord
+allocations, labels and objectives to the dense (N, N) path — and its
+jaxpr contains no (N, N) allocations at all.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.cycles import separate
+from repro.core.graph import (
+    cluster_instance, csr_from_instance, csr_lookup_edge, csr_row_window,
+    grid_instance, random_instance, resolve_graph_impl,
+)
+from repro.core.solver import SolverConfig, solve_device
+
+PAD_N, PAD_E = 32, 512
+
+FAMILIES = {
+    "random": lambda s: random_instance(24, 0.3, seed=s, pad_edges=PAD_E,
+                                        pad_nodes=PAD_N),
+    "grid": lambda s: grid_instance(5, 6, seed=s, pad_edges=PAD_E,
+                                    pad_nodes=PAD_N),
+    "cluster": lambda s: cluster_instance(24, seed=s, pad_edges=PAD_E,
+                                          pad_nodes=PAD_N),
+}
+
+
+# ---------------------------------------------------------------------------
+# CsrGraph round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_csr_roundtrip_property(seed):
+    """COO → CSR → COO round trip: every valid edge appears in both rows,
+    rows are sorted, degrees/row_ptr are consistent, dead tail is clean."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 40))
+    e = int(rng.integers(0, 80))
+    pe = e + int(rng.integers(0, 16))
+    u = rng.integers(0, n, e)
+    v = rng.integers(0, n, e)
+    keep = u != v
+    from repro.core.graph import make_instance
+    inst = make_instance(u[keep], v[keep], rng.normal(size=keep.sum()),
+                         n, pad_edges=max(pe, 1))
+    csr = csr_from_instance(inst)
+    rp, col, eid = map(np.asarray, (csr.row_ptr, csr.col, csr.edge_id))
+    uu, vv, ev = map(np.asarray, (inst.u, inst.v, inst.edge_valid))
+
+    adj = {i: [] for i in range(n)}
+    for k in range(len(uu)):
+        if ev[k]:
+            adj[uu[k]].append((vv[k], k))
+            adj[vv[k]].append((uu[k], k))
+    for i in adj:
+        adj[i].sort()
+    for i in range(n):
+        got = list(zip(col[rp[i]:rp[i + 1]].tolist(),
+                       eid[rp[i]:rp[i + 1]].tolist()))
+        assert got == adj[i]
+    nnz = int(rp[n])
+    assert nnz == 2 * int(ev.sum())
+    assert (col[nnz:] == n).all() and (eid[nnz:] == -1).all()
+    assert (np.diff(rp) >= 0).all()
+
+
+def test_csr_lookup_and_window():
+    inst = random_instance(20, 0.35, seed=3, pad_edges=256, pad_nodes=24)
+    csr = csr_from_instance(inst)
+    u, v, ev = map(np.asarray, (inst.u, inst.v, inst.edge_valid))
+    # every valid edge resolves (both directions); sampled non-edges do not
+    for e in np.where(ev)[0][:40]:
+        assert int(csr_lookup_edge(csr, int(u[e]), int(v[e]))) == e
+        assert int(csr_lookup_edge(csr, int(v[e]), int(u[e]))) == e
+    present = {(min(a, b), max(a, b)) for a, b in zip(u[ev], v[ev])}
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        a, b = (int(x) for x in rng.integers(0, 20, 2))
+        if (min(a, b), max(a, b)) not in present:
+            assert int(csr_lookup_edge(csr, a, b)) == -1
+    # window == prefix of the sorted row
+    rp, col = np.asarray(csr.row_ptr), np.asarray(csr.col)
+    for node in range(20):
+        cols, eids, ok = csr_row_window(csr, jnp.int32(node), 6)
+        want = col[rp[node]:rp[node + 1]][:6].tolist()
+        got = np.asarray(cols)[np.asarray(ok)].tolist()
+        assert got == want[: len(got)] and len(got) == min(
+            6, rp[node + 1] - rp[node])
+
+
+def test_resolve_graph_impl():
+    assert resolve_graph_impl("dense", 10 ** 6) == "dense"
+    assert resolve_graph_impl("sparse", 4) == "sparse"
+    assert resolve_graph_impl("auto", 100, threshold=2048) == "dense"
+    assert resolve_graph_impl("auto", 5000, threshold=2048) == "sparse"
+    with pytest.raises(ValueError):
+        resolve_graph_impl("csr", 10)
+
+
+# ---------------------------------------------------------------------------
+# separation equivalence: identical triangles + identical chord allocation
+# ---------------------------------------------------------------------------
+
+def test_separation_identical_with_parallel_edge_input():
+    """Regression: duplicate parallel edges used to make the sparse path
+    emit one triangle per duplicate (dense collapses them via scatter-max).
+    make_instance now merges parallel edges, so both paths see the same
+    simple graph and stay bit-identical."""
+    from repro.core.graph import make_instance
+    inst = make_instance([0, 0, 0, 1], [1, 2, 2, 2], [-1.0, 1.0, 1.0, 1.0],
+                         3, pad_edges=16, pad_nodes=4)
+    d = separate(inst, max_neg=8, max_tri_per_edge=4, with_cycles45=True,
+                 graph_impl="dense")
+    s = separate(inst, max_neg=8, max_tri_per_edge=4, with_cycles45=True,
+                 graph_impl="sparse")
+    np.testing.assert_array_equal(np.asarray(d.triangles.valid),
+                                  np.asarray(s.triangles.valid))
+    np.testing.assert_array_equal(np.asarray(d.triangles.edges),
+                                  np.asarray(s.triangles.edges))
+    assert int(np.asarray(d.triangles.valid).sum()) == 1
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("with45", [False, True])
+def test_separation_identical(family, with45):
+    for seed in range(3):
+        inst = FAMILIES[family](seed)
+        d = separate(inst, max_neg=64, max_tri_per_edge=4,
+                     with_cycles45=with45, graph_impl="dense")
+        s = separate(inst, max_neg=64, max_tri_per_edge=4,
+                     with_cycles45=with45, graph_impl="sparse")
+        np.testing.assert_array_equal(np.asarray(d.triangles.valid),
+                                      np.asarray(s.triangles.valid))
+        np.testing.assert_array_equal(np.asarray(d.triangles.edges),
+                                      np.asarray(s.triangles.edges))
+        for f in ("u", "v", "cost", "edge_valid", "node_valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(d.instance, f)),
+                np.asarray(getattr(s.instance, f)), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# full-solve equivalence for every mode preset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(api.PRESETS))
+def test_solve_equivalent_every_preset(preset):
+    """Same labels and objective/LB (1e-4) from both data paths, for every
+    registered preset, on all three instance families. All instances share
+    one padded shape so each (preset, impl) compiles exactly once."""
+    p = api.get_preset(preset)
+    for family, mk in sorted(FAMILIES.items()):
+        inst = mk(0)
+        rd = api.solve(inst, preset=p, graph_impl="dense")
+        rs = api.solve(inst, preset=p, graph_impl="sparse")
+        assert np.asarray(rd.labels).tolist() == \
+            np.asarray(rs.labels).tolist(), family
+        assert float(rd.objective) == pytest.approx(float(rs.objective),
+                                                    abs=1e-4), family
+        assert float(rd.lower_bound) == pytest.approx(
+            float(rs.lower_bound), abs=1e-4), family
+        assert int(rd.rounds) == int(rs.rounds), family
+
+
+# ---------------------------------------------------------------------------
+# no (N, N) allocations anywhere in the sparse solve jaxpr
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)    # ClosedJaxpr
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _iter_eqns(inner)
+                elif hasattr(sub, "eqns"):             # raw Jaxpr
+                    yield from _iter_eqns(sub)
+
+
+def _nxn_shapes(jaxpr, n):
+    """All aval shapes in the jaxpr with ≥ 2 axes of extent ≥ n."""
+    bad = set()
+    for eqn in _iter_eqns(jaxpr):
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", ())
+            if sum(int(d) >= n for d in shape) >= 2:
+                bad.add(tuple(shape))
+    return bad
+
+
+def test_sparse_solve_jaxpr_has_no_nxn():
+    """Every separation work array in the sparse path is bounded by config
+    caps (max_neg·nbr_k²·row_cap) or O(N + E) — so with N above the row cap
+    (row windows saturate at sparse_row_cap < N) NOTHING in the jaxpr may
+    have two axes of extent ≥ N. Distinctive prime N to avoid collisions."""
+    inst = random_instance(200, 0.03, seed=0, pad_edges=701, pad_nodes=257)
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=6,
+                       graph_impl="sparse", sparse_row_cap=128)
+    jaxpr = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd", cfg=cfg))(inst)
+    bad = _nxn_shapes(jaxpr.jaxpr, inst.num_nodes)
+    assert not bad, f"(N, N)-sized allocations in sparse jaxpr: {bad}"
+    # detector sanity: the dense path must trip it
+    cfg_d = dataclasses.replace(cfg, graph_impl="dense")
+    jaxpr_d = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd", cfg=cfg_d))(inst)
+    assert _nxn_shapes(jaxpr_d.jaxpr, inst.num_nodes)
+
+
+def test_auto_threshold_picks_sparse():
+    """auto == sparse above the threshold: identical jaxpr-level behaviour
+    (no (N, N) allocations once N > sparse_threshold)."""
+    inst = random_instance(200, 0.03, seed=0, pad_edges=701, pad_nodes=257)
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=6,
+                       graph_impl="auto", sparse_threshold=256,
+                       sparse_row_cap=128)
+    jaxpr = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd", cfg=cfg))(inst)
+    assert not _nxn_shapes(jaxpr.jaxpr, inst.num_nodes)

@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.contract_matmul.ops import contract_matmul
 from repro.kernels.contract_matmul.ref import contract_matmul_ref
+from repro.kernels.cycle_intersect.ops import intersect_rows
+from repro.kernels.cycle_intersect.ref import intersect_rows_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.triangle_mp.ops import mp_sweep
@@ -42,6 +44,50 @@ def test_triangle_mp_block_sweep(block_rows):
 def test_triangle_mp_zero_input():
     x = jnp.zeros((256, 3), jnp.float32)
     np.testing.assert_allclose(np.asarray(mp_sweep(x)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# cycle_intersect
+# ---------------------------------------------------------------------------
+
+def _sorted_rows(key, R, W, n):
+    """(R, W) windows of distinct sorted ids < n, padded with sentinel n."""
+    rng = np.random.default_rng(key)
+    rows = np.full((R, W), n, dtype=np.int32)
+    for r in range(R):
+        deg = rng.integers(0, min(W, n) + 1)
+        rows[r, :deg] = np.sort(rng.choice(n, size=deg, replace=False))
+    return jnp.asarray(rows)
+
+
+@pytest.mark.parametrize("R,W,Wj", [(1, 4, 4), (7, 33, 17), (64, 128, 128),
+                                    (130, 96, 200), (9, 1, 1)])
+def test_cycle_intersect_shapes(R, W, Wj):
+    ci = _sorted_rows(R * 1000 + W, R, W, 60)
+    cj = _sorted_rows(R * 1000 + Wj + 1, R, Wj, 60)
+    got = np.asarray(intersect_rows(ci, cj))
+    want = np.asarray(intersect_rows_ref(ci, cj))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cycle_intersect_semantics():
+    """pos is the LAST matching index in cj (duplicate-edge max-id rule);
+    -1 where absent."""
+    ci = jnp.asarray([[3, 5, 9, 60]], jnp.int32)
+    cj = jnp.asarray([[3, 3, 5, 8]], jnp.int32)
+    want = np.array([[1, 2, -1, -1]], np.int32)
+    np.testing.assert_array_equal(np.asarray(intersect_rows_ref(ci, cj)),
+                                  want)
+    np.testing.assert_array_equal(np.asarray(intersect_rows(ci, cj)), want)
+
+
+def test_cycle_intersect_block_sweep():
+    ci = _sorted_rows(0, 200, 64, 500)
+    cj = _sorted_rows(1, 200, 64, 500)
+    want = np.asarray(intersect_rows_ref(ci, cj))
+    for br in (8, 16, 32):
+        np.testing.assert_array_equal(
+            np.asarray(intersect_rows(ci, cj, block_rows=br)), want)
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,8 @@ from repro.core.graph import make_instance
 from repro.core.message_passing import (
     init_mp, lower_bound, run_message_passing, triangle_min_marginals,
 )
-from repro.core.solver import SolverConfig, solve_pd
+from repro import api
+from repro.core.solver import SolverConfig
 from repro.kernels.triangle_mp.ref import mp_sweep_ref
 
 M_T = [(0, 0, 0), (1, 1, 0), (1, 0, 1), (0, 1, 1), (1, 1, 1)]
@@ -38,7 +39,8 @@ def instances(draw, max_nodes=9):
 def test_lb_never_exceeds_opt(inst):
     """LB(λ) ≤ OPT for any λ the solver produces (relaxation soundness)."""
     opt, _ = brute_force(inst)
-    res = solve_pd(inst, SolverConfig(mp_iters=8, max_neg=64))
+    res = api.solve(inst, mode="pd", config=SolverConfig(mp_iters=8,
+                                                         max_neg=64))
     assert res.lower_bound <= opt + 1e-3
     assert res.objective >= opt - 1e-3
 

@@ -1,16 +1,16 @@
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core.baselines import brute_force, gaec, icp, objective
 from repro.core.graph import grid_instance, random_instance
-from repro.core.solver import SolverConfig, solve_dual, solve_p, solve_pd
+from repro.core.solver import SolverConfig
 
 CFG = SolverConfig(max_neg=512, max_tri_per_edge=8, nbr_k=8, mp_iters=10)
 
 
 def test_pd_labels_shape(tiny_instance):
-    res = solve_pd(tiny_instance, CFG)
+    res = api.solve(tiny_instance, mode="pd", config=CFG)
     assert res.labels.shape == (tiny_instance.num_nodes,)
     assert np.isfinite(res.objective)
 
@@ -19,9 +19,9 @@ def test_lb_below_opt(tiny_instances):
     """Dual LBs must lower-bound the true optimum (soundness of (5))."""
     inst = tiny_instances
     opt, _ = brute_force(inst)
-    res = solve_pd(inst, CFG)
+    res = api.solve(inst, mode="pd", config=CFG)
     assert res.lower_bound <= opt + 1e-4
-    _, lb, _ = solve_dual(inst, CFG)
+    lb = api.solve(inst, mode="d", config=CFG).lower_bound
     assert lb <= opt + 1e-4
 
 
@@ -29,14 +29,15 @@ def test_primal_above_opt(tiny_instances):
     """Primal objectives are feasible, hence ≥ OPT."""
     inst = tiny_instances
     opt, _ = brute_force(inst)
-    assert solve_p(inst, CFG).objective >= opt - 1e-4
-    assert solve_pd(inst, CFG).objective >= opt - 1e-4
+    assert api.solve(inst, mode="p", config=CFG).objective >= opt - 1e-4
+    assert api.solve(inst, mode="pd", config=CFG).objective >= opt - 1e-4
 
 
 def test_dual_lb_monotone_across_rounds(tiny_instance):
     """D's per-round LB sequence is non-decreasing (more cycles only
     tighten the relaxation)."""
-    _, _, per_round = solve_dual(tiny_instance, CFG, rounds=4)
+    per_round = np.asarray(
+        api.solve(tiny_instance, mode="d", config=CFG).lb_history)
     assert all(b >= a - 1e-4 for a, b in zip(per_round, per_round[1:]))
 
 
@@ -46,8 +47,7 @@ def test_dual_beats_icp_on_average():
     for seed in range(4):
         inst = random_instance(20, 0.4, seed=seed, pad_edges=256,
                                pad_nodes=32)
-        _, lb, _ = solve_dual(inst, CFG)
-        tot_d += lb
+        tot_d += float(api.solve(inst, mode="d", config=CFG).lower_bound)
         tot_icp += icp(inst)
     assert tot_d >= tot_icp - 1e-3
 
@@ -62,7 +62,7 @@ def test_pd_close_to_gaec_on_grids():
     for seed in range(3):
         inst = grid_instance(16, 16, seed=seed)
         tot_g += objective(inst, gaec(inst))
-        tot_pd += solve_pd(inst, cfg).objective
+        tot_pd += float(api.solve(inst, mode="pd", config=cfg).objective)
     assert tot_pd <= tot_g * 0.995 + 1e-6 or tot_pd <= tot_g + abs(tot_g) * 0.005
 
 
@@ -71,15 +71,16 @@ def test_pd_beats_p_on_grids():
     tot_p = tot_pd = 0.0
     for seed in range(3):
         inst = grid_instance(16, 16, seed=seed)
-        tot_p += solve_p(inst).objective
-        tot_pd += solve_pd(inst).objective
+        tot_p += float(api.solve(inst, mode="p").objective)
+        tot_pd += float(api.solve(inst, mode="pd").objective)
     assert tot_pd < tot_p
 
 
 def test_triangle_instance_exact(triangle_instance):
     """On the conflicted triangle the relaxation is tight: PD must find the
     optimum (join everything, objective 0) and certify it (LB == obj)."""
-    res = solve_pd(triangle_instance, SolverConfig(mp_iters=50))
+    res = api.solve(triangle_instance, mode="pd",
+                    config=SolverConfig(mp_iters=50))
     assert res.objective == pytest.approx(0.0, abs=1e-4)
     assert res.lower_bound == pytest.approx(0.0, abs=1e-3)
 
@@ -87,7 +88,7 @@ def test_triangle_instance_exact(triangle_instance):
 def test_solver_fixed_shapes_across_rounds(tiny_instance):
     """The padded arrays never change size across rounds — every round hits
     the same jitted executable (the TPU adaptation invariant)."""
-    res = solve_pd(tiny_instance, CFG)
+    res = api.solve(tiny_instance, mode="pd", config=CFG)
     assert res.labels.shape == (tiny_instance.num_nodes,)
 
 
@@ -96,7 +97,7 @@ def test_p_contracts_all_positive_when_no_conflicts():
     from repro.core.graph import make_instance
     inst = make_instance([0, 1, 2, 3], [1, 2, 3, 4], [1.0, 2.0, 1.5, 0.5],
                          5, pad_edges=16, pad_nodes=8)
-    res = solve_p(inst)
+    res = api.solve(inst, mode="p")
     lab = np.asarray(res.labels)[:5]
     assert (lab == lab[0]).all()
     assert res.objective == 0.0

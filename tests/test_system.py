@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core.baselines import gaec, icp, objective
 from repro.core.graph import grid_instance, random_instance
-from repro.core.solver import SolverConfig, solve_dual, solve_p, solve_pd
+from repro.core.solver import SolverConfig
 
 
 def test_full_pipeline_grid():
@@ -14,8 +15,8 @@ def test_full_pipeline_grid():
     LB ≤ PD ≤ P-objective-ish ordering, finite outputs, cluster count sane."""
     inst = grid_instance(20, 20, seed=0)
     cfg = SolverConfig(max_neg=2048, max_tri_per_edge=8, mp_iters=8)
-    rp = solve_p(inst, cfg)
-    rpd = solve_pd(inst, cfg)
+    rp = api.solve(inst, mode="p", config=cfg)
+    rpd = api.solve(inst, mode="pd", config=cfg)
     assert rpd.lower_bound <= rpd.objective + 1e-3
     assert rpd.objective <= rp.objective + 1e-6  # dual info helps (Fig. 4)
     labels = np.asarray(rpd.labels)
@@ -30,9 +31,11 @@ def test_pipeline_quality_vs_gaec_and_icp():
     g = objective(inst, gaec(inst))
     cfg = SolverConfig(max_neg=4096, max_tri_per_edge=8, nbr_k=8,
                        mp_iters=10, contract_frac=0.5, max_rounds=40)
-    rpd = solve_pd(inst, cfg)
+    rpd = api.solve(inst, mode="pd", config=cfg)
     assert rpd.objective <= g + abs(g) * 0.01
-    _, lb, _ = solve_dual(inst, SolverConfig(max_neg=4096, mp_iters=10))
+    lb = float(api.solve(inst, mode="d",
+                         config=SolverConfig(max_neg=4096,
+                                             mp_iters=10)).lower_bound)
     # ICP's full-path packing is strong on 4-connected grids; D must land in
     # the same regime (within 10% of the primal-dual gap) and stay valid.
     assert lb >= icp(inst) - abs(g) * 0.10
@@ -46,26 +49,34 @@ def test_pd_plus_at_least_pd():
         inst = random_instance(40, 0.25, seed=seed, pad_edges=512,
                                pad_nodes=64)
         cfg = SolverConfig(max_neg=512, mp_iters=8)
-        tot_pd += solve_pd(inst, cfg).objective
-        tot_pdp += solve_pd(inst, cfg, plus=True).objective
+        tot_pd += float(api.solve(inst, mode="pd", config=cfg).objective)
+        tot_pdp += float(api.solve(inst, mode="pd+", config=cfg).objective)
     # not a per-instance guarantee (separation is capped/greedy); PD+ must
     # stay within 5% of PD in aggregate and usually improves it
     assert tot_pdp <= tot_pd + abs(tot_pd) * 0.05
 
 
-def test_solver_uses_pallas_sweep_same_result():
-    """Routing the MP sweep through the Pallas kernel must not change the
-    solve (schedule invariance + kernel correctness, composed)."""
+def test_solver_uses_pallas_backend_same_result():
+    """Routing the MP sweep (and the sparse intersection) through the
+    Pallas kernels must not change the solve (schedule invariance + kernel
+    correctness, composed). The second case pins graph_impl="sparse" so
+    the cycle_intersect kernel actually runs inside a full solve (auto
+    would pick dense at this N)."""
     inst = random_instance(30, 0.3, seed=5, pad_edges=256, pad_nodes=32)
-    r1 = solve_pd(inst, SolverConfig(mp_iters=6))
-    r2 = solve_pd(inst, SolverConfig(mp_iters=6, use_pallas_sweep=True))
+    cfg = SolverConfig(mp_iters=6)
+    r1 = api.solve(inst, mode="pd", config=cfg)
+    r2 = api.solve(inst, mode="pd", config=cfg, backend="pallas")
     assert r1.objective == pytest.approx(r2.objective, abs=1e-3)
     assert r1.lower_bound == pytest.approx(r2.lower_bound, abs=1e-3)
+    r3 = api.solve(inst, mode="pd", config=cfg, backend="pallas",
+                   graph_impl="sparse")
+    assert r3.objective == pytest.approx(r1.objective, abs=1e-3)
+    assert r3.lower_bound == pytest.approx(r1.lower_bound, abs=1e-3)
 
 
 def test_history_diagnostics_complete():
     inst = random_instance(20, 0.4, seed=2, pad_edges=256, pad_nodes=32)
-    res = solve_pd(inst, SolverConfig())
+    res = api.solve(inst, mode="pd", config=SolverConfig())
     assert len(res.history) == res.rounds
     assert all({"round", "lb", "n_contracted", "n_clusters"} <=
                set(h) for h in res.history)

@@ -178,8 +178,15 @@ def test_grad_accum_equals_large_batch():
                                atol=1e-4)
 
 
+# NOTE: lr=0.1 is deliberate. Adam's per-step update magnitude is bounded by
+# the learning rate, so 40 steps at lr=0.05 can move ‖w‖ by at most ~2 toward
+# the planted target of norm ~12 — the loss ratio lands at 0.501 vs the 0.5
+# threshold (the 2 pre-seed "convergence failures" were exactly this margin).
+# lr=0.1 reaches ratio ≈ 0.175, a robust margin, without changing what the
+# tests assert (training converges; compression does not break convergence).
+
 def test_loss_decreases():
-    cfg = TrainConfig(opt=OptimizerConfig(lr=0.05, grad_clip=0.0,
+    cfg = TrainConfig(opt=OptimizerConfig(lr=0.1, grad_clip=0.0,
                                           warmup_steps=0,
                                           schedule="constant",
                                           weight_decay=0.0), log_every=1)
@@ -188,7 +195,7 @@ def test_loss_decreases():
 
 
 def test_compressed_training_still_converges():
-    cfg = TrainConfig(opt=OptimizerConfig(lr=0.05, grad_clip=0.0,
+    cfg = TrainConfig(opt=OptimizerConfig(lr=0.1, grad_clip=0.0,
                                           warmup_steps=0,
                                           schedule="constant",
                                           weight_decay=0.0), log_every=1,
