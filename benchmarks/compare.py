@@ -1,15 +1,26 @@
-"""Perf-trajectory compare: print deltas between two BENCH_solver.json
-files (fresh run vs the committed baseline,
+"""Perf-trajectory gate: print deltas between two BENCH_solver.json files
+(fresh run vs the committed baseline,
 ``benchmarks/BENCH_solver.baseline.json`` — refresh that snapshot whenever
-a PR intentionally moves the numbers).
+a PR intentionally moves the numbers) and FAIL (exit 1) on regressions:
+
+* wall-clock > 20% slower than baseline (with a small absolute floor so
+  sub-100ms noise on shared runners can't trip it);
+* objective worse (higher) than baseline by > 1e-3, or lower bound worse
+  (lower) by > 1e-3 — those only move when the algorithm changes, and a
+  change must come with a refreshed baseline;
+* a finite objective/LB going non-finite (recorded as null).
 
     PYTHONPATH=src python -m benchmarks.compare \
         benchmarks/BENCH_solver.baseline.json BENCH_solver.json
 
-Exits 0 always — the report is informational (CI prints it next to the
-uploaded artifact); wall-clock on shared CI runners is too noisy to gate
-on. Objective/LB deltas, however, are flagged loudly: those should only
-move when the algorithm changes on purpose.
+``--report-only`` restores the old informational behaviour (exit 0).
+Cases present on only one side (NEW/DROPPED) are reported, never gated.
+
+Wall baselines are machine-class-relative: refresh the committed baseline
+from the BENCH_solver artifact a CI run uploads (not from a dev machine —
+a systematically slower/faster runner class shifts every wall number at
+once, which is a baseline problem, not a regression). Objective/LB gating
+is machine-independent.
 
 Handles both schemas: the pre-sparse flat per-mode layout and the current
 per-graph_impl nesting (a flat entry is treated as the "dense" path).
@@ -20,6 +31,18 @@ import json
 import sys
 
 GRAPH_IMPLS = ("dense", "sparse")
+
+WALL_REL_TOL = 0.20     # fail if fresh wall > baseline * (1 + this) ...
+WALL_ABS_FLOOR = 0.6    # ... and the absolute delta exceeds this (seconds).
+                        # The floor is sized to measured runner jitter:
+                        # identical code swings ±0.5s between back-to-back
+                        # smoke runs on shared CPU runners, so sub-second
+                        # deltas are noise — the wall gate exists to catch
+                        # catastrophic regressions (an accidental rebuild
+                        # in the round loop, an O(N²) slip), which blow
+                        # through both thresholds at once.
+OBJ_TOL = 1e-3          # objective may not worsen (rise) beyond this
+LB_TOL = 1e-3           # lower bound may not worsen (drop) beyond this
 
 
 def _normalize(report: dict) -> dict:
@@ -67,16 +90,51 @@ def compare(baseline: dict, fresh: dict) -> list[str]:
             # finite<->non-finite flip is the loudest regression of all
             if (bv is None) != (fv is None):
                 lines.append(f"    *** {metric} CHANGED: {bv} -> {fv}")
-            elif bv is not None and fv is not None and abs(bv - fv) > 1e-3:
+            elif bv is not None and fv is not None \
+                    and abs(bv - fv) > (OBJ_TOL if metric == "objective"
+                                        else LB_TOL):
                 lines.append(f"    *** {metric} CHANGED: {bv} -> {fv}")
     return lines
 
 
+def gate_failures(baseline: dict, fresh: dict) -> list[str]:
+    """Regressions that should fail CI. Only cases present in BOTH reports
+    are gated; wall-clock needs both a relative and an absolute breach."""
+    base = _normalize(baseline)
+    new = _normalize(fresh)
+    fails = []
+    for key in sorted(set(base) & set(new)):
+        name = f"{key[0]}/{key[1]}"
+        b, f = base[key], new[key]
+        bw, fw = b.get("wall_s"), f.get("wall_s")
+        if isinstance(bw, (int, float)) and isinstance(fw, (int, float)) \
+                and bw > 0 and fw > bw * (1 + WALL_REL_TOL) \
+                and fw - bw > WALL_ABS_FLOOR:
+            fails.append(f"{name}: wall-clock regressed {bw}s -> {fw}s "
+                         f"(+{100 * (fw - bw) / bw:.0f}% > "
+                         f"+{WALL_REL_TOL:.0%})")
+        for metric, tol, sign in (("objective", OBJ_TOL, +1),
+                                  ("lower_bound", LB_TOL, -1)):
+            bv, fv = b.get(metric), f.get(metric)
+            if isinstance(bv, list) or isinstance(fv, list):
+                continue
+            if bv is not None and fv is None:
+                fails.append(f"{name}: {metric} went non-finite "
+                             f"({bv} -> null)")
+            elif isinstance(bv, (int, float)) and isinstance(fv, (int, float)) \
+                    and sign * (fv - bv) > tol:
+                fails.append(f"{name}: {metric} worsened {bv} -> {fv} "
+                             f"(tol {tol})")
+    return fails
+
+
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
+    report_only = "--report-only" in argv
+    argv = [a for a in argv if a != "--report-only"]
     if len(argv) != 2:
         raise SystemExit("usage: python -m benchmarks.compare "
-                         "BASELINE.json FRESH.json")
+                         "[--report-only] BASELINE.json FRESH.json")
     with open(argv[0]) as fh:
         baseline = json.load(fh)
     with open(argv[1]) as fh:
@@ -85,6 +143,16 @@ def main(argv=None) -> None:
           f"(backend {baseline.get('backend')} -> {fresh.get('backend')})")
     for line in compare(baseline, fresh):
         print(line)
+    fails = gate_failures(baseline, fresh)
+    if fails:
+        print("\nGATE FAILURES (refresh benchmarks/BENCH_solver.baseline"
+              ".json if the change is intentional):")
+        for f in fails:
+            print(f"  FAIL {f}")
+        if not report_only:
+            raise SystemExit(1)
+    else:
+        print("gate: OK")
 
 
 if __name__ == "__main__":

@@ -16,12 +16,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
 import platform
 
 import jax
 
 from repro import api
-from repro.core.graph import random_instance
+from repro.core.graph import grid_instance, random_instance
 from repro.core.solver import solve_device
 
 from benchmarks.common import timed
@@ -30,6 +31,15 @@ SMOKE_CFG = api.SolverConfig(max_neg=512, max_tri_per_edge=8, nbr_k=8,
                              mp_iters=8)
 SMOKE_BATCH = 4
 GRAPH_IMPLS = ("dense", "sparse")
+# chunked separation: same solve, peak separation memory bounded by the
+# chunk instead of max_neg (results bit-identical to pd/sparse)
+CHUNKED_CFG = dataclasses.replace(SMOKE_CFG, graph_impl="sparse",
+                                  separation_chunk=64)
+# the beyond-dense-ceiling grid (RAMA_SMOKE_XL=1; ~1 min CPU — kept out of
+# the default CI smoke, refreshed manually alongside the baseline)
+XL_HW = 192
+XL_CFG = api.SolverConfig(max_neg=256, mp_iters=3, max_rounds=8,
+                          graph_impl="sparse", separation_chunk=64)
 
 
 def _finite(x):
@@ -92,6 +102,35 @@ def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
                     csv.add("smoke", f"{mode}/{impl}", "peak_mem_bytes",
                             entry[impl]["peak_mem_bytes"])
         report["modes"][mode] = entry
+
+    compiled = _compile_solve(inst, "pd", CHUNKED_CFG)
+    t, res = timed(compiled, inst)
+    report["modes"]["pd-chunked64"] = {"sparse": {
+        "wall_s": round(t, 4),
+        "objective": _finite(res.objective),
+        "lower_bound": _finite(res.lower_bound),
+        "rounds": int(res.rounds),
+        "peak_mem_bytes": _peak_memory_bytes(compiled),
+    }}
+    if csv is not None:
+        csv.add("smoke", "pd-chunked64/sparse", "wall_s", round(t, 4))
+
+    if os.environ.get("RAMA_SMOKE_XL"):
+        xl = grid_instance(XL_HW, XL_HW, seed=0)
+        compiled = _compile_solve(xl, "pd", XL_CFG)
+        t, res = timed(compiled, xl)
+        rounds = int(res.rounds)
+        report["modes"][f"pd-xl-grid{XL_HW}"] = {"sparse": {
+            "wall_s": round(t, 2),
+            "wall_per_round_s": round(t / max(rounds, 1), 3),
+            "objective": _finite(res.objective),
+            "lower_bound": _finite(res.lower_bound),
+            "rounds": rounds,
+            "peak_mem_bytes": _peak_memory_bytes(compiled),
+        }}
+        if csv is not None:
+            csv.add("smoke", f"pd-xl-grid{XL_HW}/sparse", "wall_s",
+                    round(t, 2))
 
     batch = api.stack_instances([
         random_instance(n=100, p=0.1, seed=s, pad_edges=1024, pad_nodes=128)

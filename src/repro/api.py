@@ -22,7 +22,12 @@ backend selector for the message-passing sweep:
 matrices, "sparse" padded-CSR with O(N + E) memory, or "auto" — the
 default — which flips to sparse above ``SolverConfig.sparse_threshold``
 nodes). Every preset therefore scales past the dense ceiling untouched;
-``"pd-sparse"`` pins the CSR path explicitly for benchmarking.
+``"pd-sparse"`` pins the CSR path explicitly for benchmarking. On the
+sparse path the solve carries a persistent ``SolverState`` (instance +
+live CSR + mapping) through the round loop — the CSR is built once and
+maintained by contraction — and ``SolverConfig.separation_chunk`` /
+``separation_shards`` stream/shard the separation batch
+(``"pd-chunked"`` / ``"pd-sharded"`` presets) with bit-identical results.
 
 Every entrypoint returns a :class:`SolveResult` of device arrays — the
 full solve (outer rounds included) is one compiled executable, and the
@@ -106,6 +111,16 @@ for _p in (
     Preset("pd-sparse", "pd",
            dataclasses.replace(_PAPER, graph_impl="sparse"),
            "PD pinned to the CSR data path (no (N, N) allocations)"),
+    Preset("pd-chunked", "pd",
+           dataclasses.replace(_PAPER, graph_impl="sparse",
+                               separation_chunk=64),
+           "CSR PD with chunked separation: peak separation memory bounded "
+           "by separation_chunk, not max_neg (bit-identical results)"),
+    Preset("pd-sharded", "pd",
+           dataclasses.replace(_PAPER, graph_impl="sparse",
+                               separation_chunk=64, separation_shards=4),
+           "CSR PD with the repulsive chunk axis shard_mapped over up to 4 "
+           "devices (clamped to the devices present; bit-identical)"),
 ):
     register_preset(_p)
 

@@ -1,12 +1,14 @@
 """RAMA multicut core: the paper's contribution as a composable JAX module."""
 from repro.core.graph import (
     CsrGraph, GRAPH_IMPLS, MulticutInstance, build_csr, cluster_instance,
-    csr_from_instance, csr_lookup_edge, csr_row_window, grid_instance,
+    csr_filter, csr_from_instance, csr_lookup_edge, csr_row_window,
+    grid_instance,
     make_instance, random_instance, resolve_graph_impl, to_host_edges,
 )
 from repro.core.contraction import (
     connected_components, maximum_matching, spanning_forest_contraction,
-    choose_contraction_set, contract, adjacency_dense, contract_dense,
+    choose_contraction_set, contract, contract_csr, adjacency_dense,
+    contract_dense,
 )
 from repro.core.cycles import (
     DenseAdj, DenseGraph, build_adjacency, build_dense, separate,
@@ -18,21 +20,24 @@ from repro.core.message_passing import (
     triangle_min_marginals, reparametrized_costs,
 )
 from repro.core.solver import (
-    SolverConfig, SolveResult, fused_pd_round, solve_device,
+    SolverConfig, SolverState, SolveResult, fused_pd_round,
+    fused_pd_round_state, solve_device,
 )
 
 __all__ = [
     "CsrGraph", "GRAPH_IMPLS", "MulticutInstance", "build_csr",
     "cluster_instance", "csr_from_instance", "csr_lookup_edge",
     "csr_row_window", "grid_instance", "make_instance", "random_instance",
-    "resolve_graph_impl", "to_host_edges", "connected_components",
+    "csr_filter", "resolve_graph_impl", "to_host_edges",
+    "connected_components",
     "maximum_matching", "spanning_forest_contraction",
-    "choose_contraction_set", "contract", "adjacency_dense",
+    "choose_contraction_set", "contract", "contract_csr",
+    "adjacency_dense",
     "contract_dense", "DenseAdj", "DenseGraph", "build_adjacency",
     "build_dense", "separate", "separate_triangles",
     "separate_triangles_sparse", "separate_cycles45",
     "separate_cycles45_sparse", "MPState", "init_mp", "run_message_passing",
     "lower_bound", "mp_sweep_reference", "triangle_min_marginals",
-    "reparametrized_costs", "SolverConfig", "SolveResult", "fused_pd_round",
-    "solve_device",
+    "reparametrized_costs", "SolverConfig", "SolverState", "SolveResult",
+    "fused_pd_round", "fused_pd_round_state", "solve_device",
 ]

@@ -10,7 +10,14 @@ Fixed-shape TPU adaptations of the paper's GPU primitives:
   *component freezing* instead of path-edge removal for repulsive-edge
   conflicts (see DESIGN.md §2).
 * contraction — Lemma 4's ``KᵀAK`` computed sparsely: gather the component
-  relabelling, lexsort + ``coo_dedupe_sum`` (Alg. 4's sort + reduce_by_key).
+  relabelling, then ONE fused lexsort over the 2E directed edge copies that
+  simultaneously merges parallel edges (Alg. 4's sort + reduce_by_key) AND
+  emits the contracted graph's :class:`~repro.core.graph.CsrGraph`
+  (:func:`contract_csr`). The CSR is a free byproduct of the sort the
+  dedupe must do anyway — which is what lets the solver carry a live CSR
+  across rounds instead of rebuilding it from COO before every separation
+  (PR 3's SolverState; ``build_csr`` runs once per solve). Both data paths
+  run this same arithmetic, so dense/sparse solves stay bit-identical.
   This is the ONLY contraction path the solver runs — it allocates O(N + E)
   for any graph_impl, so the solve jaxpr stays free of (N, N) temporaries.
   The one-hot-matmul form survives solely as the small-N test oracle
@@ -25,8 +32,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import MulticutInstance
-from repro.sparse.segment_ops import coo_dedupe_sum, segment_argmax
+from repro.core.graph import CsrGraph, MulticutInstance, csr_lookup_edge
+from repro.sparse.segment_ops import segment_argmax
 
 
 # ---------------------------------------------------------------------------
@@ -182,10 +189,16 @@ class ContractionResult(NamedTuple):
     n_contracted: jax.Array    # edges contracted this round
 
 
-def contract(inst: MulticutInstance, S: jax.Array) -> ContractionResult:
-    """Contract edge set S: relabel endpoints by component, merge parallel
-    edges by summing costs (Alg. 4's sort + reduce_by_key)."""
-    N = inst.num_nodes
+def _contract_core(inst: MulticutInstance, S: jax.Array):
+    """Shared contraction kernel: relabel endpoints by component, then one
+    lexsort over the 2E directed edge copies that both merges parallel
+    edges (sum costs, first-occurrence edge ids in (lo, hi) order — the
+    same assignment ``coo_dedupe_sum`` used to produce) and yields the
+    contracted graph's CSR: unique directed pairs, compacted in place,
+    ARE the CSR entries, so ``row_ptr``/``col``/``edge_id`` fall out of
+    the sort the dedupe needs anyway. Returns (ContractionResult, CsrGraph).
+    """
+    N, E = inst.num_nodes, inst.num_edges
     labels = connected_components(inst.u, inst.v, S & inst.edge_valid, N)
     is_root = (labels == jnp.arange(N, dtype=jnp.int32)) & inst.node_valid
     new_id = jnp.cumsum(is_root.astype(jnp.int32)) - 1
@@ -196,14 +209,81 @@ def contract(inst: MulticutInstance, S: jax.Array) -> ContractionResult:
     fu, fv = f[inst.u], f[inst.v]
     self_loop = inst.edge_valid & (fu == fv)
     gain = jnp.sum(jnp.where(self_loop, inst.cost, 0.0))
-    u2, v2, c2, ev2, _ = coo_dedupe_sum(fu, fv, inst.cost,
-                                        inst.edge_valid & ~self_loop, N)
+    valid = inst.edge_valid & ~self_loop
+
+    # the one sort: 2E directed copies by (src, dst, original edge id);
+    # dead copies get sentinel endpoints that sort past every live row
+    eid0 = jnp.arange(E, dtype=jnp.int32)
+    m = jnp.concatenate([valid, valid])
+    src = jnp.where(m, jnp.concatenate([fu, fv]), N).astype(jnp.int32)
+    dst = jnp.where(m, jnp.concatenate([fv, fu]), N).astype(jnp.int32)
+    order = jnp.lexsort((jnp.tile(eid0, 2), dst, src))
+    s, d = src[order], dst[order]
+    w_s = jnp.tile(inst.cost, 2)[order]
+    live = m[order]
+    nnz = 2 * E
+
+    # runs of equal (src, dst) = unique directed pairs = CSR entries;
+    # compacting run heads to their run rank keeps them sorted (no re-sort)
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            (s[1:] != s[:-1]) | (d[1:] != d[:-1])])
+    is_new = live & head
+    rid = jnp.cumsum(is_new.astype(jnp.int32)) - 1      # run id per entry
+    cpos = jnp.where(is_new, rid, nnz)
+    cs = jnp.full((nnz,), N, jnp.int32).at[cpos].set(s, mode="drop")
+    cd = jnp.full((nnz,), N, jnp.int32).at[cpos].set(d, mode="drop")
+    row_ptr = jnp.searchsorted(
+        cs, jnp.arange(N + 1, dtype=jnp.int32), side="left").astype(jnp.int32)
+
+    # undirected edge ids: forward pairs (src < dst) appear in exactly the
+    # (lo, hi) lexicographic order, so their rank is the new edge id; each
+    # backward pair bisects row ``dst`` for its forward partner's id
+    fwd = cs < cd
+    new_eid = jnp.cumsum(fwd.astype(jnp.int32)) - 1
+    n_unique = jnp.sum(fwd)
+    probe = CsrGraph(row_ptr=row_ptr, col=cd,
+                     edge_id=jnp.where(fwd, new_eid, -1))
+    partner = jax.vmap(lambda a, b: csr_lookup_edge(probe, a, b))(
+        jnp.where(cs < N, cd, 0), cs)
+    eid_c = jnp.where(fwd, new_eid, partner)
+    eid_c = jnp.where(cs < N, eid_c, -1).astype(jnp.int32)
+    csr = CsrGraph(row_ptr=row_ptr, col=cd, edge_id=eid_c)
+
+    # contracted COO: scatter run heads by new id, segment-sum the costs of
+    # each forward run (entries ascend by original edge id — stable sort —
+    # so the accumulation order is deterministic)
+    fw_dest = jnp.where(fwd, new_eid, E)
+    u2 = jnp.zeros(E, jnp.int32).at[fw_dest].set(cs, mode="drop")
+    v2 = jnp.zeros(E, jnp.int32).at[fw_dest].set(cd, mode="drop")
+    fw_entry = live & (s < d)
+    seg = jnp.where(fw_entry, eid_c[jnp.clip(rid, 0, nnz - 1)], E - 1)
+    c2 = jax.ops.segment_sum(jnp.where(fw_entry, w_s, 0.0), seg,
+                             num_segments=E)
+    ev2 = jnp.arange(E) < n_unique
+    c2 = jnp.where(ev2, c2, 0.0)
+
     node_valid = jnp.arange(N) < n_new
     out = MulticutInstance(u=u2, v=v2, cost=c2, edge_valid=ev2,
                            node_valid=node_valid)
-    return ContractionResult(instance=out, mapping=f, n_new=n_new,
-                             self_loop_gain=gain,
-                             n_contracted=jnp.sum(S & inst.edge_valid))
+    res = ContractionResult(instance=out, mapping=f, n_new=n_new,
+                            self_loop_gain=gain,
+                            n_contracted=jnp.sum(S & inst.edge_valid))
+    return res, csr
+
+
+def contract(inst: MulticutInstance, S: jax.Array) -> ContractionResult:
+    """Contract edge set S: relabel endpoints by component, merge parallel
+    edges by summing costs (Alg. 4's sort + reduce_by_key)."""
+    return _contract_core(inst, S)[0]
+
+
+def contract_csr(inst: MulticutInstance, S: jax.Array):
+    """Contract edge set S and also return the contracted graph's
+    :class:`CsrGraph` — maintained from the contraction's own sort, NOT a
+    fresh ``build_csr`` (bit-identical to one; asserted in
+    tests/test_solver_state.py). This is the round-loop path: the solver
+    carries the returned CSR to the next round's separation."""
+    return _contract_core(inst, S)
 
 
 def adjacency_dense(inst: MulticutInstance) -> jax.Array:

@@ -20,6 +20,17 @@ globally deduplicated. Cycles of length 4/5 are triangulated by chord edges
 of cost 0 (Lemma of [15]: chordal triangulation preserves the cycle
 relaxation); chords are allocated from the instance's padded free edge
 slots by :func:`_alloc_chords`, which is graph-impl-agnostic.
+
+Both sparse enumerations are split into a *candidate* phase (read-only
+per-repulsive-edge search — the memory/compute hot spot) and an
+*allocate/assemble* phase (chord allocation + triangle rows, cheap but
+order-dependent). The candidate phase streams the repulsive batch in
+fixed-size chunks through ``lax.scan`` (peak memory O(chunk·nbr_k²·row_cap)
+instead of O(max_neg·nbr_k²·row_cap)) and optionally splits the chunk axis
+across devices with ``shard_map``; chord slots are assigned in a canonical
+(repulsive-edge-index, chord-kind) order, so results are bit-identical for
+every ``separation_chunk``/``separation_shards`` setting — including the
+un-chunked whole-batch case (tests/test_chunked_separation.py).
 """
 from __future__ import annotations
 
@@ -27,10 +38,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.graph import (
-    CsrGraph, MulticutInstance, csr_from_instance, csr_lookup_edge,
-    csr_row_window, resolve_graph_impl,
+    CsrGraph, MulticutInstance, csr_filter, csr_from_instance,
+    csr_lookup_edge, csr_row_window, resolve_graph_impl,
 )
 from repro.kernels.cycle_intersect.ref import intersect_rows_ref
 
@@ -135,13 +148,16 @@ def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
 
 def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                               max_neg: int, max_tri_per_edge: int,
-                              row_cap: int = 128,
-                              intersect=None) -> Triangles:
+                              row_cap: int = 128, intersect=None,
+                              chunk: int = 0, shards: int = 1) -> Triangles:
     """3-cycles, CSR path: the common-neighbour test is a sorted-row
     intersection of the two endpoints' attractive rows (the paper's CSR
     kernel). Windows are ascending by node id, so taking the first K
     matches reproduces the dense top_k exactly (same K smallest common
-    neighbours) whenever ``row_cap`` covers the rows."""
+    neighbours) whenever ``row_cap`` covers the rows. The per-edge search
+    streams through :func:`_map_repulsive_batches` (``chunk``/``shards``);
+    each edge's triangles depend on its own rows only, so the output is
+    invariant to both settings."""
     if intersect is None:
         intersect = intersect_rows_ref
     N = inst.num_nodes
@@ -151,26 +167,30 @@ def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
     i = inst.u[neg_idx]
     j = inst.v[neg_idx]
 
-    window = jax.vmap(lambda n: csr_row_window(csr_pos, n, W))
-    ci, ei, oki = window(i)                 # (M, W) each
-    cj, ej, _ = window(j)
-    pos = intersect(ci, cj)                 # (M, W) match position or -1
-    pc = jnp.clip(pos, 0, W - 1)
-    found = (pos >= 0) & oki                # mask ci's sentinel padding
+    def batch(csr_pos, i_, j_, e_, ok_):
+        window = jax.vmap(lambda n: csr_row_window(csr_pos, n, W))
+        ci, ei, oki = window(i_)            # (B, W) each
+        cj, ej, _ = window(j_)
+        pos = intersect(ci, cj)             # (B, W) match position or -1
+        pc = jnp.clip(pos, 0, W - 1)
+        found = (pos >= 0) & oki            # mask ci's sentinel padding
 
-    def per_edge(found_, ei_, ej_, pc_, e_, ok_):
-        vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
-        good = (vals > 0) & ok_
-        e_ik = ei_[idxs]
-        e_jk = ej_[pc_[idxs]]
-        tri = jnp.stack([jnp.full((K,), e_, dtype=jnp.int32), e_ik, e_jk],
-                        axis=-1)
-        good = good & (e_ik >= 0) & (e_jk >= 0)
-        return tri, good
+        def per_edge(found_, ei_, ej_, pc_, e__, ok__):
+            vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
+            good = (vals > 0) & ok__
+            e_ik = ei_[idxs]
+            e_jk = ej_[pc_[idxs]]
+            tri = jnp.stack([jnp.full((K,), e__, dtype=jnp.int32), e_ik,
+                             e_jk], axis=-1)
+            good = good & (e_ik >= 0) & (e_jk >= 0)
+            return tri, good
 
-    tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, neg_idx, neg_ok)
-    tris = tris.reshape(-1, 3).astype(jnp.int32)
-    goods = goods.reshape(-1)
+        tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, e_, ok_)
+        return (tris.reshape(-1, 3).astype(jnp.int32), goods.reshape(-1))
+
+    tris, goods = _map_repulsive_batches(batch, csr_pos,
+                                         (i, j, neg_idx, neg_ok),
+                                         chunk, shards)
     return Triangles(edges=jnp.where(goods[:, None], tris, 0), valid=goods)
 
 
@@ -182,10 +202,6 @@ class ChordAlloc(NamedTuple):
     instance: MulticutInstance  # with chords written into free slots
     eid: jax.Array       # (M,) chord edge id per request or -1
     ok: jax.Array        # (M,) request satisfied
-    alloc_lo: jax.Array  # (M,) endpoints/slots of *fresh* allocations
-    alloc_hi: jax.Array  # (rows with alloc_ok False carry junk)
-    alloc_slot: jax.Array
-    alloc_ok: jax.Array
 
 
 def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
@@ -196,8 +212,9 @@ def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
     ``exists_eid``: (M,) id of an already-existing valid edge (lo, hi), or
     -1 — the one graph lookup the caller performs (dense eidx gather or CSR
     bisect), which is what makes this routine shared by both data paths.
-    Duplicates within the batch resolve to the first requester's slot, the
-    same first-writer-wins the dense scatter-max used to give.
+    Duplicates within the batch resolve to the first requester's slot
+    (first occurrence wins), and fresh slots are packed in request order —
+    so for a fixed request order, allocation is fully deterministic.
     """
     E = inst.num_edges
     M = ch_u.shape[0]
@@ -205,15 +222,23 @@ def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
     hi = jnp.maximum(ch_u, ch_v)
     exists = exists_eid >= 0
     need = ch_ok & ~exists & (lo != hi)
-    # dedupe within batch: keep first occurrence of each (lo, hi).
-    # O(M²) pairwise check — M is a small static cap (max_neg), never N².
-    key_l = jnp.where(need, lo, -1)
-    key_h = jnp.where(need, hi, -1)
-    eq = (key_l[:, None] == key_l[None, :]) & \
-        (key_h[:, None] == key_h[None, :])
-    earlier = jnp.tril(jnp.ones((M, M), dtype=bool), k=-1)
-    same_as_earlier = jnp.any(eq & earlier, axis=1) & need
-    fresh = need & ~same_as_earlier
+    # dedupe within batch: keep the first occurrence of each (lo, hi) key.
+    # One small lexsort over the M requests (stable, so runs keep request
+    # order and the run head IS the first occurrence) — O(M log M), not the
+    # O(M²) pairwise-compare this used to be.
+    sent = jnp.int32(2 ** 31 - 1)
+    kl = jnp.where(need, lo, sent)
+    kh = jnp.where(need, hi, sent)
+    order = jnp.lexsort((kh, kl))
+    kl_s, kh_s = kl[order], kh[order]
+    run_head = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (kl_s[1:] != kl_s[:-1]) | (kh_s[1:] != kh_s[:-1])])
+    run = jnp.cumsum(run_head.astype(jnp.int32)) - 1
+    head_of_run = jax.ops.segment_min(order.astype(jnp.int32), run,
+                                      num_segments=M)
+    first_idx = jnp.zeros(M, jnp.int32).at[order].set(head_of_run[run])
+    fresh = need & (first_idx == jnp.arange(M, dtype=jnp.int32))
 
     # assign free slots in edge arrays: rank the fresh chords and map rank ->
     # index of the rank-th free slot (scatter-max into a rank table)
@@ -246,37 +271,21 @@ def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
 
     # resolve each request to its chord id: existing edge, own fresh slot,
     # or the first equal requester's slot (if that one got a slot)
-    first_idx = jnp.argmax(eq & (jnp.arange(M)[None, :] <= jnp.arange(M)[:, None]),
-                           axis=1)
     own = jnp.where(need & ok_alloc[first_idx], slot[first_idx], -1)
     chord_eid = jnp.where(exists, exists_eid, own).astype(jnp.int32)
     chord_ok = ch_ok & (chord_eid >= 0) & (lo != hi)
-    return ChordAlloc(instance=inst2, eid=chord_eid, ok=chord_ok,
-                      alloc_lo=lo, alloc_hi=hi, alloc_slot=slot,
-                      alloc_ok=ok_alloc)
-
-
-def _overlay_exists(exists_eid, lo, hi, prev: ChordAlloc):
-    """Merge a previous batch's fresh allocations into an exists lookup
-    (what the dense path used to get for free from the shared eidx)."""
-    match = (lo[:, None] == prev.alloc_lo[None, :]) & \
-        (hi[:, None] == prev.alloc_hi[None, :]) & prev.alloc_ok[None, :]
-    from_prev = jnp.max(jnp.where(match, prev.alloc_slot[None, :], -1),
-                        axis=1)
-    return jnp.where(from_prev >= 0, from_prev, exists_eid)
+    return ChordAlloc(instance=inst2, eid=chord_eid, ok=chord_ok)
 
 
 # ---------------------------------------------------------------------------
 # 4/5-cycles
 # ---------------------------------------------------------------------------
 
-def _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup, a1: ChordAlloc,
-                       a2: ChordAlloc):
+def _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup,
+                       ch1, ch1_ok, ch2, ch2_ok):
     """Shared tail of both 4/5-cycle paths: chord-triangulate the best pair
     per repulsive edge into triangle rows. ``lookup(a, b)`` resolves an
     original edge id (dense eidx gather or CSR bisect)."""
-    ch1, ch1_ok = a1.eid, a1.ok
-    ch2, ch2_ok = a2.eid, a2.ok
     e = lookup
     # triangles for 4-cycle: {v0v1, v1v4, v4v0}, {v1v3, v3v4, v4v1}
     t4a = jnp.stack([e(v0, b1), ch1, e(v4, v0)], axis=-1)
@@ -292,6 +301,93 @@ def _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup, a1: ChordAlloc,
     oks = oks & jnp.all(tris >= 0, axis=-1)
     tris = jnp.where(oks[:, None], tris, 0)
     return Triangles(edges=tris, valid=oks)
+
+
+def _alloc_and_assemble(inst: MulticutInstance, lookup, v0, v4, b1, b2, b3,
+                        is4, found) -> CycleSeparationResult:
+    """Allocate/assemble phase shared by both data paths: resolve the
+    winning pairs' chords in canonical (repulsive-edge-index, chord-kind)
+    order — chord 1 = (v1, v4) and chord 2 = (v2, v4) interleaved in ONE
+    batch — then triangulate. The canonical order makes chord slot
+    assignment a function of the candidates alone, independent of how the
+    candidate phase was chunked or sharded."""
+    lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
+    lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
+    ex = jnp.stack([lookup(lo1, hi1), lookup(lo2, hi2)], axis=1).reshape(-1)
+    ch_u = jnp.stack([b1, b2], axis=1).reshape(-1)
+    ch_v = jnp.stack([v4, v4], axis=1).reshape(-1)
+    need = jnp.stack([found, found & ~is4], axis=1).reshape(-1)
+    a = _alloc_chords(inst, ex, ch_u, ch_v, need)
+    eid = a.eid.reshape(-1, 2)
+    ok = a.ok.reshape(-1, 2)
+    tri = _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup,
+                             eid[:, 0], ok[:, 0], eid[:, 1], ok[:, 1])
+    return CycleSeparationResult(instance=a.instance, triangles=tri)
+
+
+def resolve_separation_shards(shards: int) -> int:
+    """Clamp the requested separation shard count to the devices present —
+    a preset asking for 4 shards still traces on a 1-device runner."""
+    if shards is None or shards <= 1:
+        return 1
+    return min(int(shards), jax.device_count())
+
+
+def _map_repulsive_batches(fn, consts, edge_args, chunk: int, shards: int):
+    """Stream a per-repulsive-edge candidate function over the batch axis.
+
+    ``edge_args`` are (M,) arrays (one of them the validity mask — padding
+    rows are zero/False and must be masked by it); ``consts`` is a pytree
+    of read-only arrays (CSR views) every batch needs, replicated under
+    sharding. ``fn(consts, *batch)`` maps a (C,)-batch to arrays whose
+    leading axis is a multiple of C and must treat edges independently —
+    that independence is what makes the output invariant to ``chunk`` and
+    ``shards`` (asserted bit-for-bit in tests/test_chunked_separation.py).
+
+    chunk <= 0 runs the whole batch as one ``lax.scan`` step (the legacy
+    peak-memory shape); 0 < chunk < M bounds live candidate arrays at
+    O(chunk·nbr_k²·row_cap). shards > 1 additionally splits the (padded)
+    batch axis across devices with ``shard_map``, each shard scanning its
+    own chunks; per-shard outputs concatenate back in edge order. Returns
+    exactly what ``fn(consts, *edge_args)`` whole-batch would.
+    """
+    M = edge_args[0].shape[0]
+    C = M if chunk <= 0 else max(1, min(chunk, M))
+    S = resolve_separation_shards(shards)
+    if S > 1 and chunk <= 0:
+        # default chunk under sharding: one chunk per shard — C = M would
+        # pad the batch to S·M and land every REAL edge on shard 0 (the
+        # split is contiguous), leaving the other shards chewing padding
+        C = -(-M // S)
+    if S == 1 and C >= M:
+        # trivial streaming: skip the scan wrapper entirely — a length-1
+        # lax.scan is a fusion barrier (XLA can't fuse the candidate search
+        # with downstream message passing across it; measured ~25% on the
+        # smoke dual round)
+        return fn(consts, *edge_args)
+    Mp = -(-M // (S * C)) * (S * C)
+    padded = tuple(jnp.pad(a, (0, Mp - M)) for a in edge_args)
+
+    def scan_chunks(consts, *local):
+        n_chunks = local[0].shape[0] // C
+        if n_chunks == 1:
+            return fn(consts, *local)
+        xs = tuple(a.reshape((n_chunks, C) + a.shape[1:]) for a in local)
+        _, ys = jax.lax.scan(lambda _, x: (None, fn(consts, *x)), None, xs)
+        return jax.tree.map(
+            lambda y: y.reshape((y.shape[0] * y.shape[1],) + y.shape[2:]),
+            ys)
+
+    if S == 1:
+        out = scan_chunks(consts, *padded)
+    else:
+        from repro.core.dist import separation_mesh   # lazy: dist → solver
+        mesh = separation_mesh(S)
+        out = shard_map(
+            scan_chunks, mesh=mesh,
+            in_specs=(P(),) + (P("sep"),) * len(padded),
+            out_specs=P("sep"), check_vma=False)(consts, *padded)
+    return jax.tree.map(lambda y: y[: (y.shape[0] // Mp) * M], out)
 
 
 def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
@@ -350,30 +446,28 @@ def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
 
     # chords: 4-cycle v0-v1-v3-v4 needs chord (v1, v4);
     #         5-cycle v0-v1-v2-v3-v4 needs chords (v1, v4) and (v2, v4)
-    lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
-    a1 = _alloc_chords(inst, adj.eidx[lo1, hi1], b1, v4, found)
-    lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
-    exists2 = _overlay_exists(adj.eidx[lo2, hi2], lo2, hi2, a1)
-    a2 = _alloc_chords(a1.instance, exists2, b2, v4, found & ~is4)
-
-    tri = _assemble_cycles45(v0, v4, b1, b2, b3, is4, found,
-                             lambda a, b: adj.eidx[a, b], a1, a2)
-    return CycleSeparationResult(instance=a2.instance, triangles=tri)
+    return _alloc_and_assemble(inst, lambda a, b: adj.eidx[a, b],
+                               v0, v4, b1, b2, b3, is4, found)
 
 
 def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                              csr_all: CsrGraph, max_neg: int, nbr_k: int = 4,
-                             row_cap: int = 128,
-                             intersect=None) -> CycleSeparationResult:
+                             row_cap: int = 128, intersect=None,
+                             chunk: int = 0,
+                             shards: int = 1) -> CycleSeparationResult:
     """4/5-cycles, CSR path. Mirrors the dense scan pair for pair:
 
     * neighbour fans N⁺(v0)/N⁺(v4) = the first ``nbr_k`` entries of each
       sorted attractive row (== dense top_k over the 0/1 row);
     * the 4-cycle edge test v1v3 ∈ E⁺ = one CSR bisect;
     * 2-path existence (the A⁺A⁺ row-dot) = sorted-row intersection of the
-      fan nodes' windows — max_neg·nbr_k² window pairs through
+      fan nodes' windows — per-chunk·nbr_k² window pairs through
       ``intersect`` (ref searchsorted or the cycle_intersect kernel);
     * v2 = first surviving element of the winning pair's intersection.
+
+    The candidate search streams the repulsive batch through
+    :func:`_map_repulsive_batches` (``chunk``/``shards``); chord allocation
+    + triangulation run on the gathered winners in canonical order.
     """
     if intersect is None:
         intersect = intersect_rows_ref
@@ -383,77 +477,74 @@ def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
     neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
     v0 = inst.u[neg_idx]
     v4 = inst.v[neg_idx]
-    M = v0.shape[0]
 
-    fan = jax.vmap(lambda n: csr_row_window(csr_pos, n, nbr_k))
-    n0, _, ok0 = fan(v0)                       # (M, nbr_k)
-    n4, _, ok4 = fan(v4)
+    def candidates(csr_pos, v0_, v4_, ok_):
+        B = v0_.shape[0]
+        fan = jax.vmap(lambda n: csr_row_window(csr_pos, n, nbr_k))
+        n0, _, ok0 = fan(v0_)                       # (B, nbr_k)
+        n4, _, ok4 = fan(v4_)
 
-    # windows of every fan node's attractive row: (M, nbr_k, W)
-    window = jax.vmap(jax.vmap(lambda n: csr_row_window(csr_pos, n, W)))
-    r1c, _, r1ok = window(n0)
-    r3c, _, _ = window(n4)
+        # windows of every fan node's attractive row: (B, nbr_k, W)
+        window = jax.vmap(jax.vmap(lambda n: csr_row_window(csr_pos, n, W)))
+        r1c, _, r1ok = window(n0)
+        r3c, _, _ = window(n4)
 
-    # 2-path existence for every (v1, v3) pair, chunked over the j fan so
-    # only (M·nbr_k, W) windows are live at once — materializing the full
-    # (M·nbr_k², W) pair batch was 27× the dense path's temp memory at the
-    # smoke caps; only the boolean (M, nbr_k, nbr_k) result is kept
-    ci_flat = r1c.reshape(M * nbr_k, W)
-    oki_flat = r1ok.reshape(M * nbr_k, W)
-    has2 = []
-    for j in range(nbr_k):
-        cj_j = jnp.broadcast_to(r3c[:, None, j, :], (M, nbr_k, W)) \
-            .reshape(M * nbr_k, W)
-        pos_j = intersect(ci_flat, cj_j)
-        has2.append(jnp.any((pos_j >= 0) & oki_flat, axis=-1)
-                    .reshape(M, nbr_k))
-    has2path = jnp.stack(has2, axis=-1)                    # (M, nbr_k, nbr_k)
+        # 2-path existence for every (v1, v3) pair, looped over the j fan so
+        # only (B·nbr_k, W) windows are live at once; only the boolean
+        # (B, nbr_k, nbr_k) result is kept
+        ci_flat = r1c.reshape(B * nbr_k, W)
+        oki_flat = r1ok.reshape(B * nbr_k, W)
+        has2 = []
+        for j in range(nbr_k):
+            cj_j = jnp.broadcast_to(r3c[:, None, j, :], (B, nbr_k, W)) \
+                .reshape(B * nbr_k, W)
+            pos_j = intersect(ci_flat, cj_j)
+            has2.append(jnp.any((pos_j >= 0) & oki_flat, axis=-1)
+                        .reshape(B, nbr_k))
+        has2path = jnp.stack(has2, axis=-1)             # (B, nbr_k, nbr_k)
 
-    v1 = jnp.broadcast_to(n0[:, :, None], (M, nbr_k, nbr_k))
-    v3 = jnp.broadcast_to(n4[:, None, :], (M, nbr_k, nbr_k))
-    lookup_pos = jax.vmap(lambda a, b: csr_lookup_edge(csr_pos, a, b))
-    e13 = lookup_pos(v1.reshape(-1), v3.reshape(-1)).reshape(v1.shape)
+        v1 = jnp.broadcast_to(n0[:, :, None], (B, nbr_k, nbr_k))
+        v3 = jnp.broadcast_to(n4[:, None, :], (B, nbr_k, nbr_k))
+        lookup_pos = jax.vmap(lambda a, b: csr_lookup_edge(csr_pos, a, b))
+        e13 = lookup_pos(v1.reshape(-1), v3.reshape(-1)).reshape(v1.shape)
 
-    pair_ok = ok0[:, :, None] & ok4[:, None, :] & neg_ok[:, None, None]
-    distinct = (v1 != v3) & (v1 != v4[:, None, None]) & \
-        (v3 != v0[:, None, None])
-    is4 = pair_ok & distinct & (e13 >= 0)
-    is5 = pair_ok & distinct & ~is4 & has2path
-    w0 = ok0.astype(jnp.float32)
-    w4 = ok4.astype(jnp.float32)
-    score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
-        + jnp.minimum(w0[:, :, None], w4[:, None, :]) * 1e-3
-    flat = jnp.argmax(score.reshape(M, -1), axis=1)
-    bi, bj = flat // nbr_k, flat % nbr_k
-    m = jnp.arange(M)
-    found = score.reshape(M, -1)[m, flat] > -jnp.inf
-    b1 = n0[m, bi]
-    b3 = n4[m, bj]
-    b_is4 = is4[m, bi, bj]
-    # v2 = smallest common attractive neighbour of (b1, b3), excluding the
-    # repulsive endpoints — first surviving element of the winning pair's
-    # (ascending) intersection, == dense argmax over the 0/1 common row.
-    # Re-intersect just the winning pair per repulsive edge ((M, W), cheap)
-    # instead of keeping the full pair batch alive.
-    win_cols = r1c[m, bi]                                    # (M, W)
-    win_pos = intersect(win_cols, r3c[m, bj])
-    win_common = (win_pos >= 0) & r1ok[m, bi] & \
-        (win_cols != v0[:, None]) & (win_cols != v4[:, None])
-    has_v2 = jnp.any(win_common, axis=1)
-    first = jnp.argmax(win_common, axis=1)
-    b2 = jnp.where(has_v2, win_cols[m, first], 0).astype(jnp.int32)
-    found = found & (b_is4 | has_v2)
+        pair_ok = ok0[:, :, None] & ok4[:, None, :] & ok_[:, None, None]
+        distinct = (v1 != v3) & (v1 != v4_[:, None, None]) & \
+            (v3 != v0_[:, None, None])
+        is4 = pair_ok & distinct & (e13 >= 0)
+        is5 = pair_ok & distinct & ~is4 & has2path
+        w0 = ok0.astype(jnp.float32)
+        w4 = ok4.astype(jnp.float32)
+        score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
+            + jnp.minimum(w0[:, :, None], w4[:, None, :]) * 1e-3
+        flat = jnp.argmax(score.reshape(B, -1), axis=1)
+        bi, bj = flat // nbr_k, flat % nbr_k
+        m = jnp.arange(B)
+        found = score.reshape(B, -1)[m, flat] > -jnp.inf
+        b1 = n0[m, bi]
+        b3 = n4[m, bj]
+        b_is4 = is4[m, bi, bj]
+        # v2 = smallest common attractive neighbour of (b1, b3), excluding
+        # the repulsive endpoints — first surviving element of the winning
+        # pair's (ascending) intersection, == dense argmax over the 0/1
+        # common row. Re-intersect just the winning pair per repulsive edge
+        # ((B, W), cheap) instead of keeping the full pair batch alive.
+        win_cols = r1c[m, bi]                                    # (B, W)
+        win_pos = intersect(win_cols, r3c[m, bj])
+        win_common = (win_pos >= 0) & r1ok[m, bi] & \
+            (win_cols != v0_[:, None]) & (win_cols != v4_[:, None])
+        has_v2 = jnp.any(win_common, axis=1)
+        first = jnp.argmax(win_common, axis=1)
+        b2 = jnp.where(has_v2, win_cols[m, first], 0).astype(jnp.int32)
+        found = found & (b_is4 | has_v2)
+        return (b1.astype(jnp.int32), b2, b3.astype(jnp.int32), b_is4,
+                found)
 
+    b1, b2, b3, is4, found = _map_repulsive_batches(
+        candidates, csr_pos, (v0, v4, neg_ok), chunk, shards)
     lookup_all = jax.vmap(lambda a, b: csr_lookup_edge(csr_all, a, b))
-    lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
-    a1 = _alloc_chords(inst, lookup_all(lo1, hi1), b1, v4, found)
-    lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
-    exists2 = _overlay_exists(lookup_all(lo2, hi2), lo2, hi2, a1)
-    a2 = _alloc_chords(a1.instance, exists2, b2, v4, found & ~b_is4)
-
-    tri = _assemble_cycles45(v0, v4, b1, b2, b3, b_is4, found, lookup_all,
-                             a1, a2)
-    return CycleSeparationResult(instance=a2.instance, triangles=tri)
+    return _alloc_and_assemble(inst, lookup_all, v0, v4, b1, b2, b3, is4,
+                               found)
 
 
 # ---------------------------------------------------------------------------
@@ -463,15 +554,25 @@ def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
 def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
              with_cycles45: bool = True, nbr_k: int = 4,
              graph_impl: str = "dense", sparse_row_cap: int = 128,
-             sparse_threshold: int = 2048,
-             intersect=None) -> CycleSeparationResult:
+             sparse_threshold: int = 2048, intersect=None,
+             csr: CsrGraph | None = None, separation_chunk: int = 0,
+             separation_shards: int = 1) -> CycleSeparationResult:
     """Full separation round: 3-cycles always; 4/5-cycles optionally
     (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5).
 
     ``graph_impl`` selects the data path ("auto" flips to CSR above
     ``sparse_threshold`` nodes); ``intersect`` swaps the sorted-row
     intersection implementation (None = jnp ref, or the cycle_intersect
-    Pallas kernel via ``backend="pallas"``)."""
+    Pallas kernel via ``backend="pallas"``).
+
+    ``csr`` is the caller's live all-edges CSR of ``inst`` (the solver's
+    carried SolverState CSR); when given, the sparse path builds nothing —
+    the attractive E⁺ view is a sort-free :func:`csr_filter` over it. When
+    absent, one ``build_csr`` runs here (still only one: E⁺ is filtered
+    from it, not rebuilt). ``separation_chunk``/``separation_shards``
+    stream/shard the sparse candidate search (dense ignores both: it is
+    the small-N path where the whole batch fits trivially).
+    """
     impl = resolve_graph_impl(graph_impl, inst.num_nodes, sparse_threshold)
     if impl == "dense":
         adj = build_adjacency(inst)
@@ -480,18 +581,22 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
             return CycleSeparationResult(instance=inst, triangles=tri3)
         res45 = separate_cycles45(inst, adj, max_neg, nbr_k=nbr_k)
     else:
-        csr_pos = csr_from_instance(inst, attractive_only=True)
+        csr_all = csr_from_instance(inst) if csr is None else csr
+        csr_pos = csr_filter(csr_all, inst.edge_valid & (inst.cost > 0))
         tri3 = separate_triangles_sparse(inst, csr_pos, max_neg,
                                          max_tri_per_edge,
                                          row_cap=sparse_row_cap,
-                                         intersect=intersect)
+                                         intersect=intersect,
+                                         chunk=separation_chunk,
+                                         shards=separation_shards)
         if not with_cycles45:
             return CycleSeparationResult(instance=inst, triangles=tri3)
-        csr_all = csr_from_instance(inst)
         res45 = separate_cycles45_sparse(inst, csr_pos, csr_all, max_neg,
                                          nbr_k=nbr_k,
                                          row_cap=sparse_row_cap,
-                                         intersect=intersect)
+                                         intersect=intersect,
+                                         chunk=separation_chunk,
+                                         shards=separation_shards)
     edges = jnp.concatenate([tri3.edges, res45.triangles.edges], axis=0)
     valid = jnp.concatenate([tri3.valid, res45.triangles.valid], axis=0)
     return CycleSeparationResult(

@@ -15,19 +15,41 @@ single-GPU memory limits; this module implements it on the TPU mesh:
 
 LB validity: interior-block LBs + Σ min(0, c_boundary) is a valid global
 lower bound (dropping the boundary constraints only relaxes the problem).
+
+Besides the domain decomposition, this module owns the device mesh for
+*separation sharding* (``SolverConfig.separation_shards``): a 1-D "sep"
+mesh over which :func:`repro.core.cycles._map_repulsive_batches` splits
+the repulsive-edge axis of cycle separation. Unlike the block
+decomposition above, separation sharding is exact — per-shard candidate
+searches are stitched back in edge order and the chord allocator runs on
+the gathered winners, so the sharded solve is bit-identical to the
+single-device one.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
 from repro.core.graph import MulticutInstance
 from repro.core.solver import SolverConfig, fused_pd_round
+
+
+@lru_cache(maxsize=None)
+def separation_mesh(shards: int):
+    """1-D mesh over the first ``shards`` devices, axis name "sep" — the
+    mesh behind ``SolverConfig.separation_shards``. Cached so repeated
+    traces of the same config share one mesh object."""
+    n = jax.device_count()
+    if shards > n:
+        raise ValueError(f"separation_shards={shards} exceeds the "
+                         f"{n} available device(s)")
+    return jax.sharding.Mesh(np.array(jax.devices()[:shards]), ("sep",))
 
 
 def local_pd_round(u, v, cost, edge_valid, node_valid, *, mp_iters: int,

@@ -57,10 +57,27 @@ def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
     re-establishes it after each round via ``coo_dedupe_sum``, and chord
     allocation never duplicates an edge). First-occurrence order is kept,
     so duplicate-free inputs get identical edge ids as before.
+
+    Raises ``ValueError`` on mismatched ``u``/``v``/``cost`` lengths or node
+    ids outside ``[0, num_nodes)`` — either would silently misindex the
+    padded arrays downstream (wrong rows in the CSR, costs attributed to the
+    wrong edges) with no error until results are wrong.
     """
     u = np.asarray(u, dtype=np.int32)
     v = np.asarray(v, dtype=np.int32)
     cost = np.asarray(cost, dtype=np.float32)
+    if not (u.shape == v.shape == cost.shape and u.ndim == 1):
+        raise ValueError(
+            f"u/v/cost must be 1-D arrays of equal length; got shapes "
+            f"u={u.shape}, v={v.shape}, cost={cost.shape}")
+    if len(u) and (u.min() < 0 or v.min() < 0
+                   or max(u.max(), v.max()) >= num_nodes):
+        bad = np.where((u < 0) | (v < 0) | (u >= num_nodes)
+                       | (v >= num_nodes))[0]
+        raise ValueError(
+            f"node ids must lie in [0, {num_nodes}); {len(bad)} edge(s) out "
+            f"of range, first at index {int(bad[0])}: "
+            f"({int(u[bad[0]])}, {int(v[bad[0]])})")
     lo, hi = np.minimum(u, v), np.maximum(u, v)
     if len(lo):
         pairs = np.stack([lo, hi], axis=1)
@@ -171,6 +188,30 @@ def csr_row_window(csr: CsrGraph, node, cap: int):
     cols = jnp.where(ok, csr.col[idx], N)
     eids = jnp.where(ok, csr.edge_id[idx], -1)
     return cols, eids, ok
+
+
+def csr_filter(csr: CsrGraph, keep_edge: jax.Array) -> CsrGraph:
+    """Sort-free row filter: the CSR restricted to edges with
+    ``keep_edge[edge_id]`` True.
+
+    Entries of a ``CsrGraph`` are globally sorted by (row, neighbour, edge
+    id); dropping a subset preserves that order, so the filtered CSR falls
+    out of one prefix-sum + scatter — no sort. This is how the attractive
+    E⁺ view is derived each round from the solver's carried all-edges CSR
+    (bit-identical to ``csr_from_instance(inst, attractive_only=True)``
+    whenever ``keep_edge`` is the attractive mask).
+    """
+    nnz = csr.col.shape[0]
+    N = csr.num_nodes
+    keep = (csr.edge_id >= 0) & keep_edge[jnp.clip(csr.edge_id, 0)]
+    kept_before = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32), jnp.cumsum(keep.astype(jnp.int32))])
+    row_ptr = kept_before[csr.row_ptr].astype(jnp.int32)
+    dest = jnp.where(keep, kept_before[1:] - 1, nnz)   # compacted position
+    col = jnp.full((nnz,), N, jnp.int32).at[dest].set(csr.col, mode="drop")
+    eid = jnp.full((nnz,), -1, jnp.int32).at[dest].set(csr.edge_id,
+                                                       mode="drop")
+    return CsrGraph(row_ptr=row_ptr, col=col, edge_id=eid)
 
 
 def csr_lookup_edge(csr: CsrGraph, a, b) -> jax.Array:

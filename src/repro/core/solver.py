@@ -43,9 +43,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.contraction import choose_contraction_set, contract
+from repro.core.contraction import (
+    choose_contraction_set, contract, contract_csr,
+)
 from repro.core.cycles import separate
-from repro.core.graph import GRAPH_IMPLS, MulticutInstance
+from repro.core.graph import (
+    GRAPH_IMPLS, CsrGraph, MulticutInstance, csr_from_instance,
+    resolve_graph_impl,
+)
 from repro.core.message_passing import init_mp, run_message_passing
 
 MODES = ("p", "pd", "pd+", "d")
@@ -75,6 +80,14 @@ class SolverConfig:
     sparse_row_cap: int = 128       # CSR row window (≥ max attractive degree
                                     # for exact dense parity)
     sparse_threshold: int = 2048    # auto: sparse above this padded N
+    separation_chunk: int = 0       # sparse: repulsive edges per scan step
+                                    # (0 = whole batch at once); bounds the
+                                    # candidate-search peak memory at
+                                    # O(chunk·nbr_k²·row_cap)
+    separation_shards: int = 1      # sparse: devices to split the repulsive
+                                    # chunk axis over (shard_map; clamped to
+                                    # the devices present; bit-identical to
+                                    # the single-device solve)
 
 
 class SolveResult(NamedTuple):
@@ -131,8 +144,25 @@ def resolve_intersect(backend: str | None):
 # Round primitives (pure, traceable; shapes in == shapes out)
 # ---------------------------------------------------------------------------
 
+class SolverState(NamedTuple):
+    """Device-resident solver state threaded through the outer round loop.
+
+    The CSR is built once per solve (``build_csr``'s sort) and then
+    *maintained*: each round's :func:`repro.core.contraction.contract_csr`
+    emits the contracted graph's CSR from the one sort its dedupe performs
+    anyway, so separation never triggers a COO→CSR rebuild inside the loop
+    (asserted on the jaxpr in tests/test_solver_state.py). The dual state
+    lives in ``instance.cost`` — message passing hands the reparametrized
+    costs to the next round through it; per-round triangle multipliers are
+    not carried (each round re-separates its own cycle bundle, per Alg. 3).
+    """
+    instance: MulticutInstance   # current contracted instance (padded)
+    csr: CsrGraph                # live all-valid-edges CSR of ``instance``
+    mapping: jax.Array           # (N,) original node -> current cluster id
+
+
 def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
-                     with45: bool, sweep=None, intersect=None):
+                     with45: bool, sweep=None, intersect=None, csr=None):
     """One separation + message-passing round. Returns (inst', c_rep, lb)."""
     sep = separate(inst, max_neg=cfg.max_neg,
                    max_tri_per_edge=cfg.max_tri_per_edge,
@@ -140,7 +170,9 @@ def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
                    graph_impl=cfg.graph_impl,
                    sparse_row_cap=cfg.sparse_row_cap,
                    sparse_threshold=cfg.sparse_threshold,
-                   intersect=intersect)
+                   intersect=intersect, csr=csr,
+                   separation_chunk=cfg.separation_chunk,
+                   separation_shards=cfg.separation_shards)
     inst2 = sep.instance
     state = init_mp(sep.triangles)
     state, c_rep, lb = run_message_passing(
@@ -164,6 +196,24 @@ def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
     inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep, intersect)
     res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
     return res, lb
+
+
+def fused_pd_round_state(state: SolverState, cfg: SolverConfig, with45: bool,
+                         sweep=None, intersect=None):
+    """The state-carrying PD round (sparse data path): separation reads the
+    carried CSR (no rebuild), contraction maintains it, and the original→
+    cluster mapping composes in place. Returns (SolverState', lb, res)."""
+    inst2, c_rep, lb = _dual_round_core(state.instance, cfg, with45, sweep,
+                                        intersect, csr=state.csr)
+    inst3 = inst2._replace(cost=c_rep)
+    S = choose_contraction_set(inst3, matching_rounds=cfg.matching_rounds,
+                               forest_rounds=cfg.forest_rounds,
+                               switch_frac=cfg.switch_frac,
+                               contract_frac=cfg.contract_frac)
+    res, csr2 = contract_csr(inst3, S)
+    state2 = SolverState(instance=res.instance, csr=csr2,
+                         mapping=res.mapping[state.mapping])
+    return state2, lb, res
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +249,50 @@ def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
                        n_clusters=hist_nk)
 
 
+def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
+                     sweep=None, intersect=None) -> SolveResult:
+    """Sparse-path PD/PD+: the :class:`SolverState` recursion. ``build_csr``
+    runs exactly once, before round 0; every later round's separation reads
+    the CSR maintained by the previous round's ``contract_csr``, so the
+    round loop contains no COO→CSR rebuild — one sort per round (the fused
+    contract's) instead of the three the rebuild-per-round path paid."""
+    N, R = inst.num_nodes, cfg.max_rounds
+    with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
+    with45_rest = cfg.always_cycles45 or plus
+
+    state0 = SolverState(instance=inst, csr=csr_from_instance(inst),
+                         mapping=jnp.arange(N, dtype=jnp.int32))
+    state, lb0, res0 = fused_pd_round_state(state0, cfg, with45_first,
+                                            sweep, intersect)
+    nc0 = res0.n_contracted.astype(jnp.int32)
+    hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
+    hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
+    hist_nk = jnp.zeros((R,), dtype=jnp.int32).at[0].set(
+        res0.n_new.astype(jnp.int32))
+
+    def cond(carry):
+        r, _, nc_last, _, _, _ = carry
+        return (r < R) & (nc_last != 0)
+
+    def body(carry):
+        r, st, _, hist_lb, hist_nc, hist_nk = carry
+        st2, lb, res = fused_pd_round_state(st, cfg, with45_rest, sweep,
+                                            intersect)
+        nc = res.n_contracted.astype(jnp.int32)
+        hist_lb = hist_lb.at[r].set(lb)
+        hist_nc = hist_nc.at[r].set(nc)
+        hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
+        return (r + 1, st2, nc, hist_lb, hist_nc, hist_nk)
+
+    init = (jnp.int32(1), state, nc0, hist_lb, hist_nc, hist_nk)
+    r, state, _, hist_lb, hist_nc, hist_nk = \
+        jax.lax.while_loop(cond, body, init)
+    labels = state.mapping
+    return SolveResult(labels=labels, objective=inst.objective(labels),
+                       lower_bound=lb0, rounds=r, lb_history=hist_lb,
+                       n_contracted=hist_nc, n_clusters=hist_nk)
+
+
 def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
                      sweep=None, intersect=None) -> SolveResult:
     """Interleaved primal-dual Algorithm 3 (paper's PD / PD+).
@@ -206,7 +300,16 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
     Round 0 runs outside the while_loop: it may use 4/5-cycle separation
     (a different — still static — trace than later rounds) and its LB is the
     one computed on the original graph, hence the only globally valid one.
+
+    Static dispatch: the sparse data path runs the :class:`SolverState`
+    recursion (CSR built once, maintained by contraction); the dense path
+    rebuilds its (N, N) adjacency per round — at dense sizes that rebuild
+    is a cheap scatter, and the matrices could not be "maintained" more
+    cheaply than rebuilt.
     """
+    if resolve_graph_impl(cfg.graph_impl, inst.num_nodes,
+                          cfg.sparse_threshold) == "sparse":
+        return _solve_pd_sparse(inst, cfg, plus, sweep, intersect)
     N, R = inst.num_nodes, cfg.max_rounds
     mapping0 = jnp.arange(N, dtype=jnp.int32)
     with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45

@@ -1,13 +1,19 @@
 """Pallas TPU kernel for sorted-row intersection.
 
 Binary search is a poor fit for the VPU (data-dependent control flow), so
-the kernel trades comparisons for lanes: each grid step takes a
-(block_rows, 128) chunk of ``ci`` and matches it against the full
-(block_rows, Wj) paired rows of ``cj`` by tiled equality — an
-(block_rows, 128, 128) broadcast-compare per j-tile, reduced with max over
-the j index so the LAST match wins (the ref.py contract). At the default
-block_rows=8, W=128 the working set is 8·128·128 i32 = 512 KiB of VPU
-values, far under VMEM.
+the kernel trades comparisons for lanes: the grid is chunk-tiled in THREE
+dimensions — (row block, i-tile, j-tile) — and each step matches one
+(block_rows, 128) chunk of ``ci`` against one (block_rows, 128) tile of
+``cj`` by broadcast equality, max-accumulating the matched j index into
+the output tile in place (the j axis is innermost, so each output tile is
+revisited across j-tiles and the LAST match wins — the ref.py contract).
+
+Per-step working set is three (block_rows, 128) vregs plus the
+(block_rows, 128, 128) compare intermediate — independent of Wj, so the
+kernel's VMEM footprint no longer grows with the paired row width the way
+the old whole-row ``cj`` blocks did. This is the same tiling the chunked
+separation driver applies one level up: fixed-size tiles streamed over an
+axis whose extent is a config cap, not a problem size.
 
 Total work is O(R · W · Wj / 128 lanes) — for the W≈128 row caps used by
 separation this beats the gather-heavy searchsorted lowering on TPU and is
@@ -24,18 +30,18 @@ from jax.experimental import pallas as pl
 
 
 def _intersect_kernel(ci_ref, cj_ref, pos_ref):
+    t = pl.program_id(2)                   # j-tile index (innermost)
+
+    @pl.when(t == 0)
+    def _init():
+        pos_ref[...] = jnp.full(pos_ref.shape, -1, jnp.int32)
+
     ci = ci_ref[...]                       # (B, 128) i-chunk
-    wj = cj_ref.shape[1]
-    best = jnp.full(ci.shape, -1, dtype=jnp.int32)
-
-    def body(t, best):
-        cj = cj_ref[:, pl.ds(t * 128, 128)]          # (B, 128) j-tile
-        eq = ci[:, :, None] == cj[:, None, :]        # (B, 128, 128)
-        jidx = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 2) + t * 128
-        cand = jnp.max(jnp.where(eq, jidx, -1), axis=2)
-        return jnp.maximum(best, cand)
-
-    pos_ref[...] = jax.lax.fori_loop(0, wj // 128, body, best)
+    cj = cj_ref[...]                       # (B, 128) j-tile
+    eq = ci[:, :, None] == cj[:, None, :]  # (B, 128, 128)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 2) + t * 128
+    cand = jnp.max(jnp.where(eq, jidx, -1), axis=2)
+    pos_ref[...] = jnp.maximum(pos_ref[...], cand)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -47,13 +53,13 @@ def intersect_rows_pallas(ci: jax.Array, cj: jax.Array, block_rows: int = 8,
     Rj, Wj = cj.shape
     assert R == Rj and W % 128 == 0 and Wj % 128 == 0, (ci.shape, cj.shape)
     assert R % block_rows == 0, (R, block_rows)
-    grid = (R // block_rows, W // 128)
+    grid = (R // block_rows, W // 128, Wj // 128)
     return pl.pallas_call(
         _intersect_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, 128), lambda r, w: (r, w)),
-                  pl.BlockSpec((block_rows, Wj), lambda r, w: (r, 0))],
-        out_specs=pl.BlockSpec((block_rows, 128), lambda r, w: (r, w)),
+        in_specs=[pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, w)),
+                  pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, t))],
+        out_specs=pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, w)),
         out_shape=jax.ShapeDtypeStruct((R, W), jnp.int32),
         interpret=interpret,
     )(ci, cj)

@@ -1,0 +1,86 @@
+"""The benchmark perf gate (benchmarks/compare.py): nonzero exit on
+wall-clock / objective / lower-bound regressions vs the committed baseline;
+improvements, new cases, and dropped cases never fail."""
+import copy
+
+import pytest
+
+from benchmarks.compare import gate_failures, main
+
+
+def _report(wall=1.0, obj=-5.0, lb=-8.0):
+    return {"backend": "cpu", "modes": {
+        "pd": {"sparse": {"wall_s": wall, "objective": obj,
+                          "lower_bound": lb}}}}
+
+
+def test_gate_passes_on_identical_reports():
+    assert gate_failures(_report(), _report()) == []
+
+
+def test_gate_fails_on_wall_regression():
+    fails = gate_failures(_report(wall=10.0), _report(wall=15.0))
+    assert len(fails) == 1 and "wall-clock" in fails[0]
+
+
+def test_gate_ignores_small_absolute_wall_noise():
+    """Sub-floor absolute deltas are runner noise, not regressions — even
+    at a large relative swing (measured jitter on shared runners is ±0.5s
+    for identical code)."""
+    assert gate_failures(_report(wall=0.02), _report(wall=0.03)) == []
+    assert gate_failures(_report(wall=1.0), _report(wall=1.5)) == []
+
+
+def test_gate_ignores_wall_improvement():
+    assert gate_failures(_report(wall=10.0), _report(wall=5.0)) == []
+
+
+def test_gate_fails_on_objective_worsening():
+    fails = gate_failures(_report(obj=-5.0), _report(obj=-4.9))
+    assert len(fails) == 1 and "objective" in fails[0]
+
+
+def test_gate_allows_objective_improvement():
+    assert gate_failures(_report(obj=-5.0), _report(obj=-6.0)) == []
+
+
+def test_gate_fails_on_lower_bound_worsening():
+    fails = gate_failures(_report(lb=-8.0), _report(lb=-8.5))
+    assert len(fails) == 1 and "lower_bound" in fails[0]
+
+
+def test_gate_fails_on_finite_to_nonfinite():
+    fails = gate_failures(_report(), _report(obj=None))
+    assert len(fails) == 1 and "non-finite" in fails[0]
+
+
+def test_gate_skips_new_and_dropped_cases():
+    base = _report()
+    fresh = copy.deepcopy(base)
+    fresh["modes"]["pd"]["dense"] = {"wall_s": 99.0, "objective": 0.0}
+    del fresh["modes"]["pd"]["sparse"]
+    assert gate_failures(base, fresh) == []
+
+
+def test_main_exits_nonzero_on_regression(tmp_path, capsys):
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    import json
+    b.write_text(json.dumps(_report(wall=10.0)))
+    f.write_text(json.dumps(_report(wall=20.0)))
+    with pytest.raises(SystemExit) as ei:
+        main([str(b), str(f)])
+    assert ei.value.code == 1
+    assert "GATE FAILURES" in capsys.readouterr().out
+    # --report-only restores the informational behaviour
+    main(["--report-only", str(b), str(f)])
+
+
+def test_main_ok_exit(tmp_path, capsys):
+    import json
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(_report()))
+    f.write_text(json.dumps(_report(wall=0.9)))
+    main([str(b), str(f)])          # no SystemExit
+    assert "gate: OK" in capsys.readouterr().out

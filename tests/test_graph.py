@@ -1,9 +1,34 @@
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.graph import (
     grid_instance, make_instance, random_instance, to_host_edges,
 )
+
+
+def test_make_instance_rejects_mismatched_lengths():
+    with pytest.raises(ValueError, match="equal length"):
+        make_instance([0, 1], [1], [1.0, 2.0], 3)
+    with pytest.raises(ValueError, match="equal length"):
+        make_instance([0, 1], [1, 2], [1.0], 3)
+    with pytest.raises(ValueError, match="equal length"):
+        make_instance([[0, 1]], [[1, 2]], [[1.0, 2.0]], 3)  # not 1-D
+
+
+def test_make_instance_rejects_out_of_range_ids():
+    with pytest.raises(ValueError, match=r"\[0, 3\)"):
+        make_instance([0, 1], [1, 3], [1.0, 2.0], 3)   # v == num_nodes
+    with pytest.raises(ValueError, match="out of range"):
+        make_instance([0, -1], [1, 2], [1.0, 2.0], 3)  # negative id
+    # the error names the first offending edge
+    with pytest.raises(ValueError, match="index 1"):
+        make_instance([0, 7], [1, 2], [1.0, 2.0], 3)
+
+
+def test_make_instance_valid_bounds_still_pass():
+    inst = make_instance([0, 1], [2, 2], [1.0, -1.0], 3)
+    assert int(inst.edge_valid.sum()) == 2
 
 
 def test_make_instance_padding():

@@ -1,0 +1,142 @@
+"""PR 3's tentpole contract: the solver carries a live CSR across rounds.
+
+Two properties under test:
+
+* **Incremental CSR == fresh build.** ``contract_csr`` maintains the CSR
+  from the contraction's own sort; its output must be bit-identical to a
+  fresh ``build_csr`` of the contracted instance — across instance
+  families, seeds, and *chained* rounds (each round contracting the
+  previous round's output, CSR handed along the whole way).
+* **No COO→CSR rebuild inside the round loop.** The jitted sparse PD
+  solve's jaxpr contains exactly ONE sort inside the ``while_loop`` body
+  (the fused contract's dedupe+CSR sort) and exactly one ``build_csr``
+  sort per solve (before round 0). The dense path is untouched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.contraction import choose_contraction_set, contract_csr
+from repro.core.graph import (
+    cluster_instance, csr_filter, csr_from_instance, grid_instance,
+    random_instance,
+)
+from repro.core.solver import SolverConfig, solve_device
+
+PAD_N, PAD_E = 48, 768
+
+FAMILIES = {
+    "random": lambda s: random_instance(40, 0.25, seed=s, pad_edges=PAD_E,
+                                        pad_nodes=PAD_N),
+    "grid": lambda s: grid_instance(6, 7, seed=s, pad_edges=PAD_E,
+                                    pad_nodes=PAD_N),
+    "cluster": lambda s: cluster_instance(40, seed=s, pad_edges=PAD_E,
+                                          pad_nodes=PAD_N),
+}
+
+
+def _assert_csr_equal(got, want, msg=""):
+    for fld in ("row_ptr", "col", "edge_id"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=f"{msg}: CSR field {fld}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("seed", range(3))
+def test_incremental_csr_matches_fresh_build_across_rounds(family, seed):
+    """contract_csr's maintained CSR == build_csr of the contracted
+    instance, bit for bit, chained over multiple contraction rounds."""
+    inst = FAMILIES[family](seed)
+    for rnd in range(4):
+        S = choose_contraction_set(inst)
+        res, csr = contract_csr(inst, S)
+        fresh = csr_from_instance(res.instance)
+        _assert_csr_equal(csr, fresh, f"{family}/seed{seed}/round{rnd}")
+        if int(res.n_contracted) == 0:
+            break
+        inst = res.instance
+
+
+def test_csr_filter_matches_attractive_build():
+    """The sort-free attractive view over the carried CSR == the CSR built
+    from the attractive-masked COO (what separation used to rebuild)."""
+    for seed in range(4):
+        inst = random_instance(30, 0.3, seed=seed, pad_edges=256,
+                               pad_nodes=32)
+        full = csr_from_instance(inst)
+        got = csr_filter(full, inst.edge_valid & (inst.cost > 0))
+        want = csr_from_instance(inst, attractive_only=True)
+        _assert_csr_equal(got, want, f"seed{seed}")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr accounting: one build_csr sort per solve, one sort per loop round
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _iter_eqns(inner)
+                elif hasattr(sub, "eqns"):
+                    yield from _iter_eqns(sub)
+
+
+def _count_sorts(jaxpr):
+    return sum(1 for e in _iter_eqns(jaxpr) if e.primitive.name == "sort")
+
+
+def test_sparse_pd_jaxpr_one_sort_per_round():
+    """The sparse PD solve sorts exactly 4 times end to end — build_csr
+    (once, before round 0), round 0's chord-allocator dedupe + fused
+    contract, and ONE sort in the while_loop body (the fused contract that
+    maintains the CSR). Before this refactor the body also carried two
+    build_csr sorts per round; a regression reintroducing a rebuild in the
+    loop trips the body count."""
+    inst = random_instance(200, 0.03, seed=0, pad_edges=701, pad_nodes=257)
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=6,
+                       graph_impl="sparse", sparse_row_cap=128)
+    jaxpr = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd", cfg=cfg))(inst)
+    whiles = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "while"]
+    body_sorts = [_count_sorts(e.params["body_jaxpr"].jaxpr) for e in whiles]
+    # the round loop is the unique while with a sort in its body; every
+    # other top-level while (connected components etc.) must have none
+    assert sorted(body_sorts)[-1] == 1 and sum(body_sorts) == 1, body_sorts
+    assert _count_sorts(jaxpr.jaxpr) == 4
+
+
+def test_sparse_pd_plus_loop_body_sorts():
+    """PD+ separates 4/5-cycles every round, so its loop body adds exactly
+    the chord-allocator sort on top of the contract sort — still no
+    build_csr in the loop."""
+    inst = random_instance(200, 0.03, seed=0, pad_edges=701, pad_nodes=257)
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=6,
+                       graph_impl="sparse", sparse_row_cap=128)
+    jaxpr = jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd+", cfg=cfg))(inst)
+    whiles = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "while"]
+    body_sorts = [_count_sorts(e.params["body_jaxpr"].jaxpr) for e in whiles]
+    assert sorted(body_sorts)[-1] == 2 and sum(body_sorts) == 2, body_sorts
+
+
+def test_sparse_state_solve_equals_dense():
+    """End-to-end guard at a size where auto would pick dense: the carried
+    SolverState recursion must not change results vs the dense path."""
+    from repro import api
+    for family, mk in sorted(FAMILIES.items()):
+        inst = mk(1)
+        rd = api.solve(inst, mode="pd", graph_impl="dense")
+        rs = api.solve(inst, mode="pd", graph_impl="sparse")
+        assert np.asarray(rd.labels).tolist() == \
+            np.asarray(rs.labels).tolist(), family
+        assert float(rd.objective) == pytest.approx(float(rs.objective),
+                                                    abs=1e-4), family
+        assert int(rd.rounds) == int(rs.rounds), family
