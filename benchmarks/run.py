@@ -10,7 +10,9 @@ Emits ``bench,case,metric,value`` CSV on stdout.
 
 ``--smoke`` runs the fast per-mode solver benchmark instead and writes
 ``BENCH_solver.json`` (per-mode wall-clock + objective/LB) for CI perf
-tracking.
+tracking. ``--smoke --serve`` additionally pushes a mixed-size stream
+through the serving engine and records throughput + latency-percentile
+rows into the same report (see benchmarks/serve_smoke.py).
 """
 from __future__ import annotations
 
@@ -25,12 +27,19 @@ def main(argv=None) -> None:
     csv = Csv()
     csv.emit_header()
     if "--smoke" in argv:
-        extra = [a for a in argv if a != "--smoke"]
+        serve = "--serve" in argv
+        extra = [a for a in argv if a not in ("--smoke", "--serve")]
         if extra:
             raise SystemExit(f"--smoke runs alone; unexpected args: {extra}")
         from benchmarks import solver_smoke
-        solver_smoke.run_smoke(csv=csv)
+        report = solver_smoke.run_smoke(csv=csv)
+        if serve:
+            from benchmarks import serve_smoke
+            serve_smoke.run_serve(csv=csv, report=report)
         return
+    if "--serve" in argv:
+        raise SystemExit("--serve composes with --smoke "
+                         "(python -m benchmarks.run --smoke --serve)")
     from benchmarks import breakdown, kernels, scaling, table1
     mods = {"table1": table1, "scaling": scaling, "breakdown": breakdown,
             "kernels": kernels}

@@ -48,15 +48,22 @@ def main():
           f"{gap:.3f} ({abs(gap / max(abs(float(res_pd.objective)), 1e-9)) * 100:.1f}%) "
           f"of the optimum.")
 
-    # batched serving path: one vmapped executable over a stacked batch
+    # batched serving: where several instances are in flight, route them
+    # through the serving engine — it buckets shapes, micro-batches
+    # same-bucket requests into one vmapped executable, and strips the
+    # padding on the way out. (api.solve above stays the single-solve
+    # path; api.stack_instances/solve_batch remain for same-shape stacks
+    # you assemble yourself.)
+    from repro.serve import SolveEngine
+
     insts = [random_instance(n=200, p=0.08, seed=s, pad_edges=4096,
                              pad_nodes=256) for s in range(4)]
-    batch = api.stack_instances(insts)
-    mc = api.Multicut.from_preset("paper-pd")
-    res_b = mc.solve_batch(batch)
-    objs = ", ".join(f"{o:.1f}" for o in res_b.objective.tolist())
-    print(f"\nbatched solve of {len(insts)} instances (one executable): "
-          f"objectives [{objs}]")
+    engine = SolveEngine(batch_cap=4, flush_timeout_s=None)
+    res_b = engine.solve_stream(insts)
+    objs = ", ".join(f"{float(r.objective):.1f}" for r in res_b)
+    print(f"\nserved {len(insts)} instances through the engine "
+          f"({engine.stats.n_dispatches} dispatch, "
+          f"{engine.stats.compiles} compile): objectives [{objs}]")
 
 
 if __name__ == "__main__":

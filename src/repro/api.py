@@ -32,8 +32,14 @@ maintained by contraction — and ``SolverConfig.separation_chunk`` /
 Every entrypoint returns a :class:`SolveResult` of device arrays — the
 full solve (outer rounds included) is one compiled executable, and the
 only host synchronisation happens when the caller reads the result.
-Compiled callables are cached per (mode, config, backend), so repeated
-solves over same-shaped instances never retrace.
+Compiled callables live in a *bounded* LRU registry keyed per (mode,
+config, backend, batched, batch_shards) — :func:`compiled_solve` exposes
+entries, :func:`clear_cache` / :func:`cache_info` manage it, and
+:func:`trace_count` counts the XLA compilations that ran through it (the
+instrumentation :mod:`repro.serve` uses to enforce its compile budget).
+Repeated solves over same-shaped instances never retrace;
+``solve_batch(batch_shards=N)`` shards the batch axis over the device
+mesh with bit-identical results.
 """
 from __future__ import annotations
 
@@ -50,10 +56,11 @@ from repro.core.solver import (
 )
 
 __all__ = [
-    "BACKENDS", "GRAPH_IMPLS", "MODES", "Multicut", "MulticutInstance",
-    "Preset", "PRESETS", "SolveResult", "SolverConfig", "get_preset",
+    "BACKENDS", "CACHE_MAXSIZE", "GRAPH_IMPLS", "MODES", "Multicut",
+    "MulticutInstance", "Preset", "PRESETS", "SolveResult", "SolverConfig",
+    "cache_info", "clear_cache", "compiled_solve", "get_preset",
     "list_presets", "make_instance", "register_preset", "solve",
-    "solve_batch", "stack_instances", "unstack_results",
+    "solve_batch", "stack_instances", "trace_count", "unstack_results",
 ]
 
 
@@ -126,32 +133,102 @@ for _p in (
 
 
 # ---------------------------------------------------------------------------
-# Compiled-executable cache
+# Compiled-executable cache (the registry the serving engine hangs off)
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
-def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool):
-    """One jitted callable per (mode, config, backend, batched) — the
-    executable registry behind every public entrypoint."""
+CACHE_MAXSIZE = 128     # distinct (mode, config, backend, batched, shards)
+                        # executables kept live; LRU past that. Each entry
+                        # is a jitted callable whose own shape-keyed XLA
+                        # executables die with it on eviction.
+
+_trace_count = [0]      # bumps once per executable *trace* (i.e. per XLA
+                        # compilation triggered through this registry) —
+                        # the instrumentation repro.serve uses to assert
+                        # its ≤ buckets × routes compile budget.
+
+
+def trace_count() -> int:
+    """Number of solver traces (XLA compilations) that have run through the
+    registry since process start / the last :func:`clear_cache`. A new
+    (mode, config, backend) combination or a new input *shape* each add
+    one; cache hits add none."""
+    return _trace_count[0]
+
+
+@lru_cache(maxsize=CACHE_MAXSIZE)
+def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool,
+              batch_shards: int = 1):
+    """One jitted callable per (mode, config, backend, batched,
+    batch_shards) — the executable registry behind every public entrypoint
+    and behind :class:`repro.serve.SolveEngine`'s dispatch.
+
+    ``batch_shards > 1`` (batched only) shard_maps the vmapped solve over
+    the leading batch axis on the 1-D batch mesh from
+    :func:`repro.core.dist.batch_mesh`: each device solves its contiguous
+    slice of the batch independently (no collectives — instances are
+    independent), so results are bit-identical to the unsharded batch.
+    """
     sweep = resolve_sweep(backend)
     intersect = resolve_intersect(backend)
 
-    if not batched:
-        # route through solver.solve_device_jit so callers going through
-        # solver directly share one compile cache per (mode, cfg, backend)
-        from repro.core.solver import solve_device_jit
-
-        def run_single(inst: MulticutInstance) -> SolveResult:
-            return solve_device_jit(inst, mode=mode, cfg=cfg, sweep=sweep,
-                                    intersect=intersect)
-
-        return run_single
-
     def run(inst: MulticutInstance) -> SolveResult:
+        _trace_count[0] += 1        # executes at trace time only
         return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep,
                             intersect=intersect)
 
-    return jax.jit(jax.vmap(run))
+    if not batched:
+        return jax.jit(run)
+    fn = jax.vmap(run)
+    if batch_shards > 1:
+        if cfg.separation_shards > 1:
+            raise ValueError(
+                "batch_shards and SolverConfig.separation_shards are "
+                "mutually exclusive (one device axis): route large "
+                "instances to separation sharding OR shard the batch axis")
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+        from repro.core.dist import batch_mesh
+        fn = shard_map(fn, mesh=batch_mesh(batch_shards),
+                       in_specs=P("batch"), out_specs=P("batch"),
+                       check_vma=False)
+    return jax.jit(fn)
+
+
+def compiled_solve(mode: str | None = None,
+                   config: SolverConfig | None = None,
+                   backend: str | None = None,
+                   preset: str | Preset | None = None,
+                   batched: bool = False, batch_shards: int = 1):
+    """Public accessor to the executable registry: the cached jitted
+    callable :func:`solve` / :func:`solve_batch` would dispatch to. The
+    serving engine uses this to warm up and dispatch per-bucket
+    executables without re-deriving the routing each call.
+
+    ``batch_shards`` is clamped to the devices present (a router asking
+    for 4 still serves on a 1-device host), and the clamp happens *before*
+    the cache key is formed so both spellings share one executable.
+    """
+    mode, config, backend = _normalize(mode, config, backend, preset)
+    if batch_shards > 1 and not batched:
+        raise ValueError("batch_shards applies to batched executables only")
+    from repro.core.dist import resolve_batch_shards
+    return _compiled(mode, config, backend, batched,
+                     resolve_batch_shards(batch_shards))
+
+
+def clear_cache() -> None:
+    """Drop every cached executable (and with them their XLA compilations)
+    and reset :func:`trace_count`. Mainly for tests and long-lived serving
+    processes that change routing configuration wholesale."""
+    _compiled.cache_clear()
+    _trace_count[0] = 0
+
+
+def cache_info():
+    """``functools.lru_cache`` statistics of the executable registry
+    (hits/misses/maxsize/currsize)."""
+    return _compiled.cache_info()
 
 
 def _normalize(mode, config, backend, preset, graph_impl=None):
@@ -188,21 +265,33 @@ def solve(inst: MulticutInstance, mode: str | None = None,
     ``graph_impl`` overrides the config's dense/sparse/auto data path."""
     mode, config, backend = _normalize(mode, config, backend, preset,
                                        graph_impl)
-    return _compiled(mode, config, backend, batched=False)(inst)
+    return _compiled(mode, config, backend, False, 1)(inst)
 
 
 def solve_batch(batch: MulticutInstance, mode: str | None = None,
                 config: SolverConfig | None = None,
                 backend: str | None = None,
                 preset: str | Preset | None = None,
-                graph_impl: str | None = None) -> SolveResult:
+                graph_impl: str | None = None,
+                batch_shards: int = 1) -> SolveResult:
     """Solve a stacked batch of same-shape instances with one vmapped
     executable. ``batch`` is a MulticutInstance whose every leaf carries a
     leading batch axis (see :func:`stack_instances`); the returned
-    SolveResult is batched the same way (see :func:`unstack_results`)."""
+    SolveResult is batched the same way (see :func:`unstack_results`).
+    ``batch_shards > 1`` splits the batch axis over that many devices
+    (clamped to the devices present; the batch size must divide evenly);
+    results are bit-identical to the unsharded solve."""
     mode, config, backend = _normalize(mode, config, backend, preset,
                                        graph_impl)
-    return _compiled(mode, config, backend, batched=True)(batch)
+    from repro.core.dist import resolve_batch_shards
+    shards = resolve_batch_shards(batch_shards)
+    B = batch.node_valid.shape[0]
+    if B % shards:
+        raise ValueError(
+            f"batch size {B} is not divisible by the {shards} resolved "
+            f"batch shard(s); pad the batch (see repro.serve.pad_batch) "
+            f"or pick a shard count that divides it")
+    return _compiled(mode, config, backend, True, shards)(batch)
 
 
 def stack_instances(instances: list[MulticutInstance]) -> MulticutInstance:

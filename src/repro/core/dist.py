@@ -52,6 +52,30 @@ def separation_mesh(shards: int):
     return jax.sharding.Mesh(np.array(jax.devices()[:shards]), ("sep",))
 
 
+@lru_cache(maxsize=None)
+def batch_mesh(shards: int):
+    """1-D mesh over the first ``shards`` devices, axis name "batch" — the
+    mesh behind batch-axis sharding (``api.solve_batch(batch_shards=...)``
+    and the serving engine's routed dispatches). Instances on the batch
+    axis are independent solves, so the shard_map over this mesh needs no
+    collectives and is bit-identical to the single-device batch. Cached so
+    every executable for the same shard count shares one mesh object."""
+    n = jax.device_count()
+    if shards > n:
+        raise ValueError(f"batch_shards={shards} exceeds the "
+                         f"{n} available device(s)")
+    return jax.sharding.Mesh(np.array(jax.devices()[:shards]), ("batch",))
+
+
+def resolve_batch_shards(shards: int) -> int:
+    """Clamp a requested batch-shard count to the devices present — a
+    router asking for 4-way batch sharding still serves on a 1-device
+    host (mirrors ``cycles.resolve_separation_shards``)."""
+    if shards is None or shards <= 1:
+        return 1
+    return min(int(shards), jax.device_count())
+
+
 def local_pd_round(u, v, cost, edge_valid, node_valid, *, mp_iters: int,
                    max_neg: int, max_tri_per_edge: int):
     """One PD round on a single block — the same fused separation → message

@@ -89,6 +89,17 @@ class SolverConfig:
                                     # the devices present; bit-identical to
                                     # the single-device solve)
 
+    def cache_key(self) -> tuple:
+        """The canonical cache key, spelled out: the ordered tuple of field
+        values. External caches (``api._compiled``'s LRU, the serving
+        engine's queue keys) key on the frozen dataclass's own
+        ``__hash__``/``__eq__``, which hash exactly this tuple — the method
+        makes that contract explicit and testable (tests/test_api.py
+        asserts it covers every field), so adding a field that should NOT
+        differentiate executables is a conscious decision, not drift."""
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self))
+
 
 class SolveResult(NamedTuple):
     """Solve output. A NamedTuple of arrays, i.e. a pytree — it passes
@@ -387,7 +398,8 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
                  sweep=None, intersect=None) -> SolveResult:
     """The unified, pure, traceable solve: dispatches on the (static) mode.
     Safe to wrap in ``jax.jit`` / ``jax.vmap`` / ``shard_map``; prefer the
-    cached entrypoints in :mod:`repro.api`."""
+    cached entrypoints in :mod:`repro.api` — ``api._compiled`` is the one
+    jit cache (bounded, instrumented); no second jitted alias lives here."""
     if cfg.graph_impl not in GRAPH_IMPLS:
         raise ValueError(f"unknown graph_impl {cfg.graph_impl!r}; expected "
                          f"one of {GRAPH_IMPLS}")
@@ -403,11 +415,6 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
         return _solve_d_device(inst, cfg, sweep, intersect)[0]
     raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
 
-
-solve_device_jit = jax.jit(
-    solve_device, static_argnames=("mode", "cfg", "sweep", "intersect"))
-_solve_d_jit = jax.jit(
-    _solve_d_device, static_argnames=("cfg", "sweep", "intersect"))
 
 
 # ---------------------------------------------------------------------------

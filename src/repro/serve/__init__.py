@@ -1,0 +1,32 @@
+"""repro.serve — bucketed, sharded, multi-backend serving for multicut.
+
+The production front end over :mod:`repro.api`'s executable registry:
+
+* :mod:`repro.serve.buckets` — geometric size bucketing + neutral shape
+  padding (one compiled executable per bucket serves every instance in
+  that bucket, results unchanged);
+* :mod:`repro.serve.router` — declarative size→(mode, config, backend,
+  batch_shards) routing;
+* :mod:`repro.serve.engine` — the queueing / continuous micro-batching /
+  demux engine itself.
+
+Quickstart::
+
+    from repro.serve import SolveEngine
+
+    engine = SolveEngine(batch_cap=8)
+    engine.warmup([(inst.num_nodes, inst.num_edges)])
+    results = engine.solve_stream(instances)     # mixed sizes welcome
+"""
+from repro.serve.buckets import (
+    Bucket, BucketPolicy, filler_instance, pad_batch, pad_instance,
+    strip_result,
+)
+from repro.serve.engine import EngineStats, SolveEngine, SolveTicket
+from repro.serve.router import Route, Router, RoutingRule, default_router
+
+__all__ = [
+    "Bucket", "BucketPolicy", "EngineStats", "Route", "Router",
+    "RoutingRule", "SolveEngine", "SolveTicket", "default_router",
+    "filler_instance", "pad_batch", "pad_instance", "strip_result",
+]

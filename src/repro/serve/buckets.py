@@ -1,0 +1,160 @@
+"""Size bucketing + shape padding for the serving engine.
+
+XLA compiles one executable per input shape; a serving stream of
+arbitrary-size multicut instances would otherwise retrace on every new
+(N, E) pair. :class:`BucketPolicy` quantises instance shapes onto a
+geometric grid of **buckets** so the number of distinct compiled shapes
+is logarithmic in the size range served, and :func:`pad_instance` lifts
+any instance onto its bucket shape with *neutral filler*:
+
+* padded edge slots are zero-cost self-loops at node 0 with
+  ``edge_valid=False`` — exactly the slots :func:`repro.core.graph
+  .make_instance` already emits past the live prefix, so every solver
+  path (dense/sparse separation, contraction, message passing) masks
+  them out by construction;
+* padded node slots are ``node_valid=False`` — they never join a
+  contraction set, never appear in a CSR row, and keep their identity
+  label.
+
+Neutrality is therefore structural, not approximate: the padded solve
+runs the same masked arithmetic over a longer zero tail. The objective
+(`sum where(edge_valid & cut)`) and the dual lower bound gain only exact
+zero terms, and ``tests/test_serve_buckets.py`` asserts objective/LB
+bit-identity (with a 1e-12 fallback tolerance documented there) plus
+label-prefix equality across bucket sizes for every preset family.
+
+One caveat, pinned by the same tests: free edge slots are *separation
+capacity* — cycle chords allocate into them. Padding never removes
+capacity, but an instance arriving with **no** free slots couldn't
+allocate chords at all, and bucketing hands it some; its dual bound can
+then legitimately tighten (never worsen). Equality above is exact
+whenever chord demand fits the headroom both shapes have — true for
+every instance built with normal ``make_instance`` padding.
+
+:func:`filler_instance` (an all-invalid instance) fills the tail of a
+partial batch so the engine's batch axis is static too — one executable
+per (bucket, route) serves every dispatch, full or not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.graph import MulticutInstance
+
+
+class Bucket(NamedTuple):
+    """A padded (nodes, edges) shape class — the unit of compilation."""
+    nodes: int
+    edges: int
+
+
+def _geom_ceil(x: int, floor: int, growth: float, cap: int | None,
+               what: str) -> int:
+    """Smallest rung of the geometric ladder floor·growth^k that is ≥ x
+    (integer ladder: each rung is ceil(prev·growth), so it is exact and
+    strictly increasing for growth > 1). Clamped to ``cap``; x past the
+    cap is an admission error, not a silent truncation."""
+    if x < 0:
+        raise ValueError(f"negative {what} count {x}")
+    if cap is not None and x > cap:
+        raise ValueError(f"instance needs {x} {what} slots, over the "
+                         f"policy cap {cap}")
+    s = max(1, floor)
+    while s < x:
+        s = int(-(-s * growth // 1))      # ceil(s * growth)
+    return s if cap is None else min(s, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Geometric (nodes, edges) bucketing. Frozen + hashable, so a policy
+    can key executable caches alongside the route.
+
+    ``growth`` trades compile count against padding waste: the ladder has
+    O(log_growth(range)) rungs and the worst-case padded/true size ratio
+    is ``growth`` per axis. Caps bound the largest admissible instance
+    (an instance past a cap raises at admission — the serving layer's
+    contract is that every admitted request fits a compiled shape).
+    """
+    node_floor: int = 64
+    edge_floor: int = 256
+    growth: float = 2.0
+    node_cap: int | None = None
+    edge_cap: int | None = None
+
+    def __post_init__(self):
+        if self.growth <= 1.0:
+            raise ValueError(f"growth must exceed 1.0, got {self.growth}")
+        if self.node_floor < 1 or self.edge_floor < 1:
+            raise ValueError("bucket floors must be >= 1")
+
+    def bucket_for(self, num_nodes: int, num_edges: int) -> Bucket:
+        """The bucket an instance with these *padded* counts lands in."""
+        return Bucket(
+            nodes=_geom_ceil(num_nodes, self.node_floor, self.growth,
+                             self.node_cap, "node"),
+            edges=_geom_ceil(num_edges, self.edge_floor, self.growth,
+                             self.edge_cap, "edge"))
+
+    def bucket_of(self, inst: MulticutInstance) -> Bucket:
+        return self.bucket_for(inst.num_nodes, inst.num_edges)
+
+
+def pad_instance(inst: MulticutInstance, bucket: Bucket) -> MulticutInstance:
+    """Lift ``inst`` onto ``bucket``'s shape with neutral filler slots
+    (zero-cost invalid self-loops / invalid nodes — see module docstring).
+    Pure jnp, so it works on device arrays and under jit; a no-op when the
+    instance already has the bucket shape."""
+    dn = bucket.nodes - inst.num_nodes
+    de = bucket.edges - inst.num_edges
+    if dn < 0 or de < 0:
+        raise ValueError(f"instance shape ({inst.num_nodes} nodes, "
+                         f"{inst.num_edges} edges) exceeds bucket {bucket}")
+    if dn == 0 and de == 0:
+        return inst
+    return MulticutInstance(
+        u=jnp.pad(inst.u, (0, de)),
+        v=jnp.pad(inst.v, (0, de)),
+        cost=jnp.pad(inst.cost, (0, de)),
+        edge_valid=jnp.pad(inst.edge_valid, (0, de)),
+        node_valid=jnp.pad(inst.node_valid, (0, dn)))
+
+
+def filler_instance(bucket: Bucket) -> MulticutInstance:
+    """An all-invalid instance of the bucket shape: zero nodes, zero edges
+    live. Solves cleanly in every mode (the round loop exits after one
+    no-contraction round) and is used to pad partial batches to the
+    engine's static batch axis."""
+    return MulticutInstance(
+        u=jnp.zeros((bucket.edges,), jnp.int32),
+        v=jnp.zeros((bucket.edges,), jnp.int32),
+        cost=jnp.zeros((bucket.edges,), jnp.float32),
+        edge_valid=jnp.zeros((bucket.edges,), bool),
+        node_valid=jnp.zeros((bucket.nodes,), bool))
+
+
+def pad_batch(instances: list[MulticutInstance], bucket: Bucket,
+              batch: int) -> MulticutInstance:
+    """Pad each instance to ``bucket``, fill the tail with
+    :func:`filler_instance` up to ``batch`` slots, and stack — the static
+    (batch, bucket) shape every engine dispatch presents to its
+    executable."""
+    if not instances:
+        raise ValueError("need at least one instance")
+    if len(instances) > batch:
+        raise ValueError(f"{len(instances)} instances exceed the batch "
+                         f"cap {batch}")
+    from repro.api import stack_instances
+    padded = [pad_instance(i, bucket) for i in instances]
+    padded += [filler_instance(bucket)] * (batch - len(instances))
+    return stack_instances(padded)
+
+
+def strip_result(res, num_nodes: int):
+    """Undo the node padding on a single-instance SolveResult: labels come
+    back at the request's original padded length; scalars and per-round
+    history are untouched (padding adds only exact-zero terms to them)."""
+    return res._replace(labels=res.labels[:num_nodes])

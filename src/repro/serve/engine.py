@@ -1,0 +1,272 @@
+"""The serving engine: admission → bucketed queues → micro-batched
+dispatch → demux.
+
+:class:`SolveEngine` turns a stream of arbitrary-size multicut requests
+into dense work for a *fixed* set of compiled executables:
+
+1. **Admission** (:meth:`SolveEngine.submit`): the request's instance is
+   routed (:class:`repro.serve.router.Router` picks mode / config /
+   backend / batch_shards from its size) and bucketed
+   (:class:`repro.serve.buckets.BucketPolicy` quantises its shape), then
+   parked on the queue keyed by ``(bucket, route)``. Instances over the
+   policy caps are rejected here — every admitted request is guaranteed a
+   compiled shape.
+2. **Continuous micro-batching** (:meth:`SolveEngine.pump`): a queue
+   dispatches as soon as it holds ``batch_cap`` requests; a non-empty
+   queue whose head has waited ``flush_timeout_s`` dispatches partially,
+   with the tail of the batch padded by neutral filler instances. The
+   batch axis is therefore always exactly ``batch_cap`` — one executable
+   per (bucket, route) serves every dispatch, full or not.
+3. **Dispatch** goes through :func:`repro.api.compiled_solve` — the same
+   bounded executable registry behind ``api.solve`` — as one vmapped
+   (optionally batch-sharded) device executable per (bucket, route).
+4. **Demux**: the batched :class:`SolveResult` is unstacked, filler slots
+   dropped, node padding stripped, and each request's ticket resolved.
+   Results are bit-identical to ``api.solve`` on the same bucket-padded
+   instance (asserted in tests/test_serve_engine.py) because they *are*
+   the same executable modulo vmap — which the same test shows is
+   bit-preserving.
+
+Compile accounting: the engine counts solver traces (via
+``api.trace_count``) across its lifetime in ``stats.compiles``; serving
+any stream costs at most ``len(buckets seen) × len(routes seen)``
+compilations, and the serve smoke benchmark asserts exactly that.
+
+The engine is synchronous and single-threaded by design — JAX dispatch
+is; overlap comes from batching, not threads. ``clock`` is injectable so
+timeout behaviour is testable without sleeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+
+from repro import api
+from repro.core.dist import resolve_batch_shards
+from repro.core.graph import MulticutInstance
+from repro.core.solver import SolveResult
+from repro.serve.buckets import Bucket, BucketPolicy, pad_batch, strip_result
+from repro.serve.router import Route, Router, default_router
+
+__all__ = ["EngineStats", "SolveEngine", "SolveTicket"]
+
+
+LATENCY_WINDOW = 65536      # most-recent request latencies kept for
+                            # percentile reporting; bounded so a long-lived
+                            # engine's memory doesn't grow with traffic
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters the benchmarks and tests read; all cumulative except
+    ``latencies_s``, a sliding window of the most recent requests."""
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_dispatches: int = 0
+    n_filler_slots: int = 0     # batch slots served to padding, not requests
+    compiles: int = 0           # solver traces triggered through the engine
+    latencies_s: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of dispatched batch slots that held real requests."""
+        total = self.n_completed + self.n_filler_slots
+        return self.n_completed / total if total else 0.0
+
+
+class SolveTicket:
+    """Handle for one submitted request. ``result()`` blocks the caller's
+    Python thread by pumping the engine until this request's batch has
+    been dispatched (force-flushing its queue if the stream has gone
+    quiet), then returns the padding-stripped :class:`SolveResult`."""
+
+    __slots__ = ("inst", "bucket", "route", "t_submit", "t_done", "_result",
+                 "_engine", "_key")
+
+    def __init__(self, engine: "SolveEngine", inst: MulticutInstance,
+                 bucket: Bucket, route: Route, t_submit: float):
+        self._engine = engine
+        self.inst = inst
+        self.bucket = bucket
+        self.route = route
+        self.t_submit = t_submit
+        self.t_done: float | None = None
+        self._result: SolveResult | None = None
+        self._key = (bucket, route)
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def result(self) -> SolveResult:
+        if self._result is None:
+            self._engine.pump()
+        if self._result is None:        # partial batch: force my queue out
+            self._engine.flush(self._key)
+        assert self._result is not None
+        return self._result
+
+
+class SolveEngine:
+    """Bucketed, routed, micro-batching front end over the executable
+    registry. See the module docstring for the pipeline; construction is
+    cheap (executables compile lazily on first dispatch, or eagerly via
+    :meth:`warmup`)."""
+
+    def __init__(self, router: Router | None = None,
+                 policy: BucketPolicy | None = None, batch_cap: int = 8,
+                 flush_timeout_s: float | None = 0.05, clock=time.monotonic):
+        if batch_cap < 1:
+            raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
+        self.router = router if router is not None else default_router()
+        self.policy = policy if policy is not None else BucketPolicy()
+        self.batch_cap = batch_cap
+        self.flush_timeout_s = flush_timeout_s
+        self._clock = clock
+        self._queues: dict[tuple[Bucket, Route], deque[SolveTicket]] = {}
+        self.stats = EngineStats()
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, inst: MulticutInstance,
+               route: Route | None = None) -> SolveTicket:
+        """Admit one request. ``route`` pins the routing decision (else the
+        engine's router decides from the instance size); bucketing may
+        reject instances over the policy caps with ``ValueError``."""
+        if route is None:
+            route = self.router.route_instance(inst)
+        self._check_batch_split(route)
+        bucket = self.policy.bucket_of(inst)
+        ticket = SolveTicket(self, inst, bucket, route, self._clock())
+        self._queues.setdefault((bucket, route), deque()).append(ticket)
+        self.stats.n_submitted += 1
+        self.pump()                     # full queues dispatch immediately
+        return ticket
+
+    def submit_many(self, instances) -> list[SolveTicket]:
+        return [self.submit(i) for i in instances]
+
+    def _check_batch_split(self, route: Route) -> None:
+        """Admission/warmup guard: the dispatch batch axis must split
+        evenly across the route's (clamped) device shards — fail with a
+        clear error here rather than an opaque shard_map one at dispatch."""
+        shards = resolve_batch_shards(route.batch_shards)
+        if self.batch_cap % shards:
+            raise ValueError(
+                f"batch_cap={self.batch_cap} is not divisible by the "
+                f"route's {shards} batch shard(s); the dispatch batch "
+                f"axis must split evenly across devices")
+
+    # -- batching / dispatch ------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """One scheduling step: dispatch every full batch, plus partial
+        batches whose head request has waited past ``flush_timeout_s``
+        (or every non-empty queue when ``force``). Returns the number of
+        dispatches issued."""
+        n = 0
+        for key, q in self._queues.items():
+            while len(q) >= self.batch_cap:
+                self._dispatch(key, [q.popleft()
+                                     for _ in range(self.batch_cap)])
+                n += 1
+            # re-read the clock per queue: a multi-second blocking dispatch
+            # above may have pushed later queues' heads past their timeout
+            now = self._clock()
+            timed_out = (q and self.flush_timeout_s is not None
+                         and now - q[0].t_submit >= self.flush_timeout_s)
+            if q and (force or timed_out):
+                self._dispatch(key, [q.popleft() for _ in range(len(q))])
+                n += 1
+        return n
+
+    def flush(self, key: tuple[Bucket, Route] | None = None) -> int:
+        """Force-dispatch pending requests — one queue (``key``) or all of
+        them — regardless of occupancy or timeout."""
+        if key is None:
+            return self.pump(force=True)
+        q = self._queues.get(key)
+        if not q:
+            return 0
+        n = 0
+        while q:
+            take = [q.popleft() for _ in range(min(len(q), self.batch_cap))]
+            self._dispatch(key, take)
+            n += 1
+        return n
+
+    def _dispatch(self, key: tuple[Bucket, Route],
+                  tickets: list[SolveTicket]) -> None:
+        bucket, route = key
+        batch = pad_batch([t.inst for t in tickets], bucket, self.batch_cap)
+        fn = api.compiled_solve(mode=route.mode, config=route.config,
+                                backend=route.backend, batched=True,
+                                batch_shards=route.batch_shards)
+        traces0 = api.trace_count()
+        res = fn(batch)
+        jax.block_until_ready(res)      # latency honesty: results are real
+        self.stats.compiles += api.trace_count() - traces0
+        now = self._clock()
+        for b, t in enumerate(tickets):
+            single = jax.tree.map(lambda x: x[b], res)
+            t._result = strip_result(single, t.inst.num_nodes)
+            t.t_done = now
+            self.stats.latencies_s.append(now - t.t_submit)
+        self.stats.n_dispatches += 1
+        self.stats.n_completed += len(tickets)
+        self.stats.n_filler_slots += self.batch_cap - len(tickets)
+
+    # -- lifecycle helpers --------------------------------------------------
+
+    def warmup(self, shapes) -> int:
+        """Pre-compile the executables the given (num_nodes, num_edges)
+        example shapes would hit: each shape is routed and bucketed exactly
+        like a real request, then its executable runs once on an all-filler
+        batch. Returns the number of fresh compilations. Requests landing
+        in warmed (bucket, route)s never pay a compile."""
+        from repro.serve.buckets import filler_instance
+        traces0 = api.trace_count()
+        seen = set()
+        for (num_nodes, num_edges) in shapes:
+            bucket = self.policy.bucket_for(num_nodes, num_edges)
+            route = self.router.route(num_nodes, num_edges)
+            self._check_batch_split(route)
+            if (bucket, route) in seen:
+                continue
+            seen.add((bucket, route))
+            fn = api.compiled_solve(mode=route.mode, config=route.config,
+                                    backend=route.backend, batched=True,
+                                    batch_shards=route.batch_shards)
+            batch = pad_batch([filler_instance(bucket)], bucket,
+                              self.batch_cap)
+            jax.block_until_ready(fn(batch))
+        fresh = api.trace_count() - traces0
+        self.stats.compiles += fresh
+        return fresh
+
+    def solve_stream(self, instances) -> list[SolveResult]:
+        """Convenience driver: submit everything, drain, and return results
+        in submission order — the engine equivalent of mapping
+        ``api.solve`` over the stream."""
+        tickets = self.submit_many(instances)
+        self.flush()
+        return [t.result() for t in tickets]
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def __repr__(self):
+        return (f"SolveEngine(batch_cap={self.batch_cap}, "
+                f"flush_timeout_s={self.flush_timeout_s}, "
+                f"queues={len(self._queues)}, pending={self.pending}, "
+                f"served={self.stats.n_completed}, "
+                f"compiles={self.stats.compiles})")

@@ -1,0 +1,172 @@
+"""Config-driven routing of solve requests across modes / configs /
+backends / device layouts.
+
+A :class:`Route` is everything the engine needs to pick an executable for
+a request — (mode, SolverConfig, backend, batch_shards) — and a
+:class:`Router` is an ordered rule list mapping instance *size* to a
+Route: the serving analogue of ``SolverConfig.graph_impl="auto"``, lifted
+to whole solver configurations. The default router encodes the data-path
+economics measured in ``benchmarks/``: small instances go to the dense
+(N, N) separation path (MXU-friendly, fastest below ~10³ nodes), large
+ones to the sparse CSR path with chunked separation (O(N + E) memory);
+``batch_shards`` optionally spreads a dispatch's batch axis over the
+device mesh (see :func:`repro.core.dist.batch_mesh`).
+
+Routers are declarative and JSON-able: :meth:`Router.from_spec` builds
+one from a plain dict (presets by name + config overrides), so a serving
+deployment can ship routing as config rather than code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api import BACKENDS, MODES, get_preset
+from repro.core.graph import MulticutInstance
+from repro.core.solver import SolverConfig
+
+__all__ = ["Route", "RoutingRule", "Router", "default_router"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Where a request is sent: the executable-registry key minus the
+    bucket shape. Frozen + hashable — (bucket, route) keys the engine's
+    queues and executable lookups."""
+    mode: str = "pd"
+    config: SolverConfig = dataclasses.field(default_factory=SolverConfig)
+    backend: str = "reference"
+    batch_shards: int = 1
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; expected one "
+                             f"of {MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; expected "
+                             f"one of {BACKENDS}")
+        if self.batch_shards < 1:
+            raise ValueError(f"batch_shards must be >= 1, got "
+                             f"{self.batch_shards}")
+        if self.batch_shards > 1 and self.config.separation_shards > 1:
+            raise ValueError("a route cannot both shard the batch axis and "
+                             "the separation axis (one device mesh)")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingRule:
+    """``route`` applies when the instance fits under both bounds
+    (``None`` = unbounded on that axis). Rules are tried in order; sizes
+    are the instance's *padded* counts — the same numbers bucketing sees.
+    """
+    route: Route
+    max_nodes: int | None = None
+    max_edges: int | None = None
+
+    def matches(self, num_nodes: int, num_edges: int) -> bool:
+        return ((self.max_nodes is None or num_nodes <= self.max_nodes)
+                and (self.max_edges is None or num_edges <= self.max_edges))
+
+
+class Router:
+    """Ordered size-based routing rules with a catch-all default."""
+
+    def __init__(self, rules: list[RoutingRule] = (),
+                 default: Route | None = None):
+        self.rules = tuple(rules)
+        self.default = default if default is not None else Route()
+
+    def route(self, num_nodes: int, num_edges: int) -> Route:
+        for rule in self.rules:
+            if rule.matches(num_nodes, num_edges):
+                return rule.route
+        return self.default
+
+    def route_instance(self, inst: MulticutInstance) -> Route:
+        return self.route(inst.num_nodes, inst.num_edges)
+
+    def routes(self) -> tuple[Route, ...]:
+        """Every distinct Route this router can emit (rule order, default
+        last) — e.g. for enumerating a deployment's executable set."""
+        out = []
+        for r in (*(rule.route for rule in self.rules), self.default):
+            if r not in out:
+                out.append(r)
+        return tuple(out)
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "Router":
+        """Build a router from a JSON-able dict::
+
+            Router.from_spec({
+                "rules": [
+                    {"max_nodes": 512, "preset": "paper-pd",
+                     "config": {"graph_impl": "dense"}},
+                    {"max_nodes": 65536, "preset": "pd-chunked",
+                     "batch_shards": 4},
+                ],
+                "default": {"mode": "pd",
+                            "config": {"graph_impl": "sparse"}},
+            })
+
+        Each rule/default entry gives either a ``preset`` name (its mode +
+        config seed the route) or an explicit ``mode``; ``config`` is a
+        dict of ``SolverConfig`` field overrides applied on top; ``backend``
+        and ``batch_shards`` pass through.
+        """
+        def build_route(entry: dict) -> Route:
+            entry = dict(entry)
+            entry.pop("max_nodes", None)
+            entry.pop("max_edges", None)
+            preset = entry.pop("preset", None)
+            mode = entry.pop("mode", None)
+            overrides = entry.pop("config", {})
+            backend = entry.pop("backend", "reference")
+            batch_shards = entry.pop("batch_shards", 1)
+            if entry:
+                raise ValueError(f"unknown route keys {sorted(entry)}")
+            if preset is not None:
+                p = get_preset(preset)
+                mode = p.mode if mode is None else mode
+                config = p.config
+            else:
+                config = SolverConfig()
+            mode = "pd" if mode is None else mode
+            if overrides:
+                bad = set(overrides) - {f.name for f in
+                                        dataclasses.fields(SolverConfig)}
+                if bad:
+                    raise ValueError(f"unknown SolverConfig fields "
+                                     f"{sorted(bad)}")
+                config = dataclasses.replace(config, **overrides)
+            return Route(mode=mode, config=config, backend=backend,
+                         batch_shards=batch_shards)
+
+        bad = set(spec) - {"rules", "default"}
+        if bad:
+            raise ValueError(f"unknown router spec keys {sorted(bad)}; "
+                             f"expected 'rules' and/or 'default'")
+        rules = [RoutingRule(route=build_route(e),
+                             max_nodes=e.get("max_nodes"),
+                             max_edges=e.get("max_edges"))
+                 for e in spec.get("rules", ())]
+        default = spec.get("default")
+        return cls(rules=rules,
+                   default=build_route(default) if default else None)
+
+
+def default_router(batch_shards: int = 1,
+                   dense_max_nodes: int = 1024) -> Router:
+    """The measured-economics default: dense separation below
+    ``dense_max_nodes`` padded nodes, sparse CSR with chunked separation
+    above. ``batch_shards`` spreads every dispatch's batch axis over that
+    many devices (clamped to the devices present at dispatch)."""
+    small = Route(mode="pd",
+                  config=SolverConfig(graph_impl="dense"),
+                  batch_shards=batch_shards)
+    large = Route(mode="pd",
+                  config=SolverConfig(graph_impl="sparse",
+                                      separation_chunk=64),
+                  batch_shards=batch_shards)
+    return Router(
+        rules=[RoutingRule(route=small, max_nodes=dense_max_nodes)],
+        default=large)

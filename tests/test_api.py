@@ -147,6 +147,26 @@ def test_solve_batch_equals_single_solves(mode):
             np.asarray(s.n_contracted).tolist()
 
 
+@pytest.mark.parametrize("preset", ["paper-p", "paper-pd", "paper-pd+",
+                                    "paper-d", "pd-opt", "pd-sparse",
+                                    "pd-chunked"])
+def test_solve_batch_equals_single_solves_across_presets(preset):
+    """The vmapped batch solve is the single solve, per preset — the
+    serving engine's demux relies on this being exact."""
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(4)]
+    rb = api.solve_batch(api.stack_instances(insts), preset=preset)
+    for b, inst in enumerate(insts):
+        s = api.solve(inst, preset=preset)
+        assert np.asarray(rb.labels)[b].tolist() == \
+            np.asarray(s.labels).tolist()
+        assert np.asarray(rb.objective)[b].tobytes() == \
+            np.asarray(s.objective).tobytes()
+        assert np.asarray(rb.lower_bound)[b].tobytes() == \
+            np.asarray(s.lower_bound).tobytes()
+        assert int(np.asarray(rb.rounds)[b]) == int(s.rounds)
+
+
 def test_unstack_results_roundtrip():
     insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
              for s in range(3)]
@@ -211,6 +231,63 @@ def test_history_is_stacked_arrays():
     assert (np.asarray(res.n_contracted)[r:] == 0).all()
     # round 0 carries the original-graph LB
     assert float(np.asarray(res.lb_history)[0]) == float(res.lower_bound)
+
+
+# ---------------------------------------------------------------------------
+# executable registry: bounded cache, explicit keys, instrumentation
+# ---------------------------------------------------------------------------
+
+def test_solver_config_hashable_with_canonical_key():
+    a = SolverConfig(mp_iters=7)
+    b = SolverConfig(mp_iters=7)
+    assert a == b and hash(a) == hash(b)
+    assert a.cache_key() == b.cache_key()
+    assert a.cache_key() != SolverConfig(mp_iters=8).cache_key()
+    # the canonical key covers every field, in declaration order
+    assert len(a.cache_key()) == len(dataclasses.fields(SolverConfig))
+
+
+def test_registry_is_bounded_lru():
+    info = api.cache_info()
+    assert info.maxsize == api.CACHE_MAXSIZE
+    assert info.maxsize is not None            # unbounded would be None
+
+
+def test_clear_cache_resets_registry_and_traces():
+    inst = _insts()[0]
+    api.solve(inst, mode="pd", config=CFG)
+    assert api.cache_info().currsize > 0
+    api.clear_cache()
+    assert api.cache_info().currsize == 0
+    assert api.trace_count() == 0
+    # re-solving recompiles exactly one executable for one shape
+    api.solve(inst, mode="pd", config=CFG)
+    assert api.trace_count() == 1
+    assert api.cache_info().currsize == 1
+
+
+def test_trace_count_counts_shapes_not_calls():
+    api.clear_cache()
+    cfg = dataclasses.replace(CFG, mp_iters=4)
+    a = random_instance(10, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    b = random_instance(10, 0.5, seed=1, pad_edges=64, pad_nodes=16)
+    api.solve(a, mode="pd", config=cfg)
+    api.solve(b, mode="pd", config=cfg)        # same shape: cache hit
+    assert api.trace_count() == 1
+    wider = random_instance(10, 0.5, seed=0, pad_edges=128, pad_nodes=16)
+    api.solve(wider, mode="pd", config=cfg)    # new shape: one more trace
+    assert api.trace_count() == 2
+
+
+def test_compiled_solve_exposes_registry_entry():
+    cfg = dataclasses.replace(CFG, mp_iters=6)
+    fn1 = api.compiled_solve(mode="pd", config=cfg, batched=True)
+    fn2 = api.compiled_solve(mode="pd", config=cfg, batched=True)
+    assert fn1 is fn2                          # value-equal configs collide
+    insts = [random_instance(10, 0.5, seed=s, pad_edges=64, pad_nodes=16)
+             for s in range(2)]
+    res = fn1(api.stack_instances(insts))
+    assert res.labels.shape == (2, 16)
 
 
 def test_facade_replace():

@@ -1,0 +1,213 @@
+"""SolveEngine end-to-end: micro-batching, demux fidelity, compile
+accounting, timeout flush, and the acceptance contract — a mixed-size
+stream of ≥ 64 instances served with at most (buckets × routes)
+compilations and per-request results bit-identical to a direct
+``api.solve`` of the same bucket-padded instance."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import random_instance
+from repro.core.solver import SolverConfig
+from repro.serve import (
+    BucketPolicy, Route, Router, RoutingRule, SolveEngine, pad_instance,
+)
+
+# cheap configs so 64+ solves stay fast on CPU runners
+CFG_DENSE = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4,
+                         graph_impl="dense")
+CFG_SPARSE = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4,
+                          graph_impl="sparse", sparse_row_cap=64)
+POLICY = BucketPolicy(node_floor=16, edge_floor=64)
+
+
+def _router():
+    """Two routes: small instances dense, larger ones sparse — so the
+    mixed stream genuinely exercises multi-route dispatch."""
+    return Router(rules=[RoutingRule(route=Route(mode="pd",
+                                                 config=CFG_DENSE),
+                                     max_nodes=24)],
+                  default=Route(mode="pd", config=CFG_SPARSE))
+
+
+def _mixed_stream(n: int):
+    rng = np.random.default_rng(7)
+    out = []
+    for s in range(n):
+        nodes = int(rng.integers(8, 48))
+        out.append(random_instance(nodes, 0.4, seed=s))
+    return out
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+def _bit_eq(a, b):
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract
+# ---------------------------------------------------------------------------
+
+def test_mixed_stream_end_to_end():
+    api.clear_cache()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None)
+    insts = _mixed_stream(64)
+    results = eng.solve_stream(insts)
+    assert len(results) == 64
+    assert eng.pending == 0
+    assert eng.stats.n_completed == 64
+
+    # compile budget: one executable per (bucket, route) actually seen
+    keys = {(POLICY.bucket_of(i), eng.router.route_instance(i))
+            for i in insts}
+    buckets = {k[0] for k in keys}
+    routes = {k[1] for k in keys}
+    assert len(routes) == 2                      # stream spans both routes
+    assert eng.stats.compiles == len(keys)
+    assert eng.stats.compiles <= len(buckets) * len(routes)
+
+    # per-request results bit-identical to the direct solve of the same
+    # bucket-padded instance (same executable family, vmap is bit-preserving)
+    for inst, res in zip(insts, results):
+        bucket = POLICY.bucket_of(inst)
+        route = eng.router.route_instance(inst)
+        direct = api.solve(pad_instance(inst, bucket), mode=route.mode,
+                           config=route.config, backend=route.backend)
+        assert _bit_eq(res.objective, direct.objective)
+        assert _bit_eq(res.lower_bound, direct.lower_bound)
+        assert _bit_eq(res.lb_history, direct.lb_history)
+        assert int(res.rounds) == int(direct.rounds)
+        assert np.array_equal(np.asarray(res.labels),
+                              np.asarray(direct.labels)[:inst.num_nodes])
+        # demux stripped the node padding back to the request's own shape
+        assert res.labels.shape == (inst.num_nodes,)
+
+
+def test_results_identical_to_unpadded_solve_given_headroom():
+    """The serving layer adds padding + batching only: engine results match
+    a plain per-instance api.solve bit-exactly whenever the instance
+    already has non-binding chord headroom (padding neutrality, pinned in
+    test_serve_buckets; instances arriving *full* can only improve)."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None)
+    rng = np.random.default_rng(3)
+    insts = [random_instance(int(rng.integers(8, 32)), 0.4, seed=s,
+                             pad_edges=512) for s in range(8)]
+    for inst, res in zip(insts, eng.solve_stream(insts)):
+        route = eng.router.route_instance(inst)
+        plain = api.solve(inst, mode=route.mode, config=route.config)
+        assert _bit_eq(res.objective, plain.objective)
+        assert np.array_equal(np.asarray(res.labels),
+                              np.asarray(plain.labels)[:inst.num_nodes])
+
+
+# ---------------------------------------------------------------------------
+# batching mechanics
+# ---------------------------------------------------------------------------
+
+def test_full_queue_dispatches_on_submit():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None)
+    same_bucket = [random_instance(12, 0.5, seed=s, pad_edges=64,
+                                   pad_nodes=16) for s in range(4)]
+    tickets = [eng.submit(i) for i in same_bucket]
+    # 4th submit filled the batch — dispatched without any flush
+    assert all(t.done for t in tickets)
+    assert eng.stats.n_dispatches == 1
+    assert eng.stats.n_filler_slots == 0
+    assert eng.stats.occupancy == 1.0
+
+
+def test_timeout_flush_with_fake_clock():
+    clock = FakeClock()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=0.5, clock=clock)
+    t = eng.submit(random_instance(12, 0.5, seed=0, pad_edges=64,
+                                   pad_nodes=16))
+    assert not t.done and eng.pending == 1
+    clock.advance(0.4)
+    assert eng.pump() == 0                     # not timed out yet
+    assert not t.done
+    clock.advance(0.2)
+    assert eng.pump() == 1                     # 0.6s > 0.5s: partial flush
+    assert t.done
+    assert eng.stats.n_filler_slots == 7       # 1 real + 7 filler slots
+    assert t.latency_s == pytest.approx(0.6)
+
+
+def test_ticket_result_forces_its_queue():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None)
+    t = eng.submit(random_instance(12, 0.5, seed=0, pad_edges=64,
+                                   pad_nodes=16))
+    assert not t.done
+    res = t.result()                           # blocks by force-flushing
+    assert t.done and res.labels.shape == (16,)
+
+
+def test_solve_stream_preserves_submission_order():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None)
+    insts = _mixed_stream(12)
+    results = eng.solve_stream(insts)
+    for inst, res in zip(insts, results):
+        assert res.labels.shape == (inst.num_nodes,)
+
+
+def test_warmup_precompiles():
+    api.clear_cache()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None)
+    shapes = [(i.num_nodes, i.num_edges) for i in _mixed_stream(16)]
+    fresh = eng.warmup(shapes)
+    assert fresh == eng.stats.compiles > 0
+    # serving the same shapes afterwards costs zero additional compiles
+    before = eng.stats.compiles
+    eng.solve_stream(_mixed_stream(16))
+    assert eng.stats.compiles == before
+
+
+def test_oversized_instance_rejected_at_admission():
+    eng = SolveEngine(router=_router(),
+                      policy=BucketPolicy(node_floor=16, edge_floor=64,
+                                          node_cap=32),
+                      batch_cap=4)
+    with pytest.raises(ValueError):
+        eng.submit(random_instance(40, 0.3, seed=0))
+    assert eng.pending == 0
+
+
+def test_batch_cap_must_split_across_shards():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=3)
+    inst = random_instance(12, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    if __import__("jax").device_count() >= 2:
+        with pytest.raises(ValueError):
+            eng.submit(inst, route=Route(mode="pd", config=CFG_DENSE,
+                                         batch_shards=2))
+    else:       # clamped to 1 device: divisibility trivially holds
+        eng.submit(inst, route=Route(mode="pd", config=CFG_DENSE,
+                                     batch_shards=2))
+
+
+def test_pinned_route_overrides_router():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None)
+    inst = random_instance(12, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    pinned = Route(mode="p", config=CFG_DENSE)
+    t = eng.submit(inst, route=pinned)
+    assert t.route == pinned
+    res = t.result()
+    direct = api.solve(pad_instance(inst, t.bucket), mode="p",
+                       config=CFG_DENSE)
+    assert _bit_eq(res.objective, direct.objective)

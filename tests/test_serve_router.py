@@ -1,0 +1,98 @@
+"""Routing rules, spec parsing, and route validation."""
+import dataclasses
+
+import pytest
+
+from repro.core.solver import SolverConfig
+from repro.serve.router import Route, Router, RoutingRule, default_router
+
+
+def test_rule_order_first_match_wins():
+    small = Route(mode="p")
+    mid = Route(mode="pd")
+    big = Route(mode="pd", config=SolverConfig(graph_impl="sparse"))
+    r = Router(rules=[RoutingRule(route=small, max_nodes=100),
+                      RoutingRule(route=mid, max_nodes=1000)],
+               default=big)
+    assert r.route(50, 10) is small
+    assert r.route(500, 10) is mid
+    assert r.route(5000, 10) is big
+
+
+def test_edge_bound_matches_too():
+    lite = Route(mode="p")
+    r = Router(rules=[RoutingRule(route=lite, max_nodes=100,
+                                  max_edges=200)])
+    assert r.route(50, 100) is lite
+    assert r.route(50, 201) is r.default      # edge bound violated
+    assert r.route(101, 100) is r.default
+
+
+def test_routes_enumeration_dedupes():
+    a = Route(mode="p")
+    r = Router(rules=[RoutingRule(route=a, max_nodes=10),
+                      RoutingRule(route=Route(mode="p"), max_nodes=20)],
+               default=Route(mode="pd"))
+    routes = r.routes()
+    assert len(routes) == 2                   # the two equal "p" routes merge
+    assert routes[-1] == Route(mode="pd")
+
+
+def test_default_router_splits_on_size():
+    r = default_router(dense_max_nodes=1024)
+    small = r.route(512, 100)
+    large = r.route(4096, 100)
+    assert small.config.graph_impl == "dense"
+    assert large.config.graph_impl == "sparse"
+    assert large.config.separation_chunk > 0
+
+
+def test_route_validation():
+    with pytest.raises(ValueError):
+        Route(mode="nope")
+    with pytest.raises(ValueError):
+        Route(backend="cuda")
+    with pytest.raises(ValueError):
+        Route(batch_shards=0)
+    with pytest.raises(ValueError):
+        Route(batch_shards=2,
+              config=SolverConfig(separation_shards=2))
+
+
+def test_route_hashable_and_value_keyed():
+    a = Route(mode="pd", config=SolverConfig(mp_iters=7))
+    b = Route(mode="pd", config=SolverConfig(mp_iters=7))
+    assert a == b and hash(a) == hash(b)
+    assert a != dataclasses.replace(a, mode="p")
+
+
+def test_from_spec_roundtrip():
+    r = Router.from_spec({
+        "rules": [
+            {"max_nodes": 512, "preset": "paper-pd",
+             "config": {"graph_impl": "dense"}},
+            {"max_nodes": 65536, "preset": "pd-chunked",
+             "batch_shards": 4},
+        ],
+        "default": {"mode": "pd", "config": {"graph_impl": "sparse"}},
+    })
+    small = r.route(100, 50)
+    assert small.config.graph_impl == "dense" and small.mode == "pd"
+    mid = r.route(10_000, 50)
+    assert mid.config.separation_chunk == 64      # from the pd-chunked preset
+    assert mid.batch_shards == 4
+    assert r.route(100_000, 50).config.graph_impl == "sparse"
+
+
+def test_from_spec_rejects_unknown_keys():
+    with pytest.raises(ValueError):
+        Router.from_spec({"rules": [{"max_nodes": 10, "flavor": "mild"}]})
+    with pytest.raises(ValueError):
+        Router.from_spec({"default": {"config": {"not_a_field": 3}}})
+    with pytest.raises(ValueError):         # typo'd top-level key, not a
+        Router.from_spec({"rule": []})      # silent default-only router
+
+
+def test_from_spec_empty_is_default_route():
+    r = Router.from_spec({})
+    assert r.route(10, 10) == Route()

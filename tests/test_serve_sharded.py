@@ -1,0 +1,106 @@
+"""Batch-axis sharding: ``api.solve_batch(batch_shards=...)`` and
+batch-sharded engine routes are bit-identical to the single-device batch.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+dist-4dev job) to exercise real device placement; on one device the
+shard count clamps to 1 and the tests reduce to the unsharded baseline.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.dist import batch_mesh, resolve_batch_shards
+from repro.core.graph import random_instance
+from repro.core.solver import SolverConfig
+from repro.serve import BucketPolicy, Route, SolveEngine
+
+CFG = SolverConfig(max_neg=64, mp_iters=3, max_rounds=8)
+
+
+def _bit_eq_tree(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_resolve_batch_shards_clamps():
+    n = jax.device_count()
+    assert resolve_batch_shards(1) == 1
+    assert resolve_batch_shards(0) == 1
+    assert resolve_batch_shards(None) == 1
+    assert resolve_batch_shards(10 ** 6) == n
+
+
+def test_batch_mesh_cached_and_bounded():
+    assert batch_mesh(1) is batch_mesh(1)
+    assert batch_mesh(1).axis_names == ("batch",)
+    with pytest.raises(ValueError):
+        batch_mesh(jax.device_count() + 1)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_solve_batch_sharded_bit_identical(shards):
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(8)]
+    batch = api.stack_instances(insts)
+    base = api.solve_batch(batch, mode="pd", config=CFG)
+    sharded = api.solve_batch(batch, mode="pd", config=CFG,
+                              batch_shards=shards)
+    assert _bit_eq_tree(base, sharded)
+
+
+def test_solve_batch_sharded_sparse_path():
+    cfg = SolverConfig(max_neg=64, mp_iters=3, max_rounds=6,
+                       graph_impl="sparse", sparse_row_cap=64)
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(4)]
+    batch = api.stack_instances(insts)
+    base = api.solve_batch(batch, mode="pd", config=cfg)
+    sharded = api.solve_batch(batch, mode="pd", config=cfg, batch_shards=4)
+    assert _bit_eq_tree(base, sharded)
+
+
+def test_engine_sharded_route_matches_single_solves():
+    eng = SolveEngine(policy=BucketPolicy(node_floor=16, edge_floor=128),
+                      batch_cap=4, flush_timeout_s=None)
+    route = Route(mode="pd", config=CFG, batch_shards=4)
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(8)]
+    tickets = [eng.submit(i, route=route) for i in insts]
+    eng.flush()
+    for inst, t in zip(insts, tickets):
+        res = t.result()
+        direct = api.solve(inst, mode="pd", config=CFG)
+        assert np.asarray(res.objective).tobytes() == \
+            np.asarray(direct.objective).tobytes()
+        assert np.array_equal(np.asarray(res.labels),
+                              np.asarray(direct.labels)[:inst.num_nodes])
+
+
+def test_batch_shards_excludes_separation_shards():
+    cfg = SolverConfig(graph_impl="sparse", separation_chunk=16,
+                       separation_shards=2)
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(2)]
+    batch = api.stack_instances(insts)
+    if jax.device_count() >= 2:
+        with pytest.raises(ValueError):
+            api.solve_batch(batch, mode="pd", config=cfg, batch_shards=2)
+    else:
+        api.solve_batch(batch, mode="pd", config=cfg, batch_shards=2)
+
+
+def test_solve_batch_rejects_indivisible_batch():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices for a resolved shard count > 1")
+    insts = [random_instance(12, 0.5, seed=s, pad_edges=96, pad_nodes=16)
+             for s in range(3)]
+    with pytest.raises(ValueError, match="not divisible"):
+        api.solve_batch(api.stack_instances(insts), mode="pd", config=CFG,
+                        batch_shards=2)
+
+
+def test_single_solve_rejects_batch_shards():
+    with pytest.raises(ValueError):
+        api.compiled_solve(mode="pd", config=CFG, batched=False,
+                           batch_shards=2)
