@@ -1,0 +1,159 @@
+"""Incremental re-solve smoke benchmark: warm ``solve_delta`` after a 1%
+churn patch vs a from-scratch cold solve of the same patched instance.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --serve
+
+The scenario is the sticky-session serving loop of
+:mod:`repro.incremental`: a grid instance is solved once, then a seeded
+churn patch (half reweights, a quarter deletes, a quarter inserts —
+~1% of the live edges) lands and the solver re-solves warm, carrying the
+previous clustering (stable clusters pre-contracted, separation localised
+to the patch frontier on round 0). Both sides are AOT-compiled and timed
+with the same min-wall estimator as every other smoke row; the row
+records *both* walls plus the speedup so ``benchmarks/compare.py`` gates
+warm wall and warm objective against the committed baseline.
+
+The default row (``delta-churn-grid32``) is CI-sized. The XL row
+(``delta-churn-grid192``, ``RAMA_SMOKE_XL=1``) is the acceptance-criteria
+row — warm must beat cold by >= 5x there — refreshed manually alongside
+the other XL baselines.
+
+The warm tick runs a cheaper route than the cold solve (fewer
+message-passing iterations and rounds, smaller ``max_neg``): most of the
+graph arrives pre-contracted, so the warm config only needs to re-decide
+the patched neighbourhood. That asymmetry is the whole point — it is what
+a delta-scoped :class:`repro.serve.RoutingRule` ships in production — and
+the row proves it is admissible by gating the warm *objective* (computed
+on the full patched instance, never on the contracted one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.core.graph import grid_instance
+from repro.core.solver import SolverConfig, solve_device
+from repro.incremental import make_patch, solve_cold_device, solve_delta_device
+
+from benchmarks.common import timed
+
+# cold route: the measured sparse-path grid configs from solver_smoke
+COLD_CFG_SMALL = SolverConfig(max_neg=256, mp_iters=5, max_rounds=12,
+                              graph_impl="sparse", separation_chunk=64)
+COLD_CFG_XL = SolverConfig(max_neg=256, mp_iters=3, max_rounds=8,
+                           graph_impl="sparse", separation_chunk=64)
+CHURN = 0.01
+
+
+def _warm_cfg(cold: SolverConfig) -> SolverConfig:
+    """The delta-traffic route for the same instance class."""
+    return dataclasses.replace(cold, max_neg=64, mp_iters=2, max_rounds=2)
+
+
+def _finite(x):
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+def churn_patch(inst, frac: float = CHURN, seed: int = 7):
+    """Seeded ~``frac`` churn over the live edge set: half reweighted,
+    a quarter deleted, a quarter fresh inserts between random live nodes
+    (inserts that collide with live edges degrade to upserts — fine)."""
+    rng = np.random.default_rng(seed)
+    ev = np.asarray(inst.edge_valid)
+    u = np.asarray(inst.u)[ev]
+    v = np.asarray(inst.v)[ev]
+    n_live = len(u)
+    k = max(4, int(frac * n_live))
+    n_rw, n_del = k // 2, k // 4
+    n_ins = k - n_rw - n_del
+    pick = rng.choice(n_live, size=n_rw + n_del, replace=False)
+    rw, dl = pick[:n_rw], pick[n_rw:]
+    live_nodes = np.unique(np.concatenate([u, v]))
+    pairs = set(zip(u[pick].tolist(), v[pick].tolist()))
+    ins = []
+    while len(ins) < n_ins:
+        a, b = rng.choice(live_nodes, size=2, replace=False)
+        a, b = (int(a), int(b)) if a < b else (int(b), int(a))
+        if (a, b) not in pairs:
+            pairs.add((a, b))
+            ins.append((a, b))
+    iu = np.array([p[0] for p in ins])
+    iv = np.array([p[1] for p in ins])
+    return make_patch(
+        inst.num_nodes,
+        reweight=(u[rw], v[rw],
+                  rng.normal(0.0, 1.5, size=n_rw).astype(np.float32)),
+        delete=(u[dl], v[dl]),
+        insert=(iu, iv, rng.normal(0.0, 1.5, size=n_ins).astype(np.float32)),
+        pad_entries=1 << max(4, int(np.ceil(np.log2(k)))),
+    )
+
+
+def _measure(hw: int, cold_cfg: SolverConfig, iters: int) -> dict:
+    inst = grid_instance(hw, hw, seed=0)
+    patch = churn_patch(inst)
+    warm_cfg = _warm_cfg(cold_cfg)
+
+    # the carried state: one solved tick, costed to neither side
+    _, state = solve_cold_device(inst, mode="pd", cfg=cold_cfg)
+    jax.block_until_ready(state)
+
+    warm_fn = jax.jit(
+        lambda s, p: solve_delta_device(s, p, mode="pd", cfg=warm_cfg,
+                                        warm=True)
+    ).lower(state, patch).compile()
+    warm_t, (warm_res, _, _) = timed(warm_fn, state, patch, iters=iters)
+
+    # cold rival: from-scratch solve of the SAME patched instance
+    inst2 = api.apply_patch_host(inst, patch)
+    cold_fn = jax.jit(
+        lambda i: solve_device(i, mode="pd", cfg=cold_cfg)
+    ).lower(inst2).compile()
+    cold_t, cold_res = timed(cold_fn, inst2, iters=iters)
+
+    return {
+        "wall_s": round(warm_t, 4),
+        "cold_wall_s": round(cold_t, 4),
+        "speedup_x": round(cold_t / warm_t, 2),
+        "objective": _finite(warm_res.objective),
+        "cold_objective": _finite(cold_res.objective),
+        "lower_bound": None,        # warm re-solves carry no dual bound
+        "rounds": int(warm_res.rounds),
+        "cold_rounds": int(cold_res.rounds),
+        "churn_frac": CHURN,
+        "n_patch": int(np.asarray(patch.valid).sum()),
+    }
+
+
+def run_delta(out_path: str = "BENCH_solver.json", csv=None,
+              report: dict | None = None) -> dict:
+    rows = {"delta-churn-grid32": _measure(32, COLD_CFG_SMALL, iters=5)}
+    if os.environ.get("RAMA_SMOKE_XL"):
+        rows["delta-churn-grid192"] = _measure(192, COLD_CFG_XL, iters=2)
+
+    if report is None:
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                report = json.load(f)
+        else:
+            report = {"bench": "solver_smoke", "modes": {}}
+    modes = report.setdefault("modes", {})
+    for case, row in rows.items():
+        modes[case] = row
+        if csv is not None:
+            csv.add("delta", case, "wall_s", row["wall_s"])
+            csv.add("delta", case, "cold_wall_s", row["cold_wall_s"])
+            csv.add("delta", case, "speedup_x", row["speedup_x"])
+            csv.add("delta", case, "objective", row["objective"])
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path} ({', '.join(rows)})")
+    return report

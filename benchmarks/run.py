@@ -10,9 +10,11 @@ Emits ``bench,case,metric,value`` CSV on stdout.
 
 ``--smoke`` runs the fast per-mode solver benchmark instead and writes
 ``BENCH_solver.json`` (per-mode wall-clock + objective/LB) for CI perf
-tracking. ``--smoke --serve`` additionally pushes a mixed-size stream
-through the serving engine and records throughput + latency-percentile
-rows into the same report (see benchmarks/serve_smoke.py).
+tracking, plus the incremental delta-churn row (warm ``solve_delta``
+after 1% churn vs a cold re-solve — see benchmarks/delta_smoke.py).
+``--smoke --serve`` additionally pushes a mixed-size stream through the
+serving engine and records throughput + latency-percentile rows into the
+same report (see benchmarks/serve_smoke.py).
 """
 from __future__ import annotations
 
@@ -31,8 +33,9 @@ def main(argv=None) -> None:
         extra = [a for a in argv if a not in ("--smoke", "--serve")]
         if extra:
             raise SystemExit(f"--smoke runs alone; unexpected args: {extra}")
-        from benchmarks import solver_smoke
+        from benchmarks import delta_smoke, solver_smoke
         report = solver_smoke.run_smoke(csv=csv)
+        report = delta_smoke.run_delta(csv=csv, report=report)
         if serve:
             from benchmarks import serve_smoke
             serve_smoke.run_serve(csv=csv, report=report)

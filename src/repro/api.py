@@ -33,13 +33,21 @@ Every entrypoint returns a :class:`SolveResult` of device arrays — the
 full solve (outer rounds included) is one compiled executable, and the
 only host synchronisation happens when the caller reads the result.
 Compiled callables live in a *bounded* LRU registry keyed per (mode,
-config, backend, batched, batch_shards) — :func:`compiled_solve` exposes
-entries, :func:`clear_cache` / :func:`cache_info` manage it, and
-:func:`trace_count` counts the XLA compilations that ran through it (the
-instrumentation :mod:`repro.serve` uses to enforce its compile budget).
-Repeated solves over same-shaped instances never retrace;
-``solve_batch(batch_shards=N)`` shards the batch axis over the device
-mesh with bit-identical results.
+config, backend, batched, batch_shards, kind) — :func:`compiled_solve`
+exposes entries, :func:`clear_cache` / :func:`cache_info` /
+:func:`set_cache_maxsize` manage it, and :func:`trace_count` counts the
+XLA compilations that ran through it (the instrumentation
+:mod:`repro.serve` uses to enforce its compile budget). Repeated solves
+over same-shaped instances never retrace; ``solve_batch(batch_shards=N)``
+shards the batch axis over the device mesh with bit-identical results.
+
+Incremental solving (``kind != "solve"`` in the registry) rides the same
+cache: :func:`solve_with_state` opens a :class:`DeltaState` around a cold
+solve, and :func:`solve_delta` applies a :class:`DeltaPatch` and
+re-solves — exactly (bit-identical to a cold solve of the patched
+instance) or warm (``warm=True``: previous solution lifted, untouched
+clusters pre-contracted, round-0 separation restricted to the patch
+frontier). See :mod:`repro.incremental`.
 """
 from __future__ import annotations
 
@@ -54,13 +62,22 @@ from repro.core.solver import (
     BACKENDS, MODES, SolveResult, SolverConfig, resolve_intersect,
     resolve_sweep, solve_device,
 )
+from repro.incremental.patch import (
+    DeltaPatch, apply_patch_host, make_patch, pad_patch,
+)
+from repro.incremental.solve import solve_cold_device, solve_delta_device
+from repro.incremental.state import DeltaState, init_delta_state
 
 __all__ = [
-    "BACKENDS", "CACHE_MAXSIZE", "GRAPH_IMPLS", "MODES", "Multicut",
-    "MulticutInstance", "Preset", "PRESETS", "SolveResult", "SolverConfig",
-    "cache_info", "clear_cache", "compiled_solve", "get_preset",
-    "list_presets", "make_instance", "register_preset", "solve",
-    "solve_batch", "stack_instances", "trace_count", "unstack_results",
+    "BACKENDS", "CACHE_MAXSIZE", "GRAPH_IMPLS", "MODES", "DeltaPatch",
+    "DeltaState", "Multicut", "MulticutInstance", "Preset", "PRESETS",
+    "SolveResult", "SolverConfig", "apply_patch_host", "cache_info",
+    "clear_cache",
+    "compiled_delta", "compiled_solve", "get_preset", "init_delta_state",
+    "list_presets", "make_instance", "make_patch", "pad_patch",
+    "register_preset", "set_cache_maxsize", "solve", "solve_batch",
+    "solve_delta", "solve_with_state", "stack_instances", "trace_count",
+    "unstack_results",
 ]
 
 
@@ -136,10 +153,13 @@ for _p in (
 # Compiled-executable cache (the registry the serving engine hangs off)
 # ---------------------------------------------------------------------------
 
-CACHE_MAXSIZE = 128     # distinct (mode, config, backend, batched, shards)
-                        # executables kept live; LRU past that. Each entry
-                        # is a jitted callable whose own shape-keyed XLA
-                        # executables die with it on eviction.
+CACHE_MAXSIZE = 128     # default number of distinct (mode, config,
+                        # backend, batched, shards, kind) executables kept
+                        # live; LRU past that. Each entry is a jitted
+                        # callable whose own shape-keyed XLA executables
+                        # die with it on eviction.
+
+KINDS = ("solve", "delta", "delta-warm", "delta-open")
 
 _trace_count = [0]      # bumps once per executable *trace* (i.e. per XLA
                         # compilation triggered through this registry) —
@@ -155,44 +175,94 @@ def trace_count() -> int:
     return _trace_count[0]
 
 
-@lru_cache(maxsize=CACHE_MAXSIZE)
-def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool,
-              batch_shards: int = 1):
-    """One jitted callable per (mode, config, backend, batched,
-    batch_shards) — the executable registry behind every public entrypoint
-    and behind :class:`repro.serve.SolveEngine`'s dispatch.
+def _make_registry(maxsize: int):
+    """Build the LRU executable registry. A factory (rather than a single
+    decorated function) so :func:`set_cache_maxsize` can swap the bound in
+    place — tests exercise eviction at maxsize=2 instead of compiling 129
+    executables."""
 
-    ``batch_shards > 1`` (batched only) shard_maps the vmapped solve over
-    the leading batch axis on the 1-D batch mesh from
-    :func:`repro.core.dist.batch_mesh`: each device solves its contiguous
-    slice of the batch independently (no collectives — instances are
-    independent), so results are bit-identical to the unsharded batch.
-    """
-    sweep = resolve_sweep(backend)
-    intersect = resolve_intersect(backend)
+    @lru_cache(maxsize=maxsize)
+    def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool,
+                  batch_shards: int = 1, kind: str = "solve"):
+        """One jitted callable per (mode, config, backend, batched,
+        batch_shards, kind) — the executable registry behind every public
+        entrypoint and behind :class:`repro.serve.SolveEngine`'s dispatch.
 
-    def run(inst: MulticutInstance) -> SolveResult:
-        _trace_count[0] += 1        # executes at trace time only
-        return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep,
-                            intersect=intersect)
+        ``kind`` selects the traced program: "solve" takes an instance;
+        "delta-open" takes an instance and returns (result, DeltaState);
+        "delta"/"delta-warm" take (DeltaState, DeltaPatch) and return
+        (result, DeltaState, PatchInfo). The trailing default keeps solve
+        cache keys identical to the pre-incremental registry.
 
-    if not batched:
-        return jax.jit(run)
-    fn = jax.vmap(run)
-    if batch_shards > 1:
-        if cfg.separation_shards > 1:
-            raise ValueError(
-                "batch_shards and SolverConfig.separation_shards are "
-                "mutually exclusive (one device axis): route large "
-                "instances to separation sharding OR shard the batch axis")
-        from jax.sharding import PartitionSpec as P
+        ``batch_shards > 1`` (batched "solve" only) shard_maps the vmapped
+        solve over the leading batch axis on the 1-D batch mesh from
+        :func:`repro.core.dist.batch_mesh`: each device solves its
+        contiguous slice of the batch independently (no collectives —
+        instances are independent), so results are bit-identical to the
+        unsharded batch.
+        """
+        sweep = resolve_sweep(backend)
+        intersect = resolve_intersect(backend)
 
-        from repro.compat import shard_map
-        from repro.core.dist import batch_mesh
-        fn = shard_map(fn, mesh=batch_mesh(batch_shards),
-                       in_specs=P("batch"), out_specs=P("batch"),
-                       check_vma=False)
-    return jax.jit(fn)
+        if kind == "solve":
+            def run(inst: MulticutInstance) -> SolveResult:
+                _trace_count[0] += 1        # executes at trace time only
+                return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep,
+                                    intersect=intersect)
+        elif kind == "delta-open":
+            def run(inst: MulticutInstance):
+                _trace_count[0] += 1
+                return solve_cold_device(inst, mode, cfg, sweep=sweep,
+                                         intersect=intersect)
+        elif kind in ("delta", "delta-warm"):
+            warm = kind == "delta-warm"
+
+            def run(state: DeltaState, patch: DeltaPatch):
+                _trace_count[0] += 1
+                return solve_delta_device(state, patch, mode, cfg,
+                                          sweep=sweep, intersect=intersect,
+                                          warm=warm)
+        else:
+            raise ValueError(f"unknown executable kind {kind!r}; expected "
+                             f"one of {KINDS}")
+
+        if not batched:
+            return jax.jit(run)
+        fn = jax.vmap(run)
+        if batch_shards > 1:
+            if kind != "solve":
+                raise ValueError("batch_shards applies to kind='solve' "
+                                 "executables only (delta batches are "
+                                 "vmapped, not sharded)")
+            if cfg.separation_shards > 1:
+                raise ValueError(
+                    "batch_shards and SolverConfig.separation_shards are "
+                    "mutually exclusive (one device axis): route large "
+                    "instances to separation sharding OR shard the batch "
+                    "axis")
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+            from repro.core.dist import batch_mesh
+            fn = shard_map(fn, mesh=batch_mesh(batch_shards),
+                           in_specs=P("batch"), out_specs=P("batch"),
+                           check_vma=False)
+        return jax.jit(fn)
+
+    return _compiled
+
+
+_compiled = _make_registry(CACHE_MAXSIZE)
+
+
+def set_cache_maxsize(maxsize: int) -> None:
+    """Swap the executable registry for a fresh one bounded at ``maxsize``
+    and reset :func:`trace_count`. Every cached executable is dropped —
+    this is a (re)configuration knob for tests and long-lived serving
+    processes, not a per-request one."""
+    global _compiled
+    _compiled = _make_registry(int(maxsize))
+    _trace_count[0] = 0
 
 
 def compiled_solve(mode: str | None = None,
@@ -215,6 +285,23 @@ def compiled_solve(mode: str | None = None,
     from repro.core.dist import resolve_batch_shards
     return _compiled(mode, config, backend, batched,
                      resolve_batch_shards(batch_shards))
+
+
+def compiled_delta(mode: str | None = None,
+                   config: SolverConfig | None = None,
+                   backend: str | None = None,
+                   preset: str | Preset | None = None,
+                   warm: bool = False, batched: bool = False):
+    """Cached delta executable: a jitted ``(DeltaState, DeltaPatch) ->
+    (SolveResult, DeltaState, PatchInfo)`` callable (every leaf gains a
+    leading batch axis when ``batched`` — the serving tier's sticky-session
+    dispatch). Same registry as :func:`compiled_solve`."""
+    mode, config, backend = _normalize(mode, config, backend, preset)
+    if warm and mode == "d":
+        raise ValueError("warm delta re-solve needs a primal solution to "
+                         "lift; mode 'd' produces none")
+    return _compiled(mode, config, backend, batched, 1,
+                     "delta-warm" if warm else "delta")
 
 
 def clear_cache() -> None:
@@ -292,6 +379,52 @@ def solve_batch(batch: MulticutInstance, mode: str | None = None,
             f"batch shard(s); pad the batch (see repro.serve.pad_batch) "
             f"or pick a shard count that divides it")
     return _compiled(mode, config, backend, True, shards)(batch)
+
+
+def solve_with_state(inst: MulticutInstance, mode: str | None = None,
+                     config: SolverConfig | None = None,
+                     backend: str | None = None,
+                     preset: str | Preset | None = None,
+                     graph_impl: str | None = None,
+                     ) -> tuple[SolveResult, DeltaState]:
+    """Solve and open a delta session: like :func:`solve`, but also returns
+    the :class:`DeltaState` (patched instance + live CSR + labels) that
+    :func:`solve_delta` carries forward. The state's CSR feeds this very
+    solve on the sparse path, so opening a session costs no extra sort."""
+    mode, config, backend = _normalize(mode, config, backend, preset,
+                                       graph_impl)
+    return _compiled(mode, config, backend, False, 1, "delta-open")(inst)
+
+
+def solve_delta(state: DeltaState, patch: DeltaPatch,
+                mode: str | None = None,
+                config: SolverConfig | None = None,
+                backend: str | None = None,
+                preset: str | Preset | None = None,
+                graph_impl: str | None = None, warm: bool = False,
+                ) -> tuple[SolveResult, DeltaState]:
+    """One incremental update tick: apply ``patch`` to the carried
+    ``state`` on device (CSR spliced, never rebuilt) and re-solve.
+    Returns ``(result, new_state)``; thread the new state into the next
+    tick.
+
+    Exact mode (default) is bit-identical — objective, lower bound and
+    labels — to a cold :func:`solve` of the patched instance. ``warm=True``
+    lifts the previous solution instead: clusters untouched by the patch
+    (no endpoint within ``config.delta_halo`` hops) stay contracted and
+    round-0 separation is restricted to the patch frontier — much faster
+    under small churn, at the price of the global dual bound (the result's
+    ``lower_bound`` is ``-inf``; the objective is still exact for the
+    returned labels)."""
+    mode, config, backend = _normalize(mode, config, backend, preset,
+                                       graph_impl)
+    if warm and mode == "d":
+        raise ValueError("warm delta re-solve needs a primal solution to "
+                         "lift; mode 'd' produces none")
+    kind = "delta-warm" if warm else "delta"
+    res, state2, _ = _compiled(mode, config, backend, False, 1,
+                               kind)(state, patch)
+    return res, state2
 
 
 def stack_instances(instances: list[MulticutInstance]) -> MulticutInstance:

@@ -93,10 +93,18 @@ def build_dense(inst: MulticutInstance) -> DenseGraph:
 
 
 def select_repulsive_edges(inst: MulticutInstance, max_neg: int,
-                           threshold: float = 0.0):
-    """Indices of the ``max_neg`` most repulsive valid edges (+ mask)."""
-    score = jnp.where(inst.edge_valid & (inst.cost < threshold),
-                      -inst.cost, -jnp.inf)
+                           threshold: float = 0.0, node_mask=None):
+    """Indices of the ``max_neg`` most repulsive valid edges (+ mask).
+
+    ``node_mask`` ((N,) bool, optional) restricts candidates to edges with
+    at least one endpoint in the mask — the frontier restriction warm
+    delta re-solves apply on their first rounds (shape-preserving, so the
+    same ``top_k`` serves both data paths; a ``None`` mask compiles to
+    exactly the unrestricted jaxpr)."""
+    sel = inst.edge_valid & (inst.cost < threshold)
+    if node_mask is not None:
+        sel = sel & (node_mask[inst.u] | node_mask[inst.v])
+    score = jnp.where(sel, -inst.cost, -jnp.inf)
     k = min(max_neg, score.shape[0])
     vals, idx = jax.lax.top_k(score, k)
     return idx.astype(jnp.int32), vals > 0
@@ -119,13 +127,15 @@ class CycleSeparationResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
-                       max_neg: int, max_tri_per_edge: int) -> Triangles:
+                       max_neg: int, max_tri_per_edge: int,
+                       node_mask=None) -> Triangles:
     """3-cycles, dense path: for each repulsive edge (i, j) pick up to K
     common attractive neighbours k; triangle edges (ij, ik, jk). (Lemma 6
     specialised to hop distance 2 — the common-neighbour test is one
     row-AND, i.e. the matmul ``A⁺A⁺`` restricted to the repulsive pairs.)
     top_k over the 0/1 row picks the K smallest common neighbour ids."""
-    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
+                                             node_mask=node_mask)
     i = inst.u[neg_idx]
     j = inst.v[neg_idx]
     max_tri_per_edge = min(max_tri_per_edge, inst.num_nodes)
@@ -149,7 +159,8 @@ def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
 def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                               max_neg: int, max_tri_per_edge: int,
                               row_cap: int = 128, intersect=None,
-                              chunk: int = 0, shards: int = 1) -> Triangles:
+                              chunk: int = 0, shards: int = 1,
+                              node_mask=None) -> Triangles:
     """3-cycles, CSR path: the common-neighbour test is a sorted-row
     intersection of the two endpoints' attractive rows (the paper's CSR
     kernel). Windows are ascending by node id, so taking the first K
@@ -163,7 +174,8 @@ def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
     N = inst.num_nodes
     K = min(max_tri_per_edge, N)
     W = max(K, min(row_cap, N))
-    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
+                                             node_mask=node_mask)
     i = inst.u[neg_idx]
     j = inst.v[neg_idx]
 
@@ -391,7 +403,8 @@ def _map_repulsive_batches(fn, consts, edge_args, chunk: int, shards: int):
 
 
 def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
-                      nbr_k: int = 4) -> CycleSeparationResult:
+                      nbr_k: int = 4,
+                      node_mask=None) -> CycleSeparationResult:
     """4/5-cycles per Alg. 5, dense path: for repulsive edge (v0, v4), scan
     pairs (v1, v3) ∈ N⁺(v0) × N⁺(v4); a 4-cycle needs v1v3 ∈ E⁺, a 5-cycle a
     common attractive neighbour v2 (via the A⁺A⁺ matmul). The best pair per
@@ -406,7 +419,8 @@ def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
     # A⁺A⁺ product costs 2N³ FLOPs (137 GF at the pd_round_lg shape); the
     # per-edge row-dot form below costs 2·max_neg·nbr_k²·N (34 MF, 4000x
     # less) with identical results. EXPERIMENTS.md §Perf cell C iter 1.
-    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
+                                             node_mask=node_mask)
     v0 = inst.u[neg_idx]
     v4 = inst.v[neg_idx]
 
@@ -453,8 +467,8 @@ def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
 def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                              csr_all: CsrGraph, max_neg: int, nbr_k: int = 4,
                              row_cap: int = 128, intersect=None,
-                             chunk: int = 0,
-                             shards: int = 1) -> CycleSeparationResult:
+                             chunk: int = 0, shards: int = 1,
+                             node_mask=None) -> CycleSeparationResult:
     """4/5-cycles, CSR path. Mirrors the dense scan pair for pair:
 
     * neighbour fans N⁺(v0)/N⁺(v4) = the first ``nbr_k`` entries of each
@@ -474,7 +488,8 @@ def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
     N = inst.num_nodes
     nbr_k = min(nbr_k, N)
     W = max(1, min(row_cap, N))
-    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg)
+    neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
+                                             node_mask=node_mask)
     v0 = inst.u[neg_idx]
     v4 = inst.v[neg_idx]
 
@@ -556,7 +571,8 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
              graph_impl: str = "dense", sparse_row_cap: int = 128,
              sparse_threshold: int = 2048, intersect=None,
              csr: CsrGraph | None = None, separation_chunk: int = 0,
-             separation_shards: int = 1) -> CycleSeparationResult:
+             separation_shards: int = 1,
+             sep_node_mask=None) -> CycleSeparationResult:
     """Full separation round: 3-cycles always; 4/5-cycles optionally
     (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5).
 
@@ -572,14 +588,21 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
     from it, not rebuilt). ``separation_chunk``/``separation_shards``
     stream/shard the sparse candidate search (dense ignores both: it is
     the small-N path where the whole batch fits trivially).
+
+    ``sep_node_mask`` ((N,) bool, optional) restricts repulsive-edge
+    selection to edges touching the mask — the frontier restriction of
+    warm delta re-solves. Applies identically on both data paths; ``None``
+    compiles to the unrestricted jaxpr.
     """
     impl = resolve_graph_impl(graph_impl, inst.num_nodes, sparse_threshold)
     if impl == "dense":
         adj = build_adjacency(inst)
-        tri3 = separate_triangles(inst, adj, max_neg, max_tri_per_edge)
+        tri3 = separate_triangles(inst, adj, max_neg, max_tri_per_edge,
+                                  node_mask=sep_node_mask)
         if not with_cycles45:
             return CycleSeparationResult(instance=inst, triangles=tri3)
-        res45 = separate_cycles45(inst, adj, max_neg, nbr_k=nbr_k)
+        res45 = separate_cycles45(inst, adj, max_neg, nbr_k=nbr_k,
+                                  node_mask=sep_node_mask)
     else:
         csr_all = csr_from_instance(inst) if csr is None else csr
         csr_pos = csr_filter(csr_all, inst.edge_valid & (inst.cost > 0))
@@ -588,7 +611,8 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
                                          row_cap=sparse_row_cap,
                                          intersect=intersect,
                                          chunk=separation_chunk,
-                                         shards=separation_shards)
+                                         shards=separation_shards,
+                                         node_mask=sep_node_mask)
         if not with_cycles45:
             return CycleSeparationResult(instance=inst, triangles=tri3)
         res45 = separate_cycles45_sparse(inst, csr_pos, csr_all, max_neg,
@@ -596,7 +620,8 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
                                          row_cap=sparse_row_cap,
                                          intersect=intersect,
                                          chunk=separation_chunk,
-                                         shards=separation_shards)
+                                         shards=separation_shards,
+                                         node_mask=sep_node_mask)
     edges = jnp.concatenate([tri3.edges, res45.triangles.edges], axis=0)
     valid = jnp.concatenate([tri3.valid, res45.triangles.valid], axis=0)
     return CycleSeparationResult(

@@ -58,10 +58,12 @@ def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
     allocation never duplicates an edge). First-occurrence order is kept,
     so duplicate-free inputs get identical edge ids as before.
 
-    Raises ``ValueError`` on mismatched ``u``/``v``/``cost`` lengths or node
-    ids outside ``[0, num_nodes)`` — either would silently misindex the
-    padded arrays downstream (wrong rows in the CSR, costs attributed to the
-    wrong edges) with no error until results are wrong.
+    Raises ``ValueError`` on mismatched ``u``/``v``/``cost`` lengths, node
+    ids outside ``[0, num_nodes)``, or self-loops with nonzero cost —
+    any of these would silently misindex the padded arrays downstream
+    (wrong rows in the CSR, costs attributed to the wrong edges) with no
+    error until results are wrong. Zero-cost self-loops stay admissible:
+    they are exactly the neutral filler slots padding already emits.
     """
     u = np.asarray(u, dtype=np.int32)
     v = np.asarray(v, dtype=np.int32)
@@ -78,6 +80,15 @@ def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
             f"node ids must lie in [0, {num_nodes}); {len(bad)} edge(s) out "
             f"of range, first at index {int(bad[0])}: "
             f"({int(u[bad[0]])}, {int(v[bad[0]])})")
+    if len(u):
+        bad = np.where((u == v) & (cost != 0.0))[0]
+        if len(bad):
+            raise ValueError(
+                f"self-loops must have zero cost (a nonzero self-loop cost "
+                f"can never be cut and would silently shift the objective); "
+                f"{len(bad)} offending edge(s), first at index "
+                f"{int(bad[0])}: ({int(u[bad[0]])}, {int(u[bad[0]])}) with "
+                f"cost {float(cost[bad[0]])}")
     lo, hi = np.minimum(u, v), np.maximum(u, v)
     if len(lo):
         pairs = np.stack([lo, hi], axis=1)
@@ -239,6 +250,103 @@ def csr_lookup_edge(csr: CsrGraph, a, b) -> jax.Array:
     p = jnp.clip(lo - 1, 0, nnz - 1)
     found = (lo > lo0) & (csr.col[p] == b)
     return jnp.where(found, csr.edge_id[p], -1)
+
+
+def _lex_count_less(rows, cols, eids, live, r, c, e):
+    """Count of live CSR entries whose (row, col, edge_id) key sorts
+    strictly before (r, c, e) — a fixed-iteration lexicographic bisect over
+    the globally sorted entry arrays (same jit-safe shape as
+    :func:`csr_lookup_edge`). Scalar in, scalar out; vmap for batches."""
+    nnz = cols.shape[0]
+    iters = max(1, int(np.ceil(np.log2(max(2, nnz)))) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = jnp.clip((lo + hi) // 2, 0, nnz - 1)
+        less = (rows[mid] < r) | (
+            (rows[mid] == r) & ((cols[mid] < c) | (
+                (cols[mid] == c) & (eids[mid] < e))))
+        go_right = (lo < hi) & less
+        lo2 = jnp.where(go_right, mid + 1, lo)
+        hi2 = jnp.where(lo < hi, jnp.where(go_right, hi, mid), hi)
+        return lo2, hi2
+
+    lo, _ = jax.lax.fori_loop(0, iters, body,
+                              (jnp.int32(0), live.astype(jnp.int32)))
+    return lo
+
+
+def splice_csr(csr: CsrGraph, drop_edge: jax.Array, add_u: jax.Array,
+               add_v: jax.Array, add_eid: jax.Array,
+               add_ok: jax.Array) -> CsrGraph:
+    """Merge an edge patch into a live CSR without a COO→CSR rebuild.
+
+    ``drop_edge`` is an (E,) mask of edge ids whose entries leave the CSR;
+    ``add_u``/``add_v``/``add_eid`` are (P,) new undirected edges (masked
+    by ``add_ok``) to insert under their instance edge ids. Cost reweights
+    never touch a CSR (it stores no costs) — only deletions/insertions do.
+
+    Deletion is the sort-free prefix-sum compaction of :func:`csr_filter`;
+    insertion lexsorts only the 2P new directed entries (the one *bounded*
+    sort — O(P log P), never O(E log E)) and merges them into the already
+    sorted live region with a lexicographic bisect per new entry plus one
+    ``searchsorted`` for the old entries' shift. The result is
+    **bit-identical** to ``build_csr`` of the patched instance (asserted
+    in tests/test_incremental.py): same live ordering by (src, dst, eid),
+    same sentinel dead tail (``col == N``, ``edge_id == -1``), same
+    ``row_ptr``.
+    """
+    nnz = csr.col.shape[0]
+    N = csr.num_nodes
+    P = add_u.shape[0]
+
+    # 1. drop: compact out every entry of a dropped edge (csr_filter shape)
+    keep = (csr.edge_id >= 0) & ~drop_edge[jnp.clip(csr.edge_id, 0)]
+    kept_before = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32), jnp.cumsum(keep.astype(jnp.int32))])
+    row_ptr_c = kept_before[csr.row_ptr].astype(jnp.int32)
+    dest = jnp.where(keep, kept_before[1:] - 1, nnz)
+    col_c = jnp.full((nnz,), N, jnp.int32).at[dest].set(csr.col, mode="drop")
+    eid_c = jnp.full((nnz,), -1, jnp.int32).at[dest].set(csr.edge_id,
+                                                         mode="drop")
+    live = row_ptr_c[N]
+    # per-entry row id, recovered from row_ptr (dead tail lands on row N)
+    row_c = (jnp.searchsorted(row_ptr_c, jnp.arange(nnz, dtype=jnp.int32),
+                              side="right") - 1).astype(jnp.int32)
+
+    # 2. the one bounded lexsort: 2P new directed entries by (src, dst, eid)
+    src_n = jnp.concatenate([add_u, add_v]).astype(jnp.int32)
+    dst_n = jnp.concatenate([add_v, add_u]).astype(jnp.int32)
+    eid_n = jnp.concatenate([add_eid, add_eid]).astype(jnp.int32)
+    ok_n = jnp.concatenate([add_ok, add_ok])
+    src_n = jnp.where(ok_n, src_n, N)
+    dst_n = jnp.where(ok_n, dst_n, N)
+    order = jnp.lexsort((eid_n, dst_n, src_n))
+    src_s, ok_s = src_n[order], ok_n[order]
+    dst_s = jnp.where(ok_s, dst_n[order], N)
+    eid_s = jnp.where(ok_s, eid_n[order], -1)
+
+    # 3. merge positions: each new entry bisects the live region; keys never
+    # collide (an inserted edge id's old entries were dropped in step 1)
+    ins = jax.vmap(lambda r, c, e: _lex_count_less(
+        row_c, col_c, eid_c, live, r, c, e))(src_s, dst_s, eid_s)
+    new_pos = ins + jnp.arange(2 * P, dtype=jnp.int32)
+    # old entries shift by the number of new entries inserted at-or-before
+    # them; ``ins`` is nondecreasing (keys sorted), so one searchsorted
+    shift = jnp.searchsorted(ins, jnp.arange(nnz, dtype=jnp.int32),
+                             side="right").astype(jnp.int32)
+    old_pos = jnp.arange(nnz, dtype=jnp.int32) + shift
+
+    col2 = jnp.full((nnz,), N, jnp.int32) \
+        .at[old_pos].set(col_c, mode="drop") \
+        .at[new_pos].set(dst_s, mode="drop")
+    eid2 = jnp.full((nnz,), -1, jnp.int32) \
+        .at[old_pos].set(eid_c, mode="drop") \
+        .at[new_pos].set(eid_s, mode="drop")
+    row_ptr2 = row_ptr_c + jnp.searchsorted(
+        src_s, jnp.arange(N + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+    return CsrGraph(row_ptr=row_ptr2, col=col2, edge_id=eid2)
 
 
 def resolve_graph_impl(graph_impl: str, num_nodes: int,

@@ -88,6 +88,10 @@ class SolverConfig:
                                     # chunk axis over (shard_map; clamped to
                                     # the devices present; bit-identical to
                                     # the single-device solve)
+    delta_halo: int = 2             # warm delta re-solve: hops of halo
+                                    # around patched endpoints included in
+                                    # the round-0 separation frontier (see
+                                    # repro.incremental.solve)
 
     def cache_key(self) -> tuple:
         """The canonical cache key, spelled out: the ordered tuple of field
@@ -173,7 +177,8 @@ class SolverState(NamedTuple):
 
 
 def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
-                     with45: bool, sweep=None, intersect=None, csr=None):
+                     with45: bool, sweep=None, intersect=None, csr=None,
+                     node_mask=None):
     """One separation + message-passing round. Returns (inst', c_rep, lb)."""
     sep = separate(inst, max_neg=cfg.max_neg,
                    max_tri_per_edge=cfg.max_tri_per_edge,
@@ -183,7 +188,8 @@ def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
                    sparse_threshold=cfg.sparse_threshold,
                    intersect=intersect, csr=csr,
                    separation_chunk=cfg.separation_chunk,
-                   separation_shards=cfg.separation_shards)
+                   separation_shards=cfg.separation_shards,
+                   sep_node_mask=node_mask)
     inst2 = sep.instance
     state = init_mp(sep.triangles)
     state, c_rep, lb = run_message_passing(
@@ -200,22 +206,24 @@ def _primal_round_core(inst: MulticutInstance, cfg: SolverConfig):
 
 
 def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
-                   with45: bool, sweep=None, intersect=None):
+                   with45: bool, sweep=None, intersect=None, node_mask=None):
     """Alg. 3 lines 3–8 as one traceable unit: separation → message passing
     → reparametrize → contract. Returns (ContractionResult, lb). Input and
     output instances share shapes, so the outer while_loop carries it."""
-    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep, intersect)
+    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep, intersect,
+                                        node_mask=node_mask)
     res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
     return res, lb
 
 
 def fused_pd_round_state(state: SolverState, cfg: SolverConfig, with45: bool,
-                         sweep=None, intersect=None):
+                         sweep=None, intersect=None, node_mask=None):
     """The state-carrying PD round (sparse data path): separation reads the
     carried CSR (no rebuild), contraction maintains it, and the original→
     cluster mapping composes in place. Returns (SolverState', lb, res)."""
     inst2, c_rep, lb = _dual_round_core(state.instance, cfg, with45, sweep,
-                                        intersect, csr=state.csr)
+                                        intersect, csr=state.csr,
+                                        node_mask=node_mask)
     inst3 = inst2._replace(cost=c_rep)
     S = choose_contraction_set(inst3, matching_rounds=cfg.matching_rounds,
                                forest_rounds=cfg.forest_rounds,
@@ -261,20 +269,30 @@ def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
 
 
 def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
-                     sweep=None, intersect=None) -> SolveResult:
+                     sweep=None, intersect=None, csr0=None,
+                     sep_mask0=None) -> SolveResult:
     """Sparse-path PD/PD+: the :class:`SolverState` recursion. ``build_csr``
     runs exactly once, before round 0; every later round's separation reads
     the CSR maintained by the previous round's ``contract_csr``, so the
     round loop contains no COO→CSR rebuild — one sort per round (the fused
-    contract's) instead of the three the rebuild-per-round path paid."""
+    contract's) instead of the three the rebuild-per-round path paid.
+
+    ``csr0`` is a caller-supplied live all-edges CSR of ``inst`` — when
+    given, even the initial ``build_csr`` is skipped (delta re-solves carry
+    one). ``sep_mask0`` restricts round 0's separation frontier (warm delta
+    re-solves; later rounds always separate over the whole contracted
+    graph)."""
     N, R = inst.num_nodes, cfg.max_rounds
     with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
     with45_rest = cfg.always_cycles45 or plus
 
-    state0 = SolverState(instance=inst, csr=csr_from_instance(inst),
-                         mapping=jnp.arange(N, dtype=jnp.int32))
+    state0 = SolverState(
+        instance=inst,
+        csr=csr_from_instance(inst) if csr0 is None else csr0,
+        mapping=jnp.arange(N, dtype=jnp.int32))
     state, lb0, res0 = fused_pd_round_state(state0, cfg, with45_first,
-                                            sweep, intersect)
+                                            sweep, intersect,
+                                            node_mask=sep_mask0)
     nc0 = res0.n_contracted.astype(jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
     hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
@@ -305,7 +323,8 @@ def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
 
 
 def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
-                     sweep=None, intersect=None) -> SolveResult:
+                     sweep=None, intersect=None, csr0=None,
+                     sep_mask0=None) -> SolveResult:
     """Interleaved primal-dual Algorithm 3 (paper's PD / PD+).
 
     Round 0 runs outside the while_loop: it may use 4/5-cycle separation
@@ -316,17 +335,21 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
     recursion (CSR built once, maintained by contraction); the dense path
     rebuilds its (N, N) adjacency per round — at dense sizes that rebuild
     is a cheap scatter, and the matrices could not be "maintained" more
-    cheaply than rebuilt.
+    cheaply than rebuilt. ``csr0``/``sep_mask0`` seed delta re-solves (see
+    :func:`_solve_pd_sparse`; dense ignores ``csr0`` — it has no CSR to
+    carry — but honours the round-0 frontier mask).
     """
     if resolve_graph_impl(cfg.graph_impl, inst.num_nodes,
                           cfg.sparse_threshold) == "sparse":
-        return _solve_pd_sparse(inst, cfg, plus, sweep, intersect)
+        return _solve_pd_sparse(inst, cfg, plus, sweep, intersect,
+                                csr0=csr0, sep_mask0=sep_mask0)
     N, R = inst.num_nodes, cfg.max_rounds
     mapping0 = jnp.arange(N, dtype=jnp.int32)
     with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
     with45_rest = cfg.always_cycles45 or plus
 
-    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep, intersect)
+    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep, intersect,
+                               node_mask=sep_mask0)
     nc0 = res0.n_contracted.astype(jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
     hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
@@ -395,11 +418,18 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
 
 def solve_device(inst: MulticutInstance, mode: str = "pd",
                  cfg: SolverConfig = SolverConfig(),
-                 sweep=None, intersect=None) -> SolveResult:
+                 sweep=None, intersect=None, csr=None,
+                 sep_node_mask=None) -> SolveResult:
     """The unified, pure, traceable solve: dispatches on the (static) mode.
     Safe to wrap in ``jax.jit`` / ``jax.vmap`` / ``shard_map``; prefer the
     cached entrypoints in :mod:`repro.api` — ``api._compiled`` is the one
-    jit cache (bounded, instrumented); no second jitted alias lives here."""
+    jit cache (bounded, instrumented); no second jitted alias lives here.
+
+    ``csr``/``sep_node_mask`` seed delta re-solves (PD/PD+ only): ``csr``
+    is a live all-edges CSR of ``inst`` (spliced by the previous tick —
+    skips the initial ``build_csr`` on the sparse path), ``sep_node_mask``
+    restricts round 0's separation frontier. Modes "p" and "d" ignore both
+    (no separation to seed / no carried CSR)."""
     if cfg.graph_impl not in GRAPH_IMPLS:
         raise ValueError(f"unknown graph_impl {cfg.graph_impl!r}; expected "
                          f"one of {GRAPH_IMPLS}")
@@ -407,10 +437,12 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
         return _solve_p_device(inst, cfg)
     if mode == "pd":
         return _solve_pd_device(inst, cfg, plus=False, sweep=sweep,
-                                intersect=intersect)
+                                intersect=intersect, csr0=csr,
+                                sep_mask0=sep_node_mask)
     if mode == "pd+":
         return _solve_pd_device(inst, cfg, plus=True, sweep=sweep,
-                                intersect=intersect)
+                                intersect=intersect, csr0=csr,
+                                sep_mask0=sep_node_mask)
     if mode == "d":
         return _solve_d_device(inst, cfg, sweep, intersect)[0]
     raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")

@@ -1,0 +1,37 @@
+"""repro.incremental — warm-started re-solve on graph deltas.
+
+The production scenario behind the ROADMAP north-star is not one-shot
+solves: a similarity graph mutates (edges inserted / deleted, costs
+re-weighted) and needs fresh clusters every update tick. This package
+makes an update tick cost a *splice* plus a (optionally warm-started)
+re-solve instead of a host-side rebuild plus a cold solve:
+
+* :class:`DeltaPatch` (:mod:`repro.incremental.patch`) — a jit-safe,
+  padded COO patch (upsert/delete triples) with host-side validation
+  mirroring ``make_instance``;
+* :class:`DeltaState` (:mod:`repro.incremental.state`) — the carried
+  (instance, live CSR, previous labels) triple threaded between ticks;
+* :func:`solve_delta` (:mod:`repro.incremental.solve`) — applies the
+  patch on device (CSR maintained by :func:`repro.core.graph.splice_csr`,
+  bit-identical to a fresh ``build_csr``) and re-solves. Exact mode
+  (default) reproduces a cold solve of the patched instance bit for bit;
+  warm mode lifts the previous solution through the patch (untouched
+  clusters stay contracted, patch-touched clusters + a
+  ``SolverConfig.delta_halo``-hop halo re-expand) and restricts the first
+  round's separation to the frontier.
+
+The serving tier exposes this as sticky sessions — see
+:mod:`repro.serve.session`. Public entrypoints with executable caching
+live in :mod:`repro.api` (``api.solve_delta`` / ``api.solve_with_state``).
+"""
+from repro.incremental.patch import (
+    DeltaPatch, apply_patch, apply_patch_host, make_patch, pad_patch,
+)
+from repro.incremental.solve import solve_cold_device, solve_delta_device
+from repro.incremental.state import DeltaState, init_delta_state
+
+__all__ = [
+    "DeltaPatch", "DeltaState", "apply_patch", "apply_patch_host",
+    "init_delta_state", "make_patch", "pad_patch", "solve_cold_device",
+    "solve_delta_device",
+]

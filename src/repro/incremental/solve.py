@@ -1,0 +1,146 @@
+"""Delta re-solve: apply a patch on device, then solve — exactly or warm.
+
+Two traceable entrypoints (both jit/vmap-safe; executable caching lives in
+:mod:`repro.api`):
+
+* :func:`solve_cold_device` — solve an instance from scratch and open a
+  :class:`repro.incremental.state.DeltaState` around the result (builds
+  the one CSR every later tick splices).
+* :func:`solve_delta_device` — apply a :class:`DeltaPatch` to the carried
+  state (CSR maintained by :func:`repro.core.graph.splice_csr`) and
+  re-solve.
+
+  **Exact mode** (default) hands the patched instance + spliced CSR to
+  :func:`repro.core.solver.solve_device`. Because the spliced CSR is
+  bit-identical to a fresh ``build_csr`` of the patched instance and the
+  solve is deterministic, the result is bit-identical to a cold solve of
+  the patched problem — the patch path buys the skipped host rebuild and
+  the skipped initial sort, nothing less (asserted in
+  tests/test_incremental.py).
+
+  **Warm mode** (``warm=True``) additionally lifts the previous solution:
+  intra-cluster edges outside the patch frontier (no endpoint within
+  ``SolverConfig.delta_halo`` hops of a patched edge) — plus the frontier
+  ones still attractive under the patched costs — are pre-contracted in
+  one ``contract_csr`` sweep, and the first round's cycle separation is
+  restricted to the frontier. The solver then only re-decides
+  the patched neighbourhood; far-away clusters can still merge in later
+  rounds (separation is only frontier-restricted on round 0, and
+  contraction always sees the whole condensed graph). The reported
+  ``lower_bound`` is ``-inf`` — the dual bound of the condensed problem
+  does not transfer to the original — and the objective is recomputed on
+  the full patched instance, so it is always the true objective of the
+  returned labels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contraction import contract_csr
+from repro.core.graph import MulticutInstance
+from repro.core.solver import SolveResult, SolverConfig, solve_device
+from repro.incremental.patch import DeltaPatch, PatchInfo, apply_patch
+from repro.incremental.state import DeltaState, init_delta_state
+
+__all__ = ["patch_frontier", "solve_cold_device", "solve_delta_device"]
+
+
+def solve_cold_device(inst: MulticutInstance, mode: str = "pd",
+                      cfg: SolverConfig = SolverConfig(), sweep=None,
+                      intersect=None) -> tuple[SolveResult, DeltaState]:
+    """Cold solve + opened state: the first tick of a delta session. The
+    CSR is built ONCE here, feeds the solve (sparse path), and is carried
+    in the returned state for the next tick's splice."""
+    state = init_delta_state(inst)
+    res = solve_device(inst, mode, cfg, sweep=sweep, intersect=intersect,
+                       csr=state.csr)
+    return res, state._replace(
+        labels=res.labels.astype(jnp.int32),
+        has_solution=jnp.bool_(mode != "d"))
+
+
+def patch_frontier(inst: MulticutInstance, patch: DeltaPatch,
+                   halo: int) -> jax.Array:
+    """(N,) bool — patched endpoints plus a ``halo``-hop neighbourhood,
+    expanded by statically-unrolled scatter passes over the valid edges of
+    the *patched* instance. This is the node set whose clustering the
+    patch can plausibly change on the first warm round."""
+    N = inst.num_nodes
+    ok = patch.valid & (patch.u != patch.v)
+    fr = jnp.zeros((N,), bool)
+    fr = fr.at[jnp.where(ok, patch.u, 0)].max(ok, mode="drop")
+    fr = fr.at[jnp.where(ok, patch.v, 0)].max(ok, mode="drop")
+    for _ in range(max(0, int(halo))):
+        hit = inst.edge_valid & (fr[inst.u] | fr[inst.v])
+        fr = fr.at[inst.u].max(hit).at[inst.v].max(hit)
+    return fr & inst.node_valid
+
+
+def _warm_seed(inst2: MulticutInstance, state: DeltaState,
+               patch: DeltaPatch, halo: int):
+    """Pre-contract the previous solution away from the patch frontier.
+
+    Returns ``(inst_c, csr_c, lift, fr_c)``: the condensed instance + its
+    CSR (from ``contract_csr``'s own sort), the (N,) original-node →
+    condensed-node map to compose the final labels through, and the
+    condensed frontier mask for round-0 separation. Before the first
+    solve (``has_solution`` False) the stable set is empty, so this
+    degrades to an identity contraction — a cold solve with an extra
+    (cheap) sweep."""
+    fr = patch_frontier(inst2, patch, halo)
+    labels = jnp.clip(state.labels, 0, inst2.num_nodes - 1)
+    # stable = intra-cluster edges that are either entirely outside the
+    # frontier (cluster cores carry over wholesale, internal repulsive
+    # edges included — deep inside a cluster the patch changed nothing,
+    # so the old partition is the best known answer there) or still
+    # attractive under the patched costs (at the frontier the previous
+    # assignment survives exactly where its support survives; a node
+    # whose attachment went non-positive falls out as a singleton free
+    # to re-join — or not — during the warm rounds). Carving out whole
+    # frontier *nodes* instead loses real quality: re-merging the
+    # singletons back takes many rounds, which is the budget warm mode
+    # exists to avoid
+    stable = inst2.edge_valid & state.has_solution \
+        & (labels[inst2.u] == labels[inst2.v]) \
+        & ((inst2.cost > 0) | (~fr[inst2.u] & ~fr[inst2.v]))
+    res0, csr_c = contract_csr(inst2, stable)
+    lift = res0.mapping.astype(jnp.int32)
+    fr_c = jnp.zeros((inst2.num_nodes,), bool) \
+        .at[lift].max(fr & inst2.node_valid)
+    return res0.instance, csr_c, lift, fr_c
+
+
+def solve_delta_device(state: DeltaState, patch: DeltaPatch,
+                       mode: str = "pd",
+                       cfg: SolverConfig = SolverConfig(), sweep=None,
+                       intersect=None, warm: bool = False,
+                       ) -> tuple[SolveResult, DeltaState, PatchInfo]:
+    """One update tick: splice the patch in, re-solve, carry the state.
+
+    Exact mode (``warm=False``) is bit-identical to a cold solve of the
+    patched instance; warm mode trades the global dual bound
+    (``lower_bound`` becomes ``-inf``) for re-solving only the patched
+    neighbourhood. Mode "d" has no primal solution to carry and is
+    rejected for warm (exact "d" works: it just re-runs the dual)."""
+    if warm and mode == "d":
+        raise ValueError("warm delta re-solve needs a primal solution to "
+                         "lift; mode 'd' produces none — use exact mode")
+    inst2, csr2, info = apply_patch(state.instance, state.csr, patch)
+    if not warm:
+        res = solve_device(inst2, mode, cfg, sweep=sweep,
+                           intersect=intersect, csr=csr2)
+        final = res.labels.astype(jnp.int32)
+    else:
+        inst_c, csr_c, lift, fr_c = _warm_seed(inst2, state, patch,
+                                               cfg.delta_halo)
+        res_c = solve_device(inst_c, mode, cfg, sweep=sweep,
+                             intersect=intersect, csr=csr_c,
+                             sep_node_mask=fr_c)
+        final = res_c.labels.astype(jnp.int32)[lift]
+        res = res_c._replace(labels=final,
+                             objective=inst2.objective(final),
+                             lower_bound=jnp.float32(-jnp.inf))
+    state2 = DeltaState(instance=inst2, csr=csr2, labels=final,
+                        has_solution=jnp.bool_(mode != "d"))
+    return res, state2, info

@@ -1,0 +1,41 @@
+"""The carried delta-solve state: what one update tick hands the next.
+
+:class:`DeltaState` generalises PR 3's in-loop ``SolverState`` to the
+*between-solves* timescale: the padded instance, its live all-edges CSR
+(so the next tick splices instead of rebuilding), and the previous
+solution's labels (so a warm re-solve can keep untouched clusters
+contracted). It is a pytree of fixed-shape arrays — it passes through
+jit/vmap, which is what lets the serving tier stack many sessions' states
+into one batched delta dispatch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CsrGraph, MulticutInstance, csr_from_instance
+
+__all__ = ["DeltaState", "init_delta_state"]
+
+
+class DeltaState(NamedTuple):
+    """Carried state between :func:`repro.api.solve_delta` ticks."""
+    instance: MulticutInstance  # current full (uncontracted) padded problem
+    csr: CsrGraph               # live all-valid-edges CSR of ``instance``
+    labels: jax.Array           # (N,) i32 previous solution (identity before
+                                # the first solve)
+    has_solution: jax.Array     # () bool — ``labels`` hold a real solution
+
+
+def init_delta_state(inst: MulticutInstance,
+                     csr: CsrGraph | None = None) -> DeltaState:
+    """Fresh state around an instance: identity labels, no solution yet
+    (a warm first tick degrades gracefully to a cold solve). Builds the
+    one CSR every later tick splices."""
+    if csr is None:
+        csr = csr_from_instance(inst)
+    return DeltaState(instance=inst, csr=csr,
+                      labels=jnp.arange(inst.num_nodes, dtype=jnp.int32),
+                      has_solution=jnp.bool_(False))

@@ -5,8 +5,10 @@ The production front end over :mod:`repro.api`'s executable registry:
 * :mod:`repro.serve.buckets` — geometric size bucketing + neutral shape
   padding (one compiled executable per bucket serves every instance in
   that bucket, results unchanged);
-* :mod:`repro.serve.router` — declarative size→(mode, config, backend,
-  batch_shards) routing;
+* :mod:`repro.serve.router` — declarative (size, traffic)→(mode, config,
+  backend, batch_shards) routing;
+* :mod:`repro.serve.session` — sticky sessions carrying incremental
+  :class:`repro.incremental.DeltaState` between update ticks;
 * :mod:`repro.serve.engine` — the queueing / continuous micro-batching /
   demux engine itself.
 
@@ -17,16 +19,26 @@ Quickstart::
     engine = SolveEngine(batch_cap=8)
     engine.warmup([(inst.num_nodes, inst.num_edges)])
     results = engine.solve_stream(instances)     # mixed sizes welcome
+
+    session = engine.open_session(inst)          # sticky delta session
+    ticket = engine.submit_delta(session.session_id, patch)
+    res = ticket.result()                        # warm re-solve
 """
 from repro.serve.buckets import (
     Bucket, BucketPolicy, filler_instance, pad_batch, pad_instance,
     strip_result,
 )
-from repro.serve.engine import EngineStats, SolveEngine, SolveTicket
-from repro.serve.router import Route, Router, RoutingRule, default_router
+from repro.serve.engine import (
+    DeltaTicket, EngineStats, SolveEngine, SolveTicket,
+)
+from repro.serve.router import (
+    Route, Router, RoutingRule, TRAFFIC, default_router,
+)
+from repro.serve.session import DeltaSession, SessionStore
 
 __all__ = [
-    "Bucket", "BucketPolicy", "EngineStats", "Route", "Router",
-    "RoutingRule", "SolveEngine", "SolveTicket", "default_router",
-    "filler_instance", "pad_batch", "pad_instance", "strip_result",
+    "Bucket", "BucketPolicy", "DeltaSession", "DeltaTicket", "EngineStats",
+    "Route", "Router", "RoutingRule", "SessionStore", "SolveEngine",
+    "SolveTicket", "TRAFFIC", "default_router", "filler_instance",
+    "pad_batch", "pad_instance", "strip_result",
 ]

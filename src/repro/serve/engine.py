@@ -32,6 +32,16 @@ Compile accounting: the engine counts solver traces (via
 any stream costs at most ``len(buckets seen) × len(routes seen)``
 compilations, and the serve smoke benchmark asserts exactly that.
 
+**Sticky delta sessions** ride the same machinery: ``open_session`` cold
+solves an instance (routed as "delta" traffic) and parks its carried
+:class:`repro.incremental.DeltaState` in a :class:`repro.serve.session.
+DeltaSession`; ``submit_delta`` queues a patch tick under the session's
+pinned (bucket, route, warm) key, micro-batched with other sessions'
+ticks; the batched delta executable returns updated states, which the
+demux writes back to exactly the sessions that own them. A session's own
+ticks are serialised (a tick's patch applies to the previous tick's
+output state); filler slots carry an empty patch on an empty graph.
+
 The engine is synchronous and single-threaded by design — JAX dispatch
 is; overlap comes from batching, not threads. ``clock`` is injectable so
 timeout behaviour is testable without sleeping.
@@ -43,15 +53,22 @@ import time
 from collections import deque
 
 import jax
+import jax.numpy as jnp
 
 from repro import api
 from repro.core.dist import resolve_batch_shards
 from repro.core.graph import MulticutInstance
 from repro.core.solver import SolveResult
-from repro.serve.buckets import Bucket, BucketPolicy, pad_batch, strip_result
+from repro.incremental.patch import DeltaPatch, make_patch, pad_patch
+from repro.incremental.state import init_delta_state
+from repro.serve.buckets import (
+    Bucket, BucketPolicy, filler_instance, pad_batch, pad_instance,
+    strip_result,
+)
 from repro.serve.router import Route, Router, default_router
+from repro.serve.session import DeltaSession, SessionStore
 
-__all__ = ["EngineStats", "SolveEngine", "SolveTicket"]
+__all__ = ["DeltaTicket", "EngineStats", "SolveEngine", "SolveTicket"]
 
 
 LATENCY_WINDOW = 65536      # most-recent request latencies kept for
@@ -68,6 +85,11 @@ class EngineStats:
     n_dispatches: int = 0
     n_filler_slots: int = 0     # batch slots served to padding, not requests
     compiles: int = 0           # solver traces triggered through the engine
+    n_sessions_opened: int = 0
+    n_delta_submitted: int = 0
+    n_delta_completed: int = 0
+    n_delta_dispatches: int = 0
+    n_delta_filler_slots: int = 0
     latencies_s: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
@@ -115,6 +137,41 @@ class SolveTicket:
         return self._result
 
 
+class DeltaTicket:
+    """Handle for one submitted delta tick. Mirrors :class:`SolveTicket`
+    (``result()`` pumps, then force-flushes its own queue); resolving it
+    also writes the updated state back into the session."""
+
+    __slots__ = ("session", "patch", "t_submit", "t_done", "_result",
+                 "_engine", "_key")
+
+    def __init__(self, engine: "SolveEngine", session: DeltaSession,
+                 patch: DeltaPatch, t_submit: float):
+        self._engine = engine
+        self.session = session
+        self.patch = patch
+        self.t_submit = t_submit
+        self.t_done: float | None = None
+        self._result: SolveResult | None = None
+        self._key = session.key
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def result(self) -> SolveResult:
+        if self._result is None:
+            self._engine.pump()
+        if self._result is None:
+            self._engine.flush_deltas(self._key)
+        assert self._result is not None
+        return self._result
+
+
 class SolveEngine:
     """Bucketed, routed, micro-batching front end over the executable
     registry. See the module docstring for the pipeline; construction is
@@ -123,15 +180,23 @@ class SolveEngine:
 
     def __init__(self, router: Router | None = None,
                  policy: BucketPolicy | None = None, batch_cap: int = 8,
-                 flush_timeout_s: float | None = 0.05, clock=time.monotonic):
+                 flush_timeout_s: float | None = 0.05, clock=time.monotonic,
+                 patch_cap: int = 64):
         if batch_cap < 1:
             raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
+        if patch_cap < 1:
+            raise ValueError(f"patch_cap must be >= 1, got {patch_cap}")
         self.router = router if router is not None else default_router()
         self.policy = policy if policy is not None else BucketPolicy()
         self.batch_cap = batch_cap
+        self.patch_cap = patch_cap
         self.flush_timeout_s = flush_timeout_s
         self._clock = clock
         self._queues: dict[tuple[Bucket, Route], deque[SolveTicket]] = {}
+        self._delta_queues: dict[tuple[Bucket, Route, bool],
+                                 deque[DeltaTicket]] = {}
+        self._filler_states: dict[Bucket, object] = {}
+        self.sessions = SessionStore()
         self.stats = EngineStats()
 
     # -- admission ----------------------------------------------------------
@@ -153,6 +218,70 @@ class SolveEngine:
 
     def submit_many(self, instances) -> list[SolveTicket]:
         return [self.submit(i) for i in instances]
+
+    # -- sticky delta sessions ---------------------------------------------
+
+    def open_session(self, inst: MulticutInstance,
+                     route: Route | None = None,
+                     session_id: str | None = None,
+                     warm: bool = True) -> DeltaSession:
+        """Open a sticky incremental session: route the instance as
+        *delta* traffic, lift it onto its bucket, run the cold solve, and
+        pin (bucket, route, warm) for every later tick. The returned
+        session's ``last_result`` holds the padding-stripped cold result;
+        feed patches to :meth:`submit_delta`.
+
+        The cold open dispatches immediately (sessions are expected to be
+        long-lived — amortising the open across a batch would couple
+        unrelated sessions' start-up latencies)."""
+        if route is None:
+            route = self.router.route_instance(inst, traffic="delta")
+        if warm and route.mode == "d":
+            raise ValueError("warm delta sessions need a primal solution "
+                             "to lift; mode 'd' produces none")
+        bucket = self.policy.bucket_of(inst)
+        padded = pad_instance(inst, bucket)
+        traces0 = api.trace_count()
+        res, state = api.solve_with_state(padded, mode=route.mode,
+                                          config=route.config,
+                                          backend=route.backend)
+        jax.block_until_ready(res)
+        self.stats.compiles += api.trace_count() - traces0
+        sid = (session_id if session_id is not None
+               else self.sessions.allocate_id())
+        session = DeltaSession(
+            session_id=sid, state=state, bucket=bucket, route=route,
+            warm=warm, num_nodes=inst.num_nodes, patch_cap=self.patch_cap,
+            last_result=strip_result(res, inst.num_nodes))
+        self.sessions.add(session)
+        self.stats.n_sessions_opened += 1
+        return session
+
+    def submit_delta(self, session_id: str,
+                     patch: DeltaPatch) -> DeltaTicket:
+        """Queue one delta tick against a session. Ticks from *different*
+        sessions in the same (bucket, route, warm) micro-batch together;
+        ticks of the *same* session are serialised — an un-dispatched
+        previous tick is force-flushed first, because this tick's patch
+        applies to the state that tick will produce."""
+        session = self.sessions.get(session_id)
+        if session.pending is not None and not session.pending.done:
+            self.flush_deltas(session.key)
+        patch = pad_patch(patch, self.patch_cap)
+        ticket = DeltaTicket(self, session, patch, self._clock())
+        session.pending = ticket
+        self._delta_queues.setdefault(session.key, deque()).append(ticket)
+        self.stats.n_delta_submitted += 1
+        self.pump()
+        return ticket
+
+    def close_session(self, session_id: str) -> DeltaSession:
+        """Dispatch any in-flight tick, then drop the session (its carried
+        device arrays become collectable)."""
+        session = self.sessions.get(session_id)
+        if session.pending is not None and not session.pending.done:
+            self.flush_deltas(session.key)
+        return self.sessions.close(session_id)
 
     def _check_batch_split(self, route: Route) -> None:
         """Admission/warmup guard: the dispatch batch axis must split
@@ -186,6 +315,18 @@ class SolveEngine:
             if q and (force or timed_out):
                 self._dispatch(key, [q.popleft() for _ in range(len(q))])
                 n += 1
+        for key, q in self._delta_queues.items():
+            while len(q) >= self.batch_cap:
+                self._dispatch_delta(key, [q.popleft()
+                                           for _ in range(self.batch_cap)])
+                n += 1
+            now = self._clock()
+            timed_out = (q and self.flush_timeout_s is not None
+                         and now - q[0].t_submit >= self.flush_timeout_s)
+            if q and (force or timed_out):
+                self._dispatch_delta(key,
+                                     [q.popleft() for _ in range(len(q))])
+                n += 1
         return n
 
     def flush(self, key: tuple[Bucket, Route] | None = None) -> int:
@@ -200,6 +341,24 @@ class SolveEngine:
         while q:
             take = [q.popleft() for _ in range(min(len(q), self.batch_cap))]
             self._dispatch(key, take)
+            n += 1
+        return n
+
+    def flush_deltas(self, key: tuple[Bucket, Route, bool] | None = None
+                     ) -> int:
+        """Force-dispatch pending delta ticks — one session key or all."""
+        if key is None:
+            n = 0
+            for k in list(self._delta_queues):
+                n += self.flush_deltas(k)
+            return n
+        q = self._delta_queues.get(key)
+        if not q:
+            return 0
+        n = 0
+        while q:
+            take = [q.popleft() for _ in range(min(len(q), self.batch_cap))]
+            self._dispatch_delta(key, take)
             n += 1
         return n
 
@@ -223,6 +382,49 @@ class SolveEngine:
         self.stats.n_dispatches += 1
         self.stats.n_completed += len(tickets)
         self.stats.n_filler_slots += self.batch_cap - len(tickets)
+
+    def _filler_state(self, bucket: Bucket):
+        """Per-bucket cached filler: a fresh DeltaState around the
+        all-invalid filler instance. Batch tails dispatch against it (an
+        empty patch on an empty graph — structurally neutral, like the
+        solve path's filler instances)."""
+        st = self._filler_states.get(bucket)
+        if st is None:
+            st = init_delta_state(filler_instance(bucket))
+            self._filler_states[bucket] = st
+        return st
+
+    def _dispatch_delta(self, key: tuple[Bucket, Route, bool],
+                        tickets: list[DeltaTicket]) -> None:
+        bucket, route, warm = key
+        n_fill = self.batch_cap - len(tickets)
+        states = [t.session.state for t in tickets] \
+            + [self._filler_state(bucket)] * n_fill
+        patches = [t.patch for t in tickets] \
+            + [make_patch(bucket.nodes, pad_entries=self.patch_cap)] * n_fill
+        sbatch = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        pbatch = jax.tree.map(lambda *xs: jnp.stack(xs), *patches)
+        fn = api.compiled_delta(mode=route.mode, config=route.config,
+                                backend=route.backend, warm=warm,
+                                batched=True)
+        traces0 = api.trace_count()
+        res, states2, _info = fn(sbatch, pbatch)
+        jax.block_until_ready(res)
+        self.stats.compiles += api.trace_count() - traces0
+        now = self._clock()
+        for b, t in enumerate(tickets):
+            t.session.state = jax.tree.map(lambda x: x[b], states2)
+            single = jax.tree.map(lambda x: x[b], res)
+            t._result = strip_result(single, t.session.num_nodes)
+            t.session.last_result = t._result
+            t.session.n_ticks += 1
+            if t.session.pending is t:
+                t.session.pending = None
+            t.t_done = now
+            self.stats.latencies_s.append(now - t.t_submit)
+        self.stats.n_delta_dispatches += 1
+        self.stats.n_delta_completed += len(tickets)
+        self.stats.n_delta_filler_slots += n_fill
 
     # -- lifecycle helpers --------------------------------------------------
 
@@ -262,11 +464,14 @@ class SolveEngine:
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return (sum(len(q) for q in self._queues.values())
+                + sum(len(q) for q in self._delta_queues.values()))
 
     def __repr__(self):
         return (f"SolveEngine(batch_cap={self.batch_cap}, "
                 f"flush_timeout_s={self.flush_timeout_s}, "
                 f"queues={len(self._queues)}, pending={self.pending}, "
                 f"served={self.stats.n_completed}, "
+                f"sessions={len(self.sessions)}, "
+                f"delta_served={self.stats.n_delta_completed}, "
                 f"compiles={self.stats.compiles})")

@@ -24,7 +24,7 @@ from repro.api import BACKENDS, MODES, get_preset
 from repro.core.graph import MulticutInstance
 from repro.core.solver import SolverConfig
 
-__all__ = ["Route", "RoutingRule", "Router", "default_router"]
+__all__ = ["Route", "RoutingRule", "Router", "TRAFFIC", "default_router"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,18 +52,37 @@ class Route:
                              "the separation axis (one device mesh)")
 
 
+TRAFFIC = ("any", "solve", "delta")
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutingRule:
     """``route`` applies when the instance fits under both bounds
-    (``None`` = unbounded on that axis). Rules are tried in order; sizes
-    are the instance's *padded* counts — the same numbers bucketing sees.
+    (``None`` = unbounded on that axis) and the request's traffic class
+    matches. Rules are tried in order; sizes are the instance's *padded*
+    counts — the same numbers bucketing sees.
+
+    ``traffic`` scopes the rule: "solve" (one-shot requests), "delta"
+    (sticky-session incremental re-solves — see
+    :mod:`repro.serve.session`), or "any" (the default: both). Delta
+    traffic typically wants a cheaper config (fewer rounds, smaller
+    ``max_neg``) because warm re-solves only re-decide the patched
+    neighbourhood.
     """
     route: Route
     max_nodes: int | None = None
     max_edges: int | None = None
+    traffic: str = "any"
 
-    def matches(self, num_nodes: int, num_edges: int) -> bool:
-        return ((self.max_nodes is None or num_nodes <= self.max_nodes)
+    def __post_init__(self):
+        if self.traffic not in TRAFFIC:
+            raise ValueError(f"unknown traffic class {self.traffic!r}; "
+                             f"expected one of {TRAFFIC}")
+
+    def matches(self, num_nodes: int, num_edges: int,
+                traffic: str = "solve") -> bool:
+        return ((self.traffic == "any" or self.traffic == traffic)
+                and (self.max_nodes is None or num_nodes <= self.max_nodes)
                 and (self.max_edges is None or num_edges <= self.max_edges))
 
 
@@ -75,14 +94,19 @@ class Router:
         self.rules = tuple(rules)
         self.default = default if default is not None else Route()
 
-    def route(self, num_nodes: int, num_edges: int) -> Route:
+    def route(self, num_nodes: int, num_edges: int,
+              traffic: str = "solve") -> Route:
+        if traffic not in TRAFFIC:
+            raise ValueError(f"unknown traffic class {traffic!r}; "
+                             f"expected one of {TRAFFIC}")
         for rule in self.rules:
-            if rule.matches(num_nodes, num_edges):
+            if rule.matches(num_nodes, num_edges, traffic):
                 return rule.route
         return self.default
 
-    def route_instance(self, inst: MulticutInstance) -> Route:
-        return self.route(inst.num_nodes, inst.num_edges)
+    def route_instance(self, inst: MulticutInstance,
+                       traffic: str = "solve") -> Route:
+        return self.route(inst.num_nodes, inst.num_edges, traffic)
 
     def routes(self) -> tuple[Route, ...]:
         """Every distinct Route this router can emit (rule order, default
@@ -111,12 +135,14 @@ class Router:
         Each rule/default entry gives either a ``preset`` name (its mode +
         config seed the route) or an explicit ``mode``; ``config`` is a
         dict of ``SolverConfig`` field overrides applied on top; ``backend``
-        and ``batch_shards`` pass through.
+        and ``batch_shards`` pass through. A rule may scope itself with
+        ``"traffic": "solve" | "delta"`` ("any" when omitted).
         """
         def build_route(entry: dict) -> Route:
             entry = dict(entry)
             entry.pop("max_nodes", None)
             entry.pop("max_edges", None)
+            entry.pop("traffic", None)
             preset = entry.pop("preset", None)
             mode = entry.pop("mode", None)
             overrides = entry.pop("config", {})
@@ -147,7 +173,8 @@ class Router:
                              f"expected 'rules' and/or 'default'")
         rules = [RoutingRule(route=build_route(e),
                              max_nodes=e.get("max_nodes"),
-                             max_edges=e.get("max_edges"))
+                             max_edges=e.get("max_edges"),
+                             traffic=e.get("traffic", "any"))
                  for e in spec.get("rules", ())]
         default = spec.get("default")
         return cls(rules=rules,

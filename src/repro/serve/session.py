@@ -1,0 +1,91 @@
+"""Sticky delta sessions: the serving-side handle around a carried
+:class:`repro.incremental.DeltaState`.
+
+A one-shot solve request is stateless — any dispatch slot will do. A
+*delta* request is sticky: its patch only means something against the
+session's carried state, and the updated state must flow back to exactly
+that session. :class:`DeltaSession` pins the decisions made at open time
+(bucket shape, route, warm/exact) so every later tick hits the same
+compiled executable, and carries the state the engine's batched delta
+dispatch reads and writes (:meth:`repro.serve.SolveEngine.open_session` /
+:meth:`~repro.serve.SolveEngine.submit_delta`).
+
+Sessions are deliberately dumb data + a registry: all scheduling lives in
+the engine, which also serialises ticks *per session* — a session's next
+patch is never batched alongside its previous one (the state it needs is
+still in flight), while patches from different sessions in the same
+(bucket, route) batch together freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.solver import SolveResult
+from repro.incremental.state import DeltaState
+from repro.serve.buckets import Bucket
+from repro.serve.router import Route
+
+__all__ = ["DeltaSession", "SessionStore"]
+
+
+@dataclasses.dataclass
+class DeltaSession:
+    """One sticky incremental-solve session (mutable: the engine writes
+    ``state`` back after every dispatched tick)."""
+    session_id: str
+    state: DeltaState           # carried at the BUCKET shape
+    bucket: Bucket              # pinned at open: the compiled shape
+    route: Route                # pinned at open: the executable settings
+    warm: bool                  # pinned at open: warm vs exact re-solve
+    num_nodes: int              # the request's own padded node count —
+                                # what strip_result trims labels back to
+    patch_cap: int              # static patch capacity P of every tick
+    last_result: Optional[SolveResult] = None
+    n_ticks: int = 0            # delta ticks completed (cold open excluded)
+    pending: Optional[object] = None    # in-flight DeltaTicket, or None —
+                                # the engine's per-session serialisation
+                                # latch
+
+    @property
+    def key(self):
+        """The queue/executable key this session's ticks dispatch under."""
+        return (self.bucket, self.route, self.warm)
+
+
+class SessionStore:
+    """Engine-owned registry of live sessions (id allocation + lookup)."""
+
+    def __init__(self):
+        self._sessions: dict[str, DeltaSession] = {}
+        self._next = 0
+
+    def allocate_id(self) -> str:
+        sid = f"s{self._next}"
+        self._next += 1
+        return sid
+
+    def add(self, session: DeltaSession) -> DeltaSession:
+        if session.session_id in self._sessions:
+            raise ValueError(f"session {session.session_id!r} already open")
+        self._sessions[session.session_id] = session
+        return session
+
+    def get(self, session_id: str) -> DeltaSession:
+        try:
+            return self._sessions[session_id]
+        except KeyError:
+            raise KeyError(f"unknown session {session_id!r}; open: "
+                           f"{sorted(self._sessions)}") from None
+
+    def close(self, session_id: str) -> DeltaSession:
+        return self._sessions.pop(self.get(session_id).session_id)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def __contains__(self, session_id: str) -> bool:
+        return session_id in self._sessions
+
+    def __iter__(self):
+        return iter(self._sessions.values())

@@ -297,3 +297,42 @@ def test_facade_replace():
     assert mc.config.mp_iters == 8    # original untouched
     inst = _insts()[0]
     assert np.isfinite(float(mc2.solve(inst).objective))
+
+
+def test_lru_eviction_recompiles_not_stale():
+    """Regression for the registry's LRU bound: pushing past maxsize must
+    *evict* (re-tracing on next use), never serve a stale executable, and
+    results must be unchanged across the evict/recompile cycle."""
+    inst = random_instance(10, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    cfgs = [dataclasses.replace(CFG, mp_iters=i, max_rounds=3)
+            for i in (2, 3, 4)]
+    api.set_cache_maxsize(2)
+    try:
+        assert api.cache_info().maxsize == 2
+        assert api.trace_count() == 0          # maxsize swap resets traces
+        first = api.solve(inst, mode="pd", config=cfgs[0])
+        api.solve(inst, mode="pd", config=cfgs[1])
+        assert api.trace_count() == 2
+        assert api.cache_info().currsize == 2
+        # third key evicts the LRU entry (cfgs[0]); the bound holds
+        api.solve(inst, mode="pd", config=cfgs[2])
+        assert api.trace_count() == 3
+        assert api.cache_info().currsize == 2
+        # cfgs[1] stays resident: reusing it costs no new trace
+        api.solve(inst, mode="pd", config=cfgs[1])
+        assert api.trace_count() == 3
+        # the evicted key re-traces — and the fresh executable agrees
+        # bit-for-bit with what the evicted one produced
+        again = api.solve(inst, mode="pd", config=cfgs[0])
+        assert api.trace_count() == 4
+        np.testing.assert_array_equal(np.asarray(first.labels),
+                                      np.asarray(again.labels))
+        assert np.asarray(first.objective).tobytes() == \
+            np.asarray(again.objective).tobytes()
+        # clear_cache on the swapped registry keeps info/traces consistent
+        api.clear_cache()
+        info = api.cache_info()
+        assert (info.currsize, info.hits, info.misses) == (0, 0, 0)
+        assert api.trace_count() == 0
+    finally:
+        api.set_cache_maxsize(api.CACHE_MAXSIZE)

@@ -1,0 +1,315 @@
+"""PR 6's tentpole contract: warm-started re-solve on graph deltas.
+
+Three properties under test:
+
+* **Patch application is exact.** ``apply_patch`` (device) produces the
+  same instance arrays, slot for slot, as the ``apply_patch_host`` numpy
+  reference, and the spliced CSR is bit-identical to a fresh ``build_csr``
+  of the patched instance — across instance families, seeds, and
+  *chained* patches (each tick patching the previous tick's output, CSR
+  handed along the whole way, never rebuilt).
+* **Exact delta re-solve == cold solve.** ``solve_delta`` without
+  ``warm`` returns the same labels / objective / lower bound, bit for
+  bit, as a cold ``api.solve`` of the patched instance — the incremental
+  path changes the cost of an update tick, not its answer.
+* **Warm mode is a valid primal heuristic.** Its labels are a real
+  clustering of the patched instance and its reported objective is the
+  true objective of those labels; the lower bound is explicitly ``-inf``.
+
+Plus the validation satellites: ``make_patch`` rejects duplicate pairs
+and self-loops; ``make_instance`` rejects nonzero-cost self-loops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import (
+    build_csr, cluster_instance, csr_from_instance, grid_instance,
+    make_instance, random_instance, splice_csr,
+)
+from repro.core.solver import SolverConfig
+from repro.incremental import (
+    DeltaPatch, apply_patch, apply_patch_host, init_delta_state, make_patch,
+    pad_patch, solve_cold_device, solve_delta_device,
+)
+
+PAD_N, PAD_E = 48, 768
+
+FAMILIES = {
+    "random": lambda s: random_instance(40, 0.25, seed=s, pad_edges=PAD_E,
+                                        pad_nodes=PAD_N),
+    "grid": lambda s: grid_instance(6, 7, seed=s, pad_edges=PAD_E,
+                                    pad_nodes=PAD_N),
+    "cluster": lambda s: cluster_instance(40, seed=s, pad_edges=PAD_E,
+                                          pad_nodes=PAD_N),
+}
+
+CFG = SolverConfig(max_rounds=4, mp_iters=2, max_neg=32)
+
+
+def _assert_csr_equal(got, want, msg=""):
+    for fld in ("row_ptr", "col", "edge_id"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=f"{msg}: CSR field {fld}")
+
+
+def _assert_inst_equal(got, want, msg=""):
+    for fld in ("u", "v", "cost", "edge_valid", "node_valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld)),
+            err_msg=f"{msg}: instance field {fld}")
+
+
+def _random_patch(inst, rng, n_rw=3, n_del=2, n_ins=4):
+    """A mixed patch against the CURRENT live edge set of ``inst``:
+    reweight/delete existing edges, insert absent ones."""
+    ev = np.asarray(inst.edge_valid)
+    u = np.asarray(inst.u)[ev]
+    v = np.asarray(inst.v)[ev]
+    nv = np.asarray(inst.node_valid)
+    n_live = int(nv.sum())
+    live = sorted(set(zip(np.minimum(u, v).tolist(),
+                          np.maximum(u, v).tolist())))
+    rng.shuffle(live)
+    n_rw = min(n_rw, len(live))
+    n_del = min(n_del, len(live) - n_rw)
+    rw = live[:n_rw]
+    de = live[n_rw:n_rw + n_del]
+    taken = set(live)
+    ins = []
+    while len(ins) < n_ins:
+        a, b = int(rng.integers(0, n_live)), int(rng.integers(0, n_live))
+        key = (min(a, b), max(a, b))
+        if a != b and key not in taken:
+            taken.add(key)
+            ins.append(key)
+    kw = {}
+    if rw:
+        kw["reweight"] = ([a for a, _ in rw], [b for _, b in rw],
+                          rng.normal(size=len(rw)).astype(np.float32))
+    if de:
+        kw["delete"] = ([a for a, _ in de], [b for _, b in de])
+    if ins:
+        kw["insert"] = ([a for a, _ in ins], [b for _, b in ins],
+                        rng.normal(size=len(ins)).astype(np.float32))
+    return make_patch(inst.num_nodes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# patch application: device == host, splice == build_csr, chained
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("seed", range(2))
+def test_apply_patch_chained_bit_exact(family, seed):
+    """Device apply == host reference AND spliced CSR == fresh build_csr,
+    chained over 3 ticks with the CSR handed along (never rebuilt)."""
+    inst = FAMILIES[family](seed)
+    csr = csr_from_instance(inst)
+    rng = np.random.default_rng(1000 + seed)
+    applied = jax.jit(apply_patch)
+    for tick in range(3):
+        patch = _random_patch(inst, rng)
+        inst2, csr2, info = applied(inst, csr, patch)
+        host = apply_patch_host(inst, patch)
+        msg = f"{family}/seed{seed}/tick{tick}"
+        _assert_inst_equal(inst2, host, msg)
+        fresh = build_csr(host.u, host.v, host.edge_valid, host.num_nodes)
+        _assert_csr_equal(csr2, fresh, msg)
+        assert int(info.n_dropped) == 0, msg
+        inst, csr = inst2, csr2
+
+
+def test_apply_patch_upsert_and_noop_delete():
+    """Upserting a missing edge inserts it; deleting a missing edge is a
+    no-op; PatchInfo counts each class."""
+    inst = make_instance([0, 1], [1, 2], [1.0, -2.0], num_nodes=4,
+                         pad_edges=8)
+    csr = csr_from_instance(inst)
+    patch = make_patch(4, reweight=([0, 2], [1, 3], [5.0, 7.0]),
+                       delete=([0], [3]))
+    inst2, csr2, info = apply_patch(inst, csr, patch)
+    host = apply_patch_host(inst, patch)
+    _assert_inst_equal(inst2, host)
+    assert int(info.n_reweighted) == 1      # (0,1) existed
+    assert int(info.n_inserted) == 1        # (2,3) did not
+    assert int(info.n_deleted) == 0         # (0,3) absent: no-op
+    assert int(info.n_dropped) == 0
+
+
+def test_apply_patch_insert_overflow_dropped():
+    """Inserts past the instance's free-slot capacity are dropped and
+    counted, never silently mangled."""
+    inst = make_instance([0, 1], [1, 2], [1.0, -2.0], num_nodes=6,
+                         pad_edges=3)  # one free slot
+    csr = csr_from_instance(inst)
+    patch = make_patch(6, insert=([2, 3], [3, 4], [1.0, 1.0]))
+    inst2, csr2, info = apply_patch(inst, csr, patch)
+    assert int(info.n_inserted) == 1
+    assert int(info.n_dropped) == 1
+    _assert_inst_equal(inst2, apply_patch_host(inst, patch))
+    _assert_csr_equal(csr2, csr_from_instance(inst2))
+
+
+def test_splice_csr_delete_only_matches_build():
+    """Pure deletion splice (no insertions) stays bit-identical."""
+    inst = random_instance(20, 0.3, seed=5, pad_edges=128, pad_nodes=24)
+    csr = csr_from_instance(inst)
+    drop = np.zeros(inst.num_edges, bool)
+    live = np.where(np.asarray(inst.edge_valid))[0]
+    drop[live[::3]] = True
+    add = jnp.zeros((1,), jnp.int32)
+    got = splice_csr(csr, jnp.asarray(drop), add, add, add,
+                     jnp.zeros((1,), bool))
+    ev2 = np.asarray(inst.edge_valid) & ~drop
+    want = build_csr(inst.u, inst.v, jnp.asarray(ev2), inst.num_nodes)
+    _assert_csr_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# exact delta re-solve == cold solve (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("graph_impl", ["dense", "sparse"])
+def test_solve_delta_exact_equals_cold(family, graph_impl):
+    """solve_delta (exact) == cold api.solve of the patched instance —
+    labels, objective AND lower bound bit-identical — chained 3 ticks."""
+    cfg = SolverConfig(max_rounds=4, mp_iters=2, max_neg=32,
+                       graph_impl=graph_impl)
+    inst = FAMILIES[family](0)
+    rng = np.random.default_rng(7)
+    host = inst
+    _, state = api.solve_with_state(inst, config=cfg)
+    for tick in range(3):
+        patch = _random_patch(host, rng)
+        res, state = api.solve_delta(state, patch, config=cfg)
+        host = apply_patch_host(host, patch)
+        cold = api.solve(host, config=cfg)
+        msg = f"{family}/{graph_impl}/tick{tick}"
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      np.asarray(cold.labels), msg)
+        assert float(res.objective) == float(cold.objective), msg
+        assert float(res.lower_bound) == float(cold.lower_bound), msg
+        assert int(res.rounds) == int(cold.rounds), msg
+        # the carried state matches the host-side world state
+        _assert_inst_equal(state.instance, host, msg)
+
+
+def test_solve_cold_device_equals_api_solve():
+    """Opening a session (kind 'delta-open') must not change the solve."""
+    inst = FAMILIES["random"](3)
+    res, state = solve_cold_device(inst, "pd", CFG)
+    plain = api.solve(inst, config=CFG)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(plain.labels))
+    assert float(res.objective) == float(plain.objective)
+    assert bool(state.has_solution)
+    np.testing.assert_array_equal(np.asarray(state.labels),
+                                  np.asarray(res.labels))
+
+
+# ---------------------------------------------------------------------------
+# warm mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_warm_objective_is_true_objective(family):
+    """Warm labels are a real clustering of the patched instance; the
+    reported objective is their exact objective; LB is -inf."""
+    inst = FAMILIES[family](1)
+    rng = np.random.default_rng(11)
+    _, state = api.solve_with_state(inst, config=CFG)
+    host = inst
+    for tick in range(2):
+        patch = _random_patch(host, rng)
+        res, state = api.solve_delta(state, patch, config=CFG, warm=True)
+        host = apply_patch_host(host, patch)
+        labels = np.asarray(res.labels)
+        assert labels.shape == (inst.num_nodes,)
+        assert ((labels >= 0) & (labels < inst.num_nodes)).all()
+        assert float(res.objective) == pytest.approx(
+            float(host.objective(jnp.asarray(labels))), abs=1e-4)
+        assert float(res.lower_bound) == -np.inf
+
+
+def test_warm_requires_primal_mode():
+    inst = FAMILIES["random"](0)
+    _, state = api.solve_with_state(inst, config=CFG)
+    patch = make_patch(inst.num_nodes)
+    with pytest.raises(ValueError, match="primal"):
+        api.solve_delta(state, patch, mode="d", config=CFG, warm=True)
+    with pytest.raises(ValueError, match="primal"):
+        solve_delta_device(state, patch, "d", CFG, warm=True)
+
+
+def test_warm_first_tick_degrades_to_cold():
+    """Warm before any solve (has_solution=False) must still produce a
+    valid result — the stable set is empty, so it is a cold solve with a
+    frontier-restricted round 0."""
+    inst = FAMILIES["cluster"](2)
+    state = init_delta_state(inst)
+    patch = _random_patch(inst, np.random.default_rng(3))
+    res, state2, _ = solve_delta_device(state, patch, "pd", CFG, warm=True)
+    host = apply_patch_host(inst, patch)
+    assert float(res.objective) == pytest.approx(
+        float(host.objective(res.labels)), abs=1e-4)
+    assert bool(state2.has_solution)
+
+
+# ---------------------------------------------------------------------------
+# validation satellites (make_patch + make_instance)
+# ---------------------------------------------------------------------------
+
+def test_make_patch_rejects_self_loops():
+    with pytest.raises(ValueError, match="self-loop"):
+        make_patch(4, insert=([1], [1], [2.0]))
+    with pytest.raises(ValueError, match="self-loop"):
+        make_patch(4, delete=([2], [2]))
+
+
+def test_make_patch_rejects_duplicate_pairs():
+    # within one group
+    with pytest.raises(ValueError, match="duplicate"):
+        make_patch(4, insert=([0, 1], [1, 0], [1.0, 2.0]))
+    # across groups, order-normalized
+    with pytest.raises(ValueError, match="duplicate"):
+        make_patch(4, reweight=([0], [1], [1.0]), delete=([1], [0]))
+
+
+def test_make_patch_rejects_out_of_range():
+    with pytest.raises(ValueError, match="node ids"):
+        make_patch(4, insert=([0], [4], [1.0]))
+    with pytest.raises(ValueError, match="node ids"):
+        make_patch(4, delete=([-1], [2]))
+
+
+def test_make_patch_padding_and_pad_patch():
+    p = make_patch(8, insert=([0], [1], [1.0]), pad_entries=5)
+    assert p.num_entries == 5
+    assert int(np.asarray(p.valid).sum()) == 1
+    grown = pad_patch(p, 9)
+    assert grown.num_entries == 9
+    assert int(np.asarray(grown.valid).sum()) == 1
+    shrunk = pad_patch(p, 2)        # live entry fits under index 2
+    assert shrunk.num_entries == 2
+    with pytest.raises(ValueError, match="live entries"):
+        pad_patch(DeltaPatch(u=jnp.zeros(3, jnp.int32),
+                             v=jnp.ones(3, jnp.int32),
+                             cost=jnp.zeros(3), delete=jnp.zeros(3, bool),
+                             valid=jnp.array([False, False, True])), 2)
+    # empty patch still has a nonzero static shape
+    empty = make_patch(4)
+    assert empty.num_entries == 1
+    assert not bool(np.asarray(empty.valid).any())
+
+
+def test_make_instance_rejects_nonzero_self_loop():
+    with pytest.raises(ValueError, match="self-loop"):
+        make_instance([0, 1], [0, 2], [1.0, 2.0], num_nodes=3)
+    # zero-cost self-loops stay admissible (the neutral filler form)
+    inst = make_instance([0, 1], [0, 2], [0.0, 2.0], num_nodes=3)
+    assert int(np.asarray(inst.edge_valid).sum()) >= 1

@@ -211,3 +211,72 @@ def test_pinned_route_overrides_router():
     direct = api.solve(pad_instance(inst, t.bucket), mode="p",
                        config=CFG_DENSE)
     assert _bit_eq(res.objective, direct.objective)
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases: empty ticks and filler-only batches
+# ---------------------------------------------------------------------------
+
+def test_pump_empty_queues_dispatches_nothing():
+    """An idle tick is a no-op: no dispatch, no filler work, no compile."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=0.0)
+    assert eng.pump() == 0
+    assert eng.pump(force=True) == 0
+    assert eng.flush() == 0
+    assert eng.flush_deltas() == 0
+    assert eng.stats.n_dispatches == 0
+    assert eng.stats.n_delta_dispatches == 0
+    assert eng.stats.n_filler_slots == 0
+    assert eng.stats.compiles == 0
+
+
+def test_flush_unknown_key_is_noop():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4)
+    inst = random_instance(12, 0.5, seed=0, pad_edges=64, pad_nodes=16)
+    bucket = eng.policy.bucket_of(inst)
+    route = eng.router.route_instance(inst)
+    assert eng.flush((bucket, route)) == 0
+    assert eng.flush_deltas((bucket, route, True)) == 0
+    assert eng.stats.n_dispatches == 0
+
+
+def test_no_filler_only_batches_after_drain():
+    """Once every ticket has resolved, further ticks must never dispatch a
+    batch made purely of filler slots."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=0.0)
+    insts = _mixed_stream(3)
+    tickets = eng.submit_many(insts)
+    for t in tickets:
+        t.result()
+    dispatches = eng.stats.n_dispatches
+    fillers = eng.stats.n_filler_slots
+    assert eng.pending == 0
+    # timeout 0.0 makes every non-empty queue eligible — but the queues
+    # are drained, so nothing may go out
+    assert eng.pump() == 0
+    assert eng.pump(force=True) == 0
+    assert eng.flush() == 0
+    assert eng.stats.n_dispatches == dispatches
+    assert eng.stats.n_filler_slots == fillers
+
+
+def test_no_filler_only_delta_batches_after_drain():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=0.0, patch_cap=4)
+    inst = random_instance(12, 0.5, seed=3, pad_edges=64, pad_nodes=16)
+    s = eng.open_session(inst, warm=False)
+    ev = np.asarray(inst.edge_valid)
+    patch = api.make_patch(
+        inst.num_nodes,
+        reweight=([int(np.asarray(inst.u)[ev][0])],
+                  [int(np.asarray(inst.v)[ev][0])], [2.5]))
+    eng.submit_delta(s.session_id, patch).result()
+    dispatches = eng.stats.n_delta_dispatches
+    fillers = eng.stats.n_delta_filler_slots
+    assert eng.pump(force=True) == 0
+    assert eng.flush_deltas() == 0
+    assert eng.flush_deltas(s.key) == 0
+    assert eng.stats.n_delta_dispatches == dispatches
+    assert eng.stats.n_delta_filler_slots == fillers

@@ -1,0 +1,226 @@
+"""Sticky delta sessions through the serving engine: traffic-scoped
+routing, open/tick/close lifecycle, cross-session micro-batching with
+state write-back, per-session serialisation, and exactness — an exact
+(non-warm) session tick returns bit-identical results to ``api.solve``
+of the patched bucket-padded instance."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import random_instance
+from repro.core.solver import SolverConfig
+from repro.incremental import apply_patch_host
+from repro.serve import (
+    BucketPolicy, Route, Router, RoutingRule, SolveEngine,
+)
+
+CFG = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4,
+                   graph_impl="dense")
+CFG_DELTA = SolverConfig(max_neg=16, mp_iters=2, max_rounds=3,
+                         graph_impl="dense")
+POLICY = BucketPolicy(node_floor=16, edge_floor=64)
+
+
+def _router():
+    """Solve traffic → CFG; delta traffic → the cheaper CFG_DELTA."""
+    return Router(rules=[
+        RoutingRule(route=Route(mode="pd", config=CFG_DELTA),
+                    traffic="delta"),
+        RoutingRule(route=Route(mode="pd", config=CFG), traffic="solve"),
+    ])
+
+
+def _inst(seed, n=14):
+    return random_instance(n, 0.5, seed=seed, pad_edges=128, pad_nodes=16)
+
+
+def _patch_for(inst, seed, cost=3.0):
+    ev = np.asarray(inst.edge_valid)
+    u = np.asarray(inst.u)[ev]
+    v = np.asarray(inst.v)[ev]
+    i = seed % len(u)
+    return api.make_patch(inst.num_nodes,
+                          reweight=([int(u[i])], [int(v[i])], [cost]))
+
+
+def _bit_eq(a, b):
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# routing: traffic classes
+# ---------------------------------------------------------------------------
+
+def test_router_traffic_scoping():
+    r = _router()
+    assert r.route(16, 64, traffic="solve").config == CFG
+    assert r.route(16, 64, traffic="delta").config == CFG_DELTA
+    # "any" rules serve both classes
+    r2 = Router(rules=[RoutingRule(route=Route(mode="pd", config=CFG))])
+    assert r2.route(16, 64, traffic="delta").config == CFG
+    with pytest.raises(ValueError, match="traffic"):
+        r.route(16, 64, traffic="bogus")
+    with pytest.raises(ValueError, match="traffic"):
+        RoutingRule(route=Route(), traffic="bogus")
+
+
+def test_router_from_spec_traffic():
+    r = Router.from_spec({
+        "rules": [{"traffic": "delta", "mode": "pd",
+                   "config": {"max_rounds": 3}}],
+        "default": {"mode": "pd"},
+    })
+    assert r.route(16, 64, traffic="delta").config.max_rounds == 3
+    assert r.route(16, 64, traffic="solve").config.max_rounds == \
+        SolverConfig().max_rounds
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle + exactness
+# ---------------------------------------------------------------------------
+
+def test_open_session_routes_as_delta_and_cold_solves():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, patch_cap=4)
+    inst = _inst(0)
+    s = eng.open_session(inst, warm=False)
+    assert s.route.config == CFG_DELTA          # delta-traffic rule won
+    assert s.session_id in eng.sessions
+    assert eng.stats.n_sessions_opened == 1
+    # cold result == plain solve of the bucket-padded instance
+    from repro.serve import pad_instance
+    direct = api.solve(pad_instance(inst, s.bucket), mode="pd",
+                       config=CFG_DELTA)
+    assert _bit_eq(s.last_result.objective, direct.objective)
+    assert s.last_result.labels.shape == (inst.num_nodes,)
+
+
+def test_exact_session_tick_matches_cold_solve():
+    """The acceptance contract at the serving layer: an exact session
+    tick == api.solve of the patched padded instance, bit for bit."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, patch_cap=4)
+    from repro.serve import pad_instance
+    inst = _inst(1)
+    s = eng.open_session(inst, warm=False)
+    padded = pad_instance(inst, s.bucket)
+    for tick in range(3):
+        patch = _patch_for(inst, tick, cost=2.0 + tick)
+        res = eng.submit_delta(s.session_id, patch).result()
+        padded = apply_patch_host(padded, patch)
+        cold = api.solve(padded, mode="pd", config=CFG_DELTA)
+        assert _bit_eq(res.objective, cold.objective), tick
+        assert _bit_eq(res.lower_bound, cold.lower_bound), tick
+        assert np.array_equal(
+            np.asarray(res.labels),
+            np.asarray(cold.labels)[:inst.num_nodes]), tick
+    assert s.n_ticks == 3
+
+
+def test_sessions_micro_batch_together():
+    """Ticks of distinct same-key sessions share one dispatch; states are
+    written back to the right sessions."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, patch_cap=4)
+    insts = [_inst(s) for s in range(3)]
+    sessions = [eng.open_session(i, warm=False) for i in insts]
+    tickets = [eng.submit_delta(s.session_id, _patch_for(i, 0))
+               for s, i in zip(sessions, insts)]
+    assert not any(t.done for t in tickets)     # 3 < batch_cap: queued
+    assert eng.pending == 3
+    results = [t.result() for t in tickets]
+    assert eng.stats.n_delta_dispatches == 1    # one batched dispatch
+    assert eng.stats.n_delta_filler_slots == 1  # 3 real + 1 filler
+    # write-back went to the right session: each session's carried
+    # instance matches its own host-side patched instance
+    from repro.serve import pad_instance
+    for s, i, r in zip(sessions, insts, results):
+        want = apply_patch_host(pad_instance(i, s.bucket),
+                                _patch_for(i, 0))
+        np.testing.assert_array_equal(np.asarray(s.state.instance.cost),
+                                      np.asarray(want.cost))
+        assert s.last_result is r
+
+
+def test_same_session_ticks_serialize():
+    """A second tick on a session with an un-dispatched first tick flushes
+    the first — its state must exist before the second applies."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None, patch_cap=4)
+    inst = _inst(2)
+    s = eng.open_session(inst, warm=False)
+    t1 = eng.submit_delta(s.session_id, _patch_for(inst, 0))
+    assert not t1.done
+    t2 = eng.submit_delta(s.session_id, _patch_for(inst, 1))
+    assert t1.done                              # flushed by t2's admission
+    t2.result()
+    assert s.n_ticks == 2
+
+
+def test_warm_session_tick_valid_objective():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None, patch_cap=4)
+    from repro.serve import pad_instance
+    inst = _inst(3)
+    s = eng.open_session(inst)                  # warm=True default
+    patch = _patch_for(inst, 0, cost=-4.0)
+    res = eng.submit_delta(s.session_id, patch).result()
+    padded = apply_patch_host(pad_instance(inst, s.bucket), patch)
+    labels = np.asarray(s.state.labels)
+    assert float(res.objective) == pytest.approx(
+        float(padded.objective(s.state.labels)), abs=1e-4)
+    assert float(res.lower_bound) == -np.inf
+    assert ((labels >= 0) & (labels < s.bucket.nodes)).all()
+
+
+def test_warm_rejects_dual_route():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      patch_cap=4)
+    with pytest.raises(ValueError, match="primal"):
+        eng.open_session(_inst(0), route=Route(mode="d", config=CFG),
+                         warm=True)
+
+
+def test_close_session_flushes_and_drops():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None, patch_cap=4)
+    inst = _inst(4)
+    s = eng.open_session(inst, warm=False)
+    t = eng.submit_delta(s.session_id, _patch_for(inst, 0))
+    closed = eng.close_session(s.session_id)
+    assert t.done and closed is s
+    assert s.session_id not in eng.sessions
+    with pytest.raises(KeyError):
+        eng.submit_delta(s.session_id, _patch_for(inst, 0))
+
+
+def test_patch_over_capacity_rejected():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      patch_cap=2)
+    inst = _inst(5)
+    s = eng.open_session(inst, warm=False)
+    ev = np.asarray(inst.edge_valid)
+    u = np.asarray(inst.u)[ev][:3]
+    v = np.asarray(inst.v)[ev][:3]
+    big = api.make_patch(inst.num_nodes,
+                         reweight=(u.tolist(), v.tolist(), [1.0, 2.0, 3.0]))
+    with pytest.raises(ValueError, match="live entries"):
+        eng.submit_delta(s.session_id, big)
+
+
+def test_delta_compile_budget():
+    """Sessions sharing (bucket, route, warm) share executables: N
+    sessions × T ticks cost one delta compile (+ one cold-open)."""
+    api.clear_cache()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None, patch_cap=4)
+    insts = [_inst(s) for s in range(3)]
+    sessions = [eng.open_session(i, warm=False) for i in insts]
+    compiles_after_open = eng.stats.compiles
+    assert compiles_after_open == 1             # one delta-open executable
+    for tick in range(2):
+        for s, i in zip(sessions, insts):
+            eng.submit_delta(s.session_id, _patch_for(i, tick))
+    eng.flush_deltas()
+    assert eng.stats.n_delta_completed == 6
+    assert eng.stats.compiles == compiles_after_open + 1
