@@ -65,6 +65,24 @@ def _fmt_delta(old, new, unit=""):
     return f"{old}{unit} -> {new}{unit} ({pct:+.1f}%)"
 
 
+def _phase_lines(baseline: dict, fresh: dict) -> list[str]:
+    """Per-phase wall breakdown (separation / message passing /
+    contraction) — printed for context, NEVER gated: the per-mode wall
+    gates already cover the totals, and phase walls are measured on
+    standalone executables (no cross-phase fusion), so they carry more
+    runner noise than the fused solves."""
+    bp, fp = baseline.get("phases", {}), fresh.get("phases", {})
+    lines = []
+    for impl in sorted(set(bp) | set(fp)):
+        b, f = bp.get(impl, {}), fp.get(impl, {})
+        for phase in sorted(set(b) | set(f)):
+            lines.append(f"  phase {phase}/{impl}: wall "
+                         f"{_fmt_delta(b.get(phase), f.get(phase), 's')}")
+    if lines:
+        lines.insert(0, "per-phase round breakdown (report-only):")
+    return lines
+
+
 def compare(baseline: dict, fresh: dict) -> list[str]:
     lines = []
     base = _normalize(baseline)
@@ -142,6 +160,8 @@ def main(argv=None) -> None:
     print(f"perf trajectory: {argv[0]} -> {argv[1]} "
           f"(backend {baseline.get('backend')} -> {fresh.get('backend')})")
     for line in compare(baseline, fresh):
+        print(line)
+    for line in _phase_lines(baseline, fresh):
         print(line)
     fails = gate_failures(baseline, fresh)
     if fails:

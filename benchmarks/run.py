@@ -15,6 +15,9 @@ after 1% churn vs a cold re-solve — see benchmarks/delta_smoke.py).
 ``--smoke --serve`` additionally pushes a mixed-size stream through the
 serving engine and records throughput + latency-percentile rows into the
 same report (see benchmarks/serve_smoke.py).
+``--profile`` (alone or with ``--smoke``) runs the per-phase roofline
+attribution of one solver round on both data paths and writes
+``BENCH_profile.json`` (report-only; see benchmarks/profile_smoke.py).
 """
 from __future__ import annotations
 
@@ -28,17 +31,28 @@ def main(argv=None) -> None:
     argv = list(argv if argv is not None else sys.argv[1:])
     csv = Csv()
     csv.emit_header()
-    if "--smoke" in argv:
+    if "--smoke" in argv or "--profile" in argv:
+        smoke = "--smoke" in argv
         serve = "--serve" in argv
-        extra = [a for a in argv if a not in ("--smoke", "--serve")]
+        profile = "--profile" in argv
+        extra = [a for a in argv
+                 if a not in ("--smoke", "--serve", "--profile")]
         if extra:
-            raise SystemExit(f"--smoke runs alone; unexpected args: {extra}")
-        from benchmarks import delta_smoke, solver_smoke
-        report = solver_smoke.run_smoke(csv=csv)
-        report = delta_smoke.run_delta(csv=csv, report=report)
-        if serve:
-            from benchmarks import serve_smoke
-            serve_smoke.run_serve(csv=csv, report=report)
+            raise SystemExit(f"--smoke/--profile run alone; "
+                             f"unexpected args: {extra}")
+        if serve and not smoke:
+            raise SystemExit("--serve composes with --smoke "
+                             "(python -m benchmarks.run --smoke --serve)")
+        if smoke:
+            from benchmarks import delta_smoke, solver_smoke
+            report = solver_smoke.run_smoke(csv=csv)
+            report = delta_smoke.run_delta(csv=csv, report=report)
+            if serve:
+                from benchmarks import serve_smoke
+                serve_smoke.run_serve(csv=csv, report=report)
+        if profile:
+            from benchmarks import profile_smoke
+            profile_smoke.run_profile(csv=csv)
         return
     if "--serve" in argv:
         raise SystemExit("--serve composes with --smoke "

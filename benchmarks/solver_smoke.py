@@ -24,6 +24,7 @@ import jax
 from repro import api
 from repro.core.graph import grid_instance, random_instance
 from repro.core.solver import solve_device
+from repro.roofline.solver import profile_solve_round
 
 from benchmarks.common import timed
 
@@ -40,6 +41,12 @@ CHUNKED_CFG = dataclasses.replace(SMOKE_CFG, graph_impl="sparse",
 XL_HW = 192
 XL_CFG = api.SolverConfig(max_neg=256, mp_iters=3, max_rounds=8,
                           graph_impl="sparse", separation_chunk=64)
+
+
+def smoke_instance():
+    """The seeded smoke instance every smoke/profile bench runs on."""
+    return random_instance(n=100, p=0.1, seed=0, pad_edges=1024,
+                           pad_nodes=128)
 
 
 def _finite(x):
@@ -65,8 +72,7 @@ def _peak_memory_bytes(compiled):
 
 
 def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
-    inst = random_instance(n=100, p=0.1, seed=0, pad_edges=1024,
-                           pad_nodes=128)
+    inst = smoke_instance()
     report = {
         "bench": "solver_smoke",
         "instance": {"n": 100, "p": 0.1, "seed": 0,
@@ -131,6 +137,20 @@ def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
         if csv is not None:
             csv.add("smoke", f"pd-xl-grid{XL_HW}/sparse", "wall_s",
                     round(t, 2))
+
+    # per-phase wall breakdown of one round (report-only in compare.py —
+    # localises a wall regression to separation/MP/contraction; the full
+    # flops/bytes attribution lives in BENCH_profile.json via --profile)
+    report["phases"] = {}
+    for impl in GRAPH_IMPLS:
+        cfg = dataclasses.replace(SMOKE_CFG, graph_impl=impl)
+        prof = profile_solve_round(inst, cfg)
+        report["phases"][impl] = {
+            ph: round(rec["wall_s"], 4)
+            for ph, rec in prof["phases"].items()}
+        if csv is not None:
+            for ph, w in report["phases"][impl].items():
+                csv.add("smoke", f"phase-{ph}/{impl}", "wall_s", w)
 
     batch = api.stack_instances([
         random_instance(n=100, p=0.1, seed=s, pad_edges=1024, pad_nodes=128)

@@ -42,8 +42,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.graph import (
-    CsrGraph, MulticutInstance, csr_filter, csr_from_instance,
-    csr_lookup_edge, csr_row_window, resolve_graph_impl,
+    CsrGraph, DEFAULT_SPARSE_THRESHOLD, MulticutInstance, csr_filter,
+    csr_from_instance, csr_lookup_edge, csr_row_window, resolve_graph_impl,
+    splice_csr,
 )
 from repro.kernels.cycle_intersect.ref import intersect_rows_ref
 
@@ -120,6 +121,11 @@ class Triangles(NamedTuple):
 class CycleSeparationResult(NamedTuple):
     instance: MulticutInstance  # possibly with new zero-cost chord edges
     triangles: Triangles
+    # all-edges CSR of ``instance`` (chords spliced in), maintained only
+    # when the caller asks (``separate(..., update_csr=True)``) on the
+    # sparse path — lets D-mode carry its CSR across rounds instead of
+    # re-running build_csr's 2E-lexsort every round
+    csr: CsrGraph | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +164,8 @@ def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
 
 def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                               max_neg: int, max_tri_per_edge: int,
-                              row_cap: int = 128, intersect=None,
+                              row_cap: int = 128, row_cap_short: int = 0,
+                              intersect=None,
                               chunk: int = 0, shards: int = 1,
                               node_mask=None) -> Triangles:
     """3-cycles, CSR path: the common-neighbour test is a sorted-row
@@ -168,41 +175,59 @@ def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
     neighbours) whenever ``row_cap`` covers the rows. The per-edge search
     streams through :func:`_map_repulsive_batches` (``chunk``/``shards``);
     each edge's triangles depend on its own rows only, so the output is
-    invariant to both settings."""
+    invariant to both settings. ``row_cap_short`` > 0 splits edges into
+    degree buckets: edges whose endpoint rows fit in the short window take
+    the narrow pass, the rest a chunk-gated pass at full ``row_cap`` —
+    bit-identical to the single-cap path (see the bucketing note above
+    :func:`_combine_buckets`)."""
     if intersect is None:
         intersect = intersect_rows_ref
     N = inst.num_nodes
     K = min(max_tri_per_edge, N)
     W = max(K, min(row_cap, N))
+    Ws = max(K, min(row_cap_short, N)) if row_cap_short > 0 else W
     neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
                                              node_mask=node_mask)
     i = inst.u[neg_idx]
     j = inst.v[neg_idx]
 
-    def batch(csr_pos, i_, j_, e_, ok_):
-        window = jax.vmap(lambda n: csr_row_window(csr_pos, n, W))
-        ci, ei, oki = window(i_)            # (B, W) each
-        cj, ej, _ = window(j_)
-        pos = intersect(ci, cj)             # (B, W) match position or -1
-        pc = jnp.clip(pos, 0, W - 1)
-        found = (pos >= 0) & oki            # mask ci's sentinel padding
+    def make_batch(Wb):
+        def batch(csr_pos, i_, j_, e_, ok_):
+            window = jax.vmap(lambda n: csr_row_window(csr_pos, n, Wb))
+            ci, ei, oki = window(i_)            # (B, Wb) each
+            cj, ej, _ = window(j_)
+            pos = intersect(ci, cj)             # (B, Wb) match position or -1
+            pc = jnp.clip(pos, 0, Wb - 1)
+            found = (pos >= 0) & oki            # mask ci's sentinel padding
 
-        def per_edge(found_, ei_, ej_, pc_, e__, ok__):
-            vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
-            good = (vals > 0) & ok__
-            e_ik = ei_[idxs]
-            e_jk = ej_[pc_[idxs]]
-            tri = jnp.stack([jnp.full((K,), e__, dtype=jnp.int32), e_ik,
-                             e_jk], axis=-1)
-            good = good & (e_ik >= 0) & (e_jk >= 0)
-            return tri, good
+            def per_edge(found_, ei_, ej_, pc_, e__, ok__):
+                vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
+                good = (vals > 0) & ok__
+                e_ik = ei_[idxs]
+                e_jk = ej_[pc_[idxs]]
+                tri = jnp.stack([jnp.full((K,), e__, dtype=jnp.int32), e_ik,
+                                 e_jk], axis=-1)
+                good = good & (e_ik >= 0) & (e_jk >= 0)
+                return tri, good
 
-        tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, e_, ok_)
-        return (tris.reshape(-1, 3).astype(jnp.int32), goods.reshape(-1))
+            tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, e_, ok_)
+            return (tris.reshape(-1, 3).astype(jnp.int32), goods.reshape(-1))
+        return batch
 
-    tris, goods = _map_repulsive_batches(batch, csr_pos,
-                                         (i, j, neg_idx, neg_ok),
-                                         chunk, shards)
+    if Ws >= W:
+        tris, goods = _map_repulsive_batches(make_batch(W), csr_pos,
+                                             (i, j, neg_idx, neg_ok),
+                                             chunk, shards)
+    else:
+        deg = csr_pos.degrees
+        is_long = (deg[i] > Ws) | (deg[j] > Ws)
+        out_s = _map_repulsive_batches(
+            make_batch(Ws), csr_pos, (i, j, neg_idx, neg_ok & ~is_long),
+            chunk, shards)
+        out_l = _run_long_bucket(
+            make_batch(W), csr_pos, (i, j, neg_idx, neg_ok & is_long),
+            is_long, chunk, shards, Ws, W)
+        tris, goods = _combine_buckets(is_long, out_s, out_l)
     return Triangles(edges=jnp.where(goods[:, None], tris, 0), valid=goods)
 
 
@@ -214,6 +239,14 @@ class ChordAlloc(NamedTuple):
     instance: MulticutInstance  # with chords written into free slots
     eid: jax.Array       # (M,) chord edge id per request or -1
     ok: jax.Array        # (M,) request satisfied
+    # the raw allocation rows, in splice_csr's argument shape — lets a
+    # caller holding a live CSR splice the fresh chords in instead of
+    # rebuilding from the instance (add_eid rows with add_ok False are
+    # placeholders)
+    add_u: jax.Array     # (M,) lo endpoint per request
+    add_v: jax.Array     # (M,) hi endpoint per request
+    add_eid: jax.Array   # (M,) allocated slot (edge id) per fresh chord
+    add_ok: jax.Array    # (M,) request allocated a fresh slot
 
 
 def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
@@ -286,7 +319,8 @@ def _alloc_chords(inst: MulticutInstance, exists_eid, ch_u, ch_v,
     own = jnp.where(need & ok_alloc[first_idx], slot[first_idx], -1)
     chord_eid = jnp.where(exists, exists_eid, own).astype(jnp.int32)
     chord_ok = ch_ok & (chord_eid >= 0) & (lo != hi)
-    return ChordAlloc(instance=inst2, eid=chord_eid, ok=chord_ok)
+    return ChordAlloc(instance=inst2, eid=chord_eid, ok=chord_ok,
+                      add_u=lo, add_v=hi, add_eid=slot, add_ok=ok_alloc)
 
 
 # ---------------------------------------------------------------------------
@@ -316,13 +350,17 @@ def _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup,
 
 
 def _alloc_and_assemble(inst: MulticutInstance, lookup, v0, v4, b1, b2, b3,
-                        is4, found) -> CycleSeparationResult:
+                        is4, found,
+                        splice_into: CsrGraph | None = None,
+                        ) -> CycleSeparationResult:
     """Allocate/assemble phase shared by both data paths: resolve the
     winning pairs' chords in canonical (repulsive-edge-index, chord-kind)
     order — chord 1 = (v1, v4) and chord 2 = (v2, v4) interleaved in ONE
     batch — then triangulate. The canonical order makes chord slot
     assignment a function of the candidates alone, independent of how the
-    candidate phase was chunked or sharded."""
+    candidate phase was chunked or sharded. ``splice_into`` (the caller's
+    all-edges CSR of ``inst``) additionally splices the fresh chords into
+    that CSR — bit-identical to rebuilding it from the chorded instance."""
     lo1, hi1 = jnp.minimum(b1, v4), jnp.maximum(b1, v4)
     lo2, hi2 = jnp.minimum(b2, v4), jnp.maximum(b2, v4)
     ex = jnp.stack([lookup(lo1, hi1), lookup(lo2, hi2)], axis=1).reshape(-1)
@@ -334,7 +372,13 @@ def _alloc_and_assemble(inst: MulticutInstance, lookup, v0, v4, b1, b2, b3,
     ok = a.ok.reshape(-1, 2)
     tri = _assemble_cycles45(v0, v4, b1, b2, b3, is4, found, lookup,
                              eid[:, 0], ok[:, 0], eid[:, 1], ok[:, 1])
-    return CycleSeparationResult(instance=a.instance, triangles=tri)
+    csr2 = None
+    if splice_into is not None:
+        no_drop = jnp.zeros((inst.num_edges,), bool)
+        csr2 = splice_csr(splice_into, no_drop, a.add_u, a.add_v,
+                          a.add_eid, a.add_ok)
+    return CycleSeparationResult(instance=a.instance, triangles=tri,
+                                 csr=csr2)
 
 
 def resolve_separation_shards(shards: int) -> int:
@@ -345,11 +389,18 @@ def resolve_separation_shards(shards: int) -> int:
     return min(int(shards), jax.device_count())
 
 
+def _pad_batch_axis(a, pad: int):
+    """Zero-pad an edge arg along its leading (batch) axis only — edge args
+    may be (M,) scalars-per-edge or (M, k) precomputed fans."""
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
 def _map_repulsive_batches(fn, consts, edge_args, chunk: int, shards: int):
     """Stream a per-repulsive-edge candidate function over the batch axis.
 
-    ``edge_args`` are (M,) arrays (one of them the validity mask — padding
-    rows are zero/False and must be masked by it); ``consts`` is a pytree
+    ``edge_args`` are arrays with leading axis M (one of them the validity
+    mask — padding rows are zero/False and must be masked by it); ``consts``
+    is a pytree
     of read-only arrays (CSR views) every batch needs, replicated under
     sharding. ``fn(consts, *batch)`` maps a (C,)-batch to arrays whose
     leading axis is a multiple of C and must treat edges independently —
@@ -378,7 +429,7 @@ def _map_repulsive_batches(fn, consts, edge_args, chunk: int, shards: int):
         # smoke dual round)
         return fn(consts, *edge_args)
     Mp = -(-M // (S * C)) * (S * C)
-    padded = tuple(jnp.pad(a, (0, Mp - M)) for a in edge_args)
+    padded = tuple(_pad_batch_axis(a, Mp - M) for a in edge_args)
 
     def scan_chunks(consts, *local):
         n_chunks = local[0].shape[0] // C
@@ -400,6 +451,87 @@ def _map_repulsive_batches(fn, consts, edge_args, chunk: int, shards: int):
             in_specs=(P(),) + (P("sep"),) * len(padded),
             out_specs=P("sep"), check_vma=False)(consts, *padded)
     return jax.tree.map(lambda y: y[: (y.shape[0] // Mp) * M], out)
+
+
+# ---------------------------------------------------------------------------
+# Two-level degree bucketing
+# ---------------------------------------------------------------------------
+#
+# One global padded ``row_cap`` sizes every window to the *maximum*
+# attractive degree, so the O(chunk·nbr_k²·row_cap) candidate working set —
+# and most of its compare work — is spent on padding whenever the degree
+# distribution is skewed (the per-row work-skew the paper's warp-per-row
+# CUDA kernels absorb dynamically; here the shapes are static, so we bucket
+# instead). Edges whose relevant rows all fit in a narrow ``short`` window
+# stream through windows of that width; the rest take a second pass at the
+# full ``row_cap`` width, streamed in proportionally smaller chunks (same
+# elements-per-chunk budget) and skipped entirely (``lax.cond``) for chunks
+# holding no long edge. For short rows the narrow window is a prefix of the
+# wide one with identical match positions, and long edges re-run the exact
+# single-cap computation — so the combined result is bit-identical to the
+# unbucketed path whenever ``row_cap`` covers its rows
+# (tests/test_graph_impl.py, tests/test_chunked_separation.py).
+
+def _combine_buckets(is_long, out_s, out_l):
+    """Per-edge select between the short- and long-bucket outputs. Output
+    leading axes are k outputs per edge, edge-major (edge i owns lanes
+    [i*k, (i+1)*k))."""
+    M = is_long.shape[0]
+
+    def sel(s, l):
+        k = s.shape[0] // M
+        m = jnp.repeat(is_long, k) if k > 1 else is_long
+        return jnp.where(m.reshape((s.shape[0],) + (1,) * (s.ndim - 1)),
+                         l, s)
+
+    return jax.tree.map(sel, out_s, out_l)
+
+
+def _map_long_chunks(fn, consts, edge_args, is_long, chunk: int):
+    """Single-device long-bucket streamer: scan fixed-size chunks, running
+    ``fn`` only on chunks that contain at least one long edge (lax.cond;
+    skipped chunks emit zeros — discarded by :func:`_combine_buckets`, which
+    never reads short lanes from the long pass). Under vmap the cond lowers
+    to a select (both branches run) — correct, just without the skip."""
+    M = edge_args[0].shape[0]
+    C = max(1, min(chunk, M))
+    Mp = -(-M // C) * C
+    padded = tuple(_pad_batch_axis(a, Mp - M) for a in edge_args)
+    lng = _pad_batch_axis(is_long, Mp - M)
+    n_chunks = Mp // C
+    xs = tuple(a.reshape((n_chunks, C) + a.shape[1:]) for a in padded)
+    shapes = jax.eval_shape(lambda *a: fn(consts, *a),
+                            *(x[0] for x in xs))
+
+    def step(_, x):
+        *args, l = x
+        out = jax.lax.cond(
+            jnp.any(l),
+            lambda: fn(consts, *args),
+            lambda: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 shapes))
+        return None, out
+
+    _, ys = jax.lax.scan(step, None, xs + (lng.reshape(n_chunks, C),))
+    flat = jax.tree.map(
+        lambda y: y.reshape((y.shape[0] * y.shape[1],) + y.shape[2:]), ys)
+    return jax.tree.map(lambda y: y[: (y.shape[0] // Mp) * M], flat)
+
+
+def _run_long_bucket(fn, consts, edge_args, is_long, chunk: int, shards: int,
+                     w_short: int, w_long: int):
+    """Long-bucket pass: every edge lane evaluated at the wide window (its
+    validity mask already restricted to long edges), chunk size scaled by
+    w_short/w_long so peak memory matches the short pass's per-chunk
+    element budget. Sharded runs reuse the ungated streamer — the gate is a
+    data-dependent skip that would break the static shard split; bit-
+    identity holds either way because only long lanes are ever read."""
+    M = edge_args[0].shape[0]
+    base = chunk if chunk > 0 else M
+    C = max(1, (base * w_short) // w_long)
+    if resolve_separation_shards(shards) > 1:
+        return _map_repulsive_batches(fn, consts, edge_args, C, shards)
+    return _map_long_chunks(fn, consts, edge_args, is_long, C)
 
 
 def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
@@ -466,100 +598,136 @@ def separate_cycles45(inst: MulticutInstance, adj: DenseAdj, max_neg: int,
 
 def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                              csr_all: CsrGraph, max_neg: int, nbr_k: int = 4,
-                             row_cap: int = 128, intersect=None,
+                             row_cap: int = 128, row_cap_short: int = 0,
+                             intersect=None,
                              chunk: int = 0, shards: int = 1,
-                             node_mask=None) -> CycleSeparationResult:
+                             node_mask=None,
+                             splice_into: CsrGraph | None = None,
+                             ) -> CycleSeparationResult:
     """4/5-cycles, CSR path. Mirrors the dense scan pair for pair:
 
     * neighbour fans N⁺(v0)/N⁺(v4) = the first ``nbr_k`` entries of each
       sorted attractive row (== dense top_k over the 0/1 row);
-    * the 4-cycle edge test v1v3 ∈ E⁺ = one CSR bisect;
+    * the 4-cycle edge test v1v3 ∈ E⁺ = membership of v3 in v1's window —
+      one more row intersection over windows already resident, replacing
+      the global O(log E) bisect per pair (identical under covering caps;
+      at non-covering caps it is the more conservative window-local test);
     * 2-path existence (the A⁺A⁺ row-dot) = sorted-row intersection of the
       fan nodes' windows — per-chunk·nbr_k² window pairs through
       ``intersect`` (ref searchsorted or the cycle_intersect kernel);
     * v2 = first surviving element of the winning pair's intersection.
 
     The candidate search streams the repulsive batch through
-    :func:`_map_repulsive_batches` (``chunk``/``shards``); chord allocation
-    + triangulation run on the gathered winners in canonical order.
+    :func:`_map_repulsive_batches` (``chunk``/``shards``), degree-bucketed
+    into a short/long two-pass when ``row_cap_short`` > 0 (the fans are
+    computed once, up front, and decide each edge's bucket); chord
+    allocation + triangulation run on the gathered winners in canonical
+    order. ``splice_into`` maintains the caller's all-edges CSR through
+    chord allocation (see :func:`_alloc_and_assemble`).
     """
     if intersect is None:
         intersect = intersect_rows_ref
     N = inst.num_nodes
     nbr_k = min(nbr_k, N)
     W = max(1, min(row_cap, N))
+    Ws = max(1, min(row_cap_short, N)) if row_cap_short > 0 else W
     neg_idx, neg_ok = select_repulsive_edges(inst, max_neg,
                                              node_mask=node_mask)
     v0 = inst.u[neg_idx]
     v4 = inst.v[neg_idx]
+    fan = jax.vmap(lambda n: csr_row_window(csr_pos, n, nbr_k))
+    n0, _, ok0 = fan(v0)                            # (M, nbr_k)
+    n4, _, ok4 = fan(v4)
 
-    def candidates(csr_pos, v0_, v4_, ok_):
-        B = v0_.shape[0]
-        fan = jax.vmap(lambda n: csr_row_window(csr_pos, n, nbr_k))
-        n0, _, ok0 = fan(v0_)                       # (B, nbr_k)
-        n4, _, ok4 = fan(v4_)
+    def make_candidates(Wb):
+        def candidates(csr_pos, v0_, v4_, n0_, n4_, ok0_, ok4_, ok_):
+            B = v0_.shape[0]
+            # windows of every fan node's attractive row: (B, nbr_k, Wb)
+            window = jax.vmap(jax.vmap(
+                lambda n: csr_row_window(csr_pos, n, Wb)))
+            r1c, _, r1ok = window(n0_)
+            r3c, _, _ = window(n4_)
 
-        # windows of every fan node's attractive row: (B, nbr_k, W)
-        window = jax.vmap(jax.vmap(lambda n: csr_row_window(csr_pos, n, W)))
-        r1c, _, r1ok = window(n0)
-        r3c, _, _ = window(n4)
+            # 2-path existence for every (v1, v3) pair, looped over the j
+            # fan so only (B·nbr_k, Wb) windows are live at once; only the
+            # boolean (B, nbr_k, nbr_k) result is kept
+            ci_flat = r1c.reshape(B * nbr_k, Wb)
+            oki_flat = r1ok.reshape(B * nbr_k, Wb)
+            has2 = []
+            for j in range(nbr_k):
+                cj_j = jnp.broadcast_to(r3c[:, None, j, :], (B, nbr_k, Wb)) \
+                    .reshape(B * nbr_k, Wb)
+                pos_j = intersect(ci_flat, cj_j)
+                has2.append(jnp.any((pos_j >= 0) & oki_flat, axis=-1)
+                            .reshape(B, nbr_k))
+            has2path = jnp.stack(has2, axis=-1)         # (B, nbr_k, nbr_k)
 
-        # 2-path existence for every (v1, v3) pair, looped over the j fan so
-        # only (B·nbr_k, W) windows are live at once; only the boolean
-        # (B, nbr_k, nbr_k) result is kept
-        ci_flat = r1c.reshape(B * nbr_k, W)
-        oki_flat = r1ok.reshape(B * nbr_k, W)
-        has2 = []
-        for j in range(nbr_k):
-            cj_j = jnp.broadcast_to(r3c[:, None, j, :], (B, nbr_k, W)) \
-                .reshape(B * nbr_k, W)
-            pos_j = intersect(ci_flat, cj_j)
-            has2.append(jnp.any((pos_j >= 0) & oki_flat, axis=-1)
-                        .reshape(B, nbr_k))
-        has2path = jnp.stack(has2, axis=-1)             # (B, nbr_k, nbr_k)
+            v1 = jnp.broadcast_to(n0_[:, :, None], (B, nbr_k, nbr_k))
+            v3 = jnp.broadcast_to(n4_[:, None, :], (B, nbr_k, nbr_k))
+            # v1v3 ∈ E⁺ ⇔ v3 appears in v1's window: intersect the v4-fan
+            # (each row i of edge b asks for all of n4[b]) against r1c —
+            # invalid fan slots carry the N sentinel on both sides and are
+            # masked by pair_ok below
+            fan3 = jnp.broadcast_to(n4_[:, None, :], (B, nbr_k, nbr_k)) \
+                .reshape(B * nbr_k, nbr_k)
+            e13pos = intersect(fan3, ci_flat).reshape(B, nbr_k, nbr_k)
 
-        v1 = jnp.broadcast_to(n0[:, :, None], (B, nbr_k, nbr_k))
-        v3 = jnp.broadcast_to(n4[:, None, :], (B, nbr_k, nbr_k))
-        lookup_pos = jax.vmap(lambda a, b: csr_lookup_edge(csr_pos, a, b))
-        e13 = lookup_pos(v1.reshape(-1), v3.reshape(-1)).reshape(v1.shape)
+            pair_ok = ok0_[:, :, None] & ok4_[:, None, :] & ok_[:, None, None]
+            distinct = (v1 != v3) & (v1 != v4_[:, None, None]) & \
+                (v3 != v0_[:, None, None])
+            is4 = pair_ok & distinct & (e13pos >= 0)
+            is5 = pair_ok & distinct & ~is4 & has2path
+            w0 = ok0_.astype(jnp.float32)
+            w4 = ok4_.astype(jnp.float32)
+            score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
+                + jnp.minimum(w0[:, :, None], w4[:, None, :]) * 1e-3
+            flat = jnp.argmax(score.reshape(B, -1), axis=1)
+            bi, bj = flat // nbr_k, flat % nbr_k
+            m = jnp.arange(B)
+            found = score.reshape(B, -1)[m, flat] > -jnp.inf
+            b1 = n0_[m, bi]
+            b3 = n4_[m, bj]
+            b_is4 = is4[m, bi, bj]
+            # v2 = smallest common attractive neighbour of (b1, b3),
+            # excluding the repulsive endpoints — first surviving element
+            # of the winning pair's (ascending) intersection, == dense
+            # argmax over the 0/1 common row. Re-intersect just the winning
+            # pair per repulsive edge ((B, Wb), cheap) instead of keeping
+            # the full pair batch alive.
+            win_cols = r1c[m, bi]                               # (B, Wb)
+            win_pos = intersect(win_cols, r3c[m, bj])
+            win_common = (win_pos >= 0) & r1ok[m, bi] & \
+                (win_cols != v0_[:, None]) & (win_cols != v4_[:, None])
+            has_v2 = jnp.any(win_common, axis=1)
+            first = jnp.argmax(win_common, axis=1)
+            b2 = jnp.where(has_v2, win_cols[m, first], 0).astype(jnp.int32)
+            found = found & (b_is4 | has_v2)
+            return (b1.astype(jnp.int32), b2, b3.astype(jnp.int32), b_is4,
+                    found)
+        return candidates
 
-        pair_ok = ok0[:, :, None] & ok4[:, None, :] & ok_[:, None, None]
-        distinct = (v1 != v3) & (v1 != v4_[:, None, None]) & \
-            (v3 != v0_[:, None, None])
-        is4 = pair_ok & distinct & (e13 >= 0)
-        is5 = pair_ok & distinct & ~is4 & has2path
-        w0 = ok0.astype(jnp.float32)
-        w4 = ok4.astype(jnp.float32)
-        score = jnp.where(is4, 2.0, jnp.where(is5, 1.0, -jnp.inf)) \
-            + jnp.minimum(w0[:, :, None], w4[:, None, :]) * 1e-3
-        flat = jnp.argmax(score.reshape(B, -1), axis=1)
-        bi, bj = flat // nbr_k, flat % nbr_k
-        m = jnp.arange(B)
-        found = score.reshape(B, -1)[m, flat] > -jnp.inf
-        b1 = n0[m, bi]
-        b3 = n4[m, bj]
-        b_is4 = is4[m, bi, bj]
-        # v2 = smallest common attractive neighbour of (b1, b3), excluding
-        # the repulsive endpoints — first surviving element of the winning
-        # pair's (ascending) intersection, == dense argmax over the 0/1
-        # common row. Re-intersect just the winning pair per repulsive edge
-        # ((B, W), cheap) instead of keeping the full pair batch alive.
-        win_cols = r1c[m, bi]                                    # (B, W)
-        win_pos = intersect(win_cols, r3c[m, bj])
-        win_common = (win_pos >= 0) & r1ok[m, bi] & \
-            (win_cols != v0_[:, None]) & (win_cols != v4_[:, None])
-        has_v2 = jnp.any(win_common, axis=1)
-        first = jnp.argmax(win_common, axis=1)
-        b2 = jnp.where(has_v2, win_cols[m, first], 0).astype(jnp.int32)
-        found = found & (b_is4 | has_v2)
-        return (b1.astype(jnp.int32), b2, b3.astype(jnp.int32), b_is4,
-                found)
-
-    b1, b2, b3, is4, found = _map_repulsive_batches(
-        candidates, csr_pos, (v0, v4, neg_ok), chunk, shards)
+    if Ws >= W:
+        b1, b2, b3, is4, found = _map_repulsive_batches(
+            make_candidates(W), csr_pos,
+            (v0, v4, n0, n4, ok0, ok4, neg_ok), chunk, shards)
+    else:
+        # an edge is long iff ANY window it reads (its fan nodes' rows)
+        # overflows the short cap
+        deg = csr_pos.degrees
+        dl0 = jnp.where(ok0, deg[jnp.clip(n0, 0, N - 1)], 0)
+        dl4 = jnp.where(ok4, deg[jnp.clip(n4, 0, N - 1)], 0)
+        is_long = (jnp.max(dl0, axis=1) > Ws) | (jnp.max(dl4, axis=1) > Ws)
+        out_s = _map_repulsive_batches(
+            make_candidates(Ws), csr_pos,
+            (v0, v4, n0, n4, ok0, ok4, neg_ok & ~is_long), chunk, shards)
+        out_l = _run_long_bucket(
+            make_candidates(W), csr_pos,
+            (v0, v4, n0, n4, ok0, ok4, neg_ok & is_long),
+            is_long, chunk, shards, Ws, W)
+        b1, b2, b3, is4, found = _combine_buckets(is_long, out_s, out_l)
     lookup_all = jax.vmap(lambda a, b: csr_lookup_edge(csr_all, a, b))
     return _alloc_and_assemble(inst, lookup_all, v0, v4, b1, b2, b3, is4,
-                               found)
+                               found, splice_into=splice_into)
 
 
 # ---------------------------------------------------------------------------
@@ -569,10 +737,12 @@ def separate_cycles45_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
 def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
              with_cycles45: bool = True, nbr_k: int = 4,
              graph_impl: str = "dense", sparse_row_cap: int = 128,
-             sparse_threshold: int = 2048, intersect=None,
+             sparse_row_cap_short: int = 0,
+             sparse_threshold: int = DEFAULT_SPARSE_THRESHOLD, intersect=None,
              csr: CsrGraph | None = None, separation_chunk: int = 0,
              separation_shards: int = 1,
-             sep_node_mask=None) -> CycleSeparationResult:
+             sep_node_mask=None,
+             update_csr: bool = False) -> CycleSeparationResult:
     """Full separation round: 3-cycles always; 4/5-cycles optionally
     (PD uses 5 on the original graph, 3 on contracted graphs; PD+ always 5).
 
@@ -593,6 +763,14 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
     selection to edges touching the mask — the frontier restriction of
     warm delta re-solves. Applies identically on both data paths; ``None``
     compiles to the unrestricted jaxpr.
+
+    ``sparse_row_cap_short`` > 0 enables the two-level degree buckets on
+    the sparse candidate search (see :func:`_combine_buckets`);
+    ``update_csr`` asks the sparse path to also return its all-edges CSR
+    with the round's fresh chords spliced in (``result.csr``) so a dual
+    loop can carry it — requested explicitly because eager callers would
+    otherwise pay the splice for an output they drop (jit DCE removes it
+    for free, eager does not).
     """
     impl = resolve_graph_impl(graph_impl, inst.num_nodes, sparse_threshold)
     if impl == "dense":
@@ -609,21 +787,28 @@ def separate(inst: MulticutInstance, max_neg: int, max_tri_per_edge: int,
         tri3 = separate_triangles_sparse(inst, csr_pos, max_neg,
                                          max_tri_per_edge,
                                          row_cap=sparse_row_cap,
+                                         row_cap_short=sparse_row_cap_short,
                                          intersect=intersect,
                                          chunk=separation_chunk,
                                          shards=separation_shards,
                                          node_mask=sep_node_mask)
         if not with_cycles45:
-            return CycleSeparationResult(instance=inst, triangles=tri3)
+            return CycleSeparationResult(
+                instance=inst, triangles=tri3,
+                csr=csr_all if update_csr else None)
         res45 = separate_cycles45_sparse(inst, csr_pos, csr_all, max_neg,
                                          nbr_k=nbr_k,
                                          row_cap=sparse_row_cap,
+                                         row_cap_short=sparse_row_cap_short,
                                          intersect=intersect,
                                          chunk=separation_chunk,
                                          shards=separation_shards,
-                                         node_mask=sep_node_mask)
+                                         node_mask=sep_node_mask,
+                                         splice_into=(csr_all if update_csr
+                                                      else None))
     edges = jnp.concatenate([tri3.edges, res45.triangles.edges], axis=0)
     valid = jnp.concatenate([tri3.valid, res45.triangles.valid], axis=0)
     return CycleSeparationResult(
         instance=res45.instance,
-        triangles=Triangles(edges=edges, valid=valid))
+        triangles=Triangles(edges=edges, valid=valid),
+        csr=res45.csr)

@@ -23,6 +23,19 @@ import numpy as np
 
 GRAPH_IMPLS = ("dense", "sparse", "auto")
 
+# "auto" flips the separation data path to CSR above this padded node count.
+# Derived, not guessed: the dense path's per-round cost is dominated by the
+# (N, N) adjacency build + the per-repulsive-edge (nbr_k, N)·(N, nbr_k)
+# row-dot (linear in N), while the bucketed-CSR path's cost is independent
+# of N (windows scale with degree caps). ``benchmarks/calibrate.py`` sweeps
+# the crossover on a fixed-degree family: since the degree-bucketed
+# windows landed, sparse reaches parity at N = 128 (1.04x dense), stays
+# within ~10% at 256, and wins outright from 512 (0.83x) while needing
+# less peak memory, so "auto" flips as early as the measurement supports.
+# Re-run the sweep and update this constant when separation economics
+# change.
+DEFAULT_SPARSE_THRESHOLD = 256
+
 
 class MulticutInstance(NamedTuple):
     u: jax.Array            # (E,) int32, u < v for valid edges
@@ -350,7 +363,7 @@ def splice_csr(csr: CsrGraph, drop_edge: jax.Array, add_u: jax.Array,
 
 
 def resolve_graph_impl(graph_impl: str, num_nodes: int,
-                       threshold: int = 2048) -> str:
+                       threshold: int = DEFAULT_SPARSE_THRESHOLD) -> str:
     """Static dense/sparse dispatch: "auto" flips to the CSR data path once
     the padded node count crosses ``threshold`` (where the dense (N, N)
     matrices start to dominate HBM)."""

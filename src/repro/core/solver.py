@@ -48,8 +48,8 @@ from repro.core.contraction import (
 )
 from repro.core.cycles import separate
 from repro.core.graph import (
-    GRAPH_IMPLS, CsrGraph, MulticutInstance, csr_from_instance,
-    resolve_graph_impl,
+    DEFAULT_SPARSE_THRESHOLD, GRAPH_IMPLS, CsrGraph, MulticutInstance,
+    csr_from_instance, resolve_graph_impl,
 )
 from repro.core.message_passing import init_mp, run_message_passing
 
@@ -79,7 +79,18 @@ class SolverConfig:
     graph_impl: str = "auto"        # separation data path: dense|sparse|auto
     sparse_row_cap: int = 128       # CSR row window (≥ max attractive degree
                                     # for exact dense parity)
-    sparse_threshold: int = 2048    # auto: sparse above this padded N
+    sparse_row_cap_short: int = 16  # two-level degree buckets: edges whose
+                                    # windows all fit in this narrow cap
+                                    # stream at this width; the rest take a
+                                    # chunk-gated pass at sparse_row_cap
+                                    # (0 disables; bit-identical either
+                                    # way). 16 covers the typical sparse-
+                                    # graph attractive degree (smoke: max
+                                    # 11) so the long pass usually runs 0
+                                    # chunks; see README "Performance"
+    sparse_threshold: int = DEFAULT_SPARSE_THRESHOLD
+                                    # auto: sparse above this padded N
+                                    # (derived — see core/graph.py)
     separation_chunk: int = 0       # sparse: repulsive edges per scan step
                                     # (0 = whole batch at once); bounds the
                                     # candidate-search peak memory at
@@ -178,23 +189,27 @@ class SolverState(NamedTuple):
 
 def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
                      with45: bool, sweep=None, intersect=None, csr=None,
-                     node_mask=None):
-    """One separation + message-passing round. Returns (inst', c_rep, lb)."""
+                     node_mask=None, update_csr: bool = False):
+    """One separation + message-passing round. Returns
+    (inst', c_rep, lb, csr') — ``csr'`` is the chord-spliced all-edges CSR
+    when ``update_csr`` (sparse path), else None."""
     sep = separate(inst, max_neg=cfg.max_neg,
                    max_tri_per_edge=cfg.max_tri_per_edge,
                    with_cycles45=with45, nbr_k=cfg.nbr_k,
                    graph_impl=cfg.graph_impl,
                    sparse_row_cap=cfg.sparse_row_cap,
+                   sparse_row_cap_short=cfg.sparse_row_cap_short,
                    sparse_threshold=cfg.sparse_threshold,
                    intersect=intersect, csr=csr,
                    separation_chunk=cfg.separation_chunk,
                    separation_shards=cfg.separation_shards,
-                   sep_node_mask=node_mask)
+                   sep_node_mask=node_mask,
+                   update_csr=update_csr)
     inst2 = sep.instance
     state = init_mp(sep.triangles)
     state, c_rep, lb = run_message_passing(
         inst2.cost, inst2.edge_valid, state, cfg.mp_iters, sweep=sweep)
-    return inst2, c_rep, lb
+    return inst2, c_rep, lb, sep.csr
 
 
 def _primal_round_core(inst: MulticutInstance, cfg: SolverConfig):
@@ -210,8 +225,8 @@ def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
     """Alg. 3 lines 3–8 as one traceable unit: separation → message passing
     → reparametrize → contract. Returns (ContractionResult, lb). Input and
     output instances share shapes, so the outer while_loop carries it."""
-    inst2, c_rep, lb = _dual_round_core(inst, cfg, with45, sweep, intersect,
-                                        node_mask=node_mask)
+    inst2, c_rep, lb, _ = _dual_round_core(inst, cfg, with45, sweep,
+                                           intersect, node_mask=node_mask)
     res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
     return res, lb
 
@@ -221,9 +236,9 @@ def fused_pd_round_state(state: SolverState, cfg: SolverConfig, with45: bool,
     """The state-carrying PD round (sparse data path): separation reads the
     carried CSR (no rebuild), contraction maintains it, and the original→
     cluster mapping composes in place. Returns (SolverState', lb, res)."""
-    inst2, c_rep, lb = _dual_round_core(state.instance, cfg, with45, sweep,
-                                        intersect, csr=state.csr,
-                                        node_mask=node_mask)
+    inst2, c_rep, lb, _ = _dual_round_core(state.instance, cfg, with45,
+                                           sweep, intersect, csr=state.csr,
+                                           node_mask=node_mask)
     inst3 = inst2._replace(cost=c_rep)
     S = choose_contraction_set(inst3, matching_rounds=cfg.matching_rounds,
                                forest_rounds=cfg.forest_rounds,
@@ -392,19 +407,43 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
     run_message_passing returns lb_r = edgeLB_r + triLB_r; we split out the
     edge part each round and keep only the final one. (Validity of
     LB_total ≤ OPT is asserted against brute force in tests/test_solver.py.)
+
+    On the sparse data path the all-edges CSR is built once and carried
+    through the scan — each round's fresh chords are spliced in
+    (``update_csr``), so no round re-runs ``build_csr``'s 2E-lexsort
+    (D-mode used to rebuild per round; the dense path has no CSR).
     """
     R = cfg.dual_rounds
+    sparse = resolve_graph_impl(cfg.graph_impl, inst.num_nodes,
+                                cfg.sparse_threshold) == "sparse"
 
-    def body(carry, _):
-        cur, tri_lb_sum = carry
-        cur2, c_rep, lb = _dual_round_core(cur, cfg, True, sweep, intersect)
+    def lb_parts(cur2, c_rep, lb, tri_lb_sum):
         edge_lb = jnp.sum(jnp.where(cur2.edge_valid,
                                     jnp.minimum(0.0, c_rep), 0.0))
         tri_lb_sum = tri_lb_sum + (lb - edge_lb)
-        return (cur2._replace(cost=c_rep), tri_lb_sum), tri_lb_sum + edge_lb
+        return tri_lb_sum, tri_lb_sum + edge_lb
 
-    (final, _), per_round = jax.lax.scan(body, (inst, jnp.float32(0.0)),
-                                         None, length=R)
+    if sparse:
+        def body(carry, _):
+            cur, csr, tri_lb_sum = carry
+            cur2, c_rep, lb, csr2 = _dual_round_core(
+                cur, cfg, True, sweep, intersect, csr=csr, update_csr=True)
+            tri_lb_sum, total = lb_parts(cur2, c_rep, lb, tri_lb_sum)
+            return (cur2._replace(cost=c_rep), csr2, tri_lb_sum), total
+
+        (final, _, _), per_round = jax.lax.scan(
+            body, (inst, csr_from_instance(inst), jnp.float32(0.0)),
+            None, length=R)
+    else:
+        def body(carry, _):
+            cur, tri_lb_sum = carry
+            cur2, c_rep, lb, _ = _dual_round_core(cur, cfg, True, sweep,
+                                                  intersect)
+            tri_lb_sum, total = lb_parts(cur2, c_rep, lb, tri_lb_sum)
+            return (cur2._replace(cost=c_rep), tri_lb_sum), total
+
+        (final, _), per_round = jax.lax.scan(body, (inst, jnp.float32(0.0)),
+                                             None, length=R)
     N = inst.num_nodes
     n_nodes = jnp.sum(inst.node_valid).astype(jnp.int32)
     res = SolveResult(labels=jnp.arange(N, dtype=jnp.int32),

@@ -3,19 +3,27 @@
 Binary search is a poor fit for the VPU (data-dependent control flow), so
 the kernel trades comparisons for lanes: the grid is chunk-tiled in THREE
 dimensions — (row block, i-tile, j-tile) — and each step matches one
-(block_rows, 128) chunk of ``ci`` against one (block_rows, 128) tile of
+(block_rows, 128) chunk of ``ci`` against one (block_rows, tile_j) tile of
 ``cj`` by broadcast equality, max-accumulating the matched j index into
 the output tile in place (the j axis is innermost, so each output tile is
 revisited across j-tiles and the LAST match wins — the ref.py contract).
 
-Per-step working set is three (block_rows, 128) vregs plus the
-(block_rows, 128, 128) compare intermediate — independent of Wj, so the
-kernel's VMEM footprint no longer grows with the paired row width the way
-the old whole-row ``cj`` blocks did. This is the same tiling the chunked
-separation driver applies one level up: fixed-size tiles streamed over an
-axis whose extent is a config cap, not a problem size.
+Ragged shapes are handled in-kernel, not by host padding: the grid is
+``cdiv``-sized, Pallas masks out-of-range output writes on the tail tiles,
+and filler ``cj`` lanes (reads past the real row width on a tail tile) are
+masked out of the compare before they can alias real data — so padded
+lanes do no compare work that could leak into in-range results, and the
+caller never materialises padded copies of its windows. Filler ``ci``
+lanes need no mask: each output lane depends only on its own ``ci`` lane,
+and out-of-range lanes are exactly the ones whose writes Pallas drops.
 
-Total work is O(R · W · Wj / 128 lanes) — for the W≈128 row caps used by
+Per-step working set is the (block_rows, 128, tile_j) compare intermediate
+— independent of Wj, so VMEM no longer grows with the paired row width the
+way the old whole-row ``cj`` blocks did. This is the same tiling the
+chunked separation driver applies one level up: fixed-size tiles streamed
+over an axis whose extent is a config cap, not a problem size.
+
+Total work is O(R · W · Wj / 128 lanes) — for the row caps used by
 separation this beats the gather-heavy searchsorted lowering on TPU and is
 exactly the row-per-thread/warp-intersection shape of the paper's CUDA
 kernels, re-laid-out for 8×128 vregs.
@@ -29,7 +37,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _intersect_kernel(ci_ref, cj_ref, pos_ref):
+def _pick_tiles(R: int, W: int, Wj: int) -> tuple[int, int]:
+    """Static (block_rows, tile_j) heuristic per bucket shape.
+
+    Derivation (benchmarks/kernels.py block sweep on the separation
+    shapes): wider row blocks amortise grid/dispatch overhead roughly
+    linearly until the (block_rows, 128, tile_j) int32 compare
+    intermediate approaches VMEM pressure, so take the widest power-of-two
+    row block ≤ 32 the row count fills, then widen the j tile only while
+    the intermediate stays ≤ 2 MiB (≈1/8 of a v5e core's VMEM — leaves
+    headroom for the in/out tiles and double buffering). Short-bucket
+    shapes (W ≤ 32) land on a single masked i-tile; their win comes from
+    the bucketed driver shrinking R·Wj, not from tiling.
+    """
+    block_rows = 32 if R >= 32 else (16 if R >= 16 else 8)
+    tile_j = 256 if (Wj >= 256 and block_rows <= 16) else 128
+    return block_rows, tile_j
+
+
+def _intersect_kernel(ci_ref, cj_ref, pos_ref, *, wj, tile_j, mask_j):
     t = pl.program_id(2)                   # j-tile index (innermost)
 
     @pl.when(t == 0)
@@ -37,29 +63,44 @@ def _intersect_kernel(ci_ref, cj_ref, pos_ref):
         pos_ref[...] = jnp.full(pos_ref.shape, -1, jnp.int32)
 
     ci = ci_ref[...]                       # (B, 128) i-chunk
-    cj = cj_ref[...]                       # (B, 128) j-tile
-    eq = ci[:, :, None] == cj[:, None, :]  # (B, 128, 128)
-    jidx = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 2) + t * 128
+    cj = cj_ref[...]                       # (B, tile_j) j-tile
+    eq = ci[:, :, None] == cj[:, None, :]  # (B, 128, tile_j)
+    if mask_j:
+        # tail j-tile: lanes past the real row width hold unspecified
+        # filler that could equal real ci values — mask them out of the
+        # compare (static no-op when tile_j divides Wj)
+        jcol = jax.lax.broadcasted_iota(jnp.int32, cj.shape, 1) + t * tile_j
+        eq = eq & (jcol < wj)[:, None, :]
+    jidx = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 2) + t * tile_j
     cand = jnp.max(jnp.where(eq, jidx, -1), axis=2)
     pos_ref[...] = jnp.maximum(pos_ref[...], cand)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def intersect_rows_pallas(ci: jax.Array, cj: jax.Array, block_rows: int = 8,
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "tile_j", "interpret"))
+def intersect_rows_pallas(ci: jax.Array, cj: jax.Array,
+                          block_rows: int | None = None,
+                          tile_j: int | None = None,
                           interpret: bool = False) -> jax.Array:
-    """ci: (R, W), cj: (R, Wj) int32, W and Wj multiples of 128, R a
-    multiple of block_rows. Returns (R, W) match positions (−1 = none)."""
+    """ci: (R, W), cj: (R, Wj) int32 — any shapes (no alignment
+    requirements; tail tiles are masked in-kernel). Returns (R, W) match
+    positions (−1 = none). ``block_rows``/``tile_j`` default to the
+    :func:`_pick_tiles` heuristic for the given shape."""
     R, W = ci.shape
     Rj, Wj = cj.shape
-    assert R == Rj and W % 128 == 0 and Wj % 128 == 0, (ci.shape, cj.shape)
-    assert R % block_rows == 0, (R, block_rows)
-    grid = (R // block_rows, W // 128, Wj // 128)
+    assert R == Rj, (ci.shape, cj.shape)
+    auto_br, auto_tj = _pick_tiles(R, W, Wj)
+    br = auto_br if block_rows is None else block_rows
+    tj = auto_tj if tile_j is None else tile_j
+    grid = (pl.cdiv(R, br), pl.cdiv(W, 128), pl.cdiv(Wj, tj))
+    kernel = functools.partial(_intersect_kernel, wj=Wj, tile_j=tj,
+                               mask_j=(Wj % tj) != 0)
     return pl.pallas_call(
-        _intersect_kernel,
+        kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, w)),
-                  pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, t))],
-        out_specs=pl.BlockSpec((block_rows, 128), lambda r, w, t: (r, w)),
+        in_specs=[pl.BlockSpec((br, 128), lambda r, w, t: (r, w)),
+                  pl.BlockSpec((br, tj), lambda r, w, t: (r, t))],
+        out_specs=pl.BlockSpec((br, 128), lambda r, w, t: (r, w)),
         out_shape=jax.ShapeDtypeStruct((R, W), jnp.int32),
         interpret=interpret,
     )(ci, cj)

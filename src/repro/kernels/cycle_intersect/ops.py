@@ -1,7 +1,9 @@
-"""Jit'd public wrapper for cycle_intersect: arbitrary (R, W) in, padded
-(block_rows/128)-aligned rectangles through the kernel, unpadded out.
-``interpret=True`` is selected automatically off-TPU so the same entry point
-validates on CPU (same routing pattern as triangle_mp).
+"""Jit'd public wrapper for cycle_intersect. Ragged shapes go straight to
+the kernel — tail-tile masking happens in-kernel (see kernel.py), so no
+host-side padded copies (the old path materialised sentinel-padded
+rectangles of both operands per call). ``interpret=True`` is selected
+automatically off-TPU so the same entry point validates on CPU (same
+routing pattern as triangle_mp).
 """
 from __future__ import annotations
 
@@ -12,34 +14,21 @@ import jax.numpy as jnp
 
 from repro.kernels.cycle_intersect.kernel import intersect_rows_pallas
 
-_SENTINEL = jnp.int32(2 ** 31 - 1)
-
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x, rows, cols, fill):
-    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])),
-                   constant_values=fill)
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows",))
+@functools.partial(jax.jit, static_argnames=("block_rows", "tile_j"))
 def intersect_rows(ci: jax.Array, cj: jax.Array,
-                   block_rows: int = 8) -> jax.Array:
+                   block_rows: int | None = None,
+                   tile_j: int | None = None) -> jax.Array:
     """Drop-in replacement for ``intersect_rows_ref`` backed by the Pallas
     kernel. ci: (R, W), cj: (R, Wj) int32 sorted rows; returns (R, W)
-    positions of the last match in cj, or -1."""
-    R, W = ci.shape
-    Wj = cj.shape[1]
-    Rp = max(((R + block_rows - 1) // block_rows) * block_rows, block_rows)
-    Wp = max(((W + 127) // 128) * 128, 128)
-    Wjp = max(((Wj + 127) // 128) * 128, 128)
-    # distinct pad sentinels so kernel padding can never match real data;
-    # row-interior sentinels (ci == cj == N) still match, same as the ref —
-    # callers mask those by window validity.
-    cip = _pad_to(ci.astype(jnp.int32), Rp, Wp, _SENTINEL)
-    cjp = _pad_to(cj.astype(jnp.int32), Rp, Wjp, _SENTINEL - 1)
-    pos = intersect_rows_pallas(cip, cjp, block_rows=block_rows,
-                                interpret=not _on_tpu())
-    return pos[:R, :W]
+    positions of the last match in cj, or -1. Tiles default to the
+    per-shape heuristic in kernel.py; row-interior sentinels
+    (ci == cj == N) still match, same as the ref — callers mask those by
+    window validity."""
+    return intersect_rows_pallas(ci.astype(jnp.int32), cj.astype(jnp.int32),
+                                 block_rows=block_rows, tile_j=tile_j,
+                                 interpret=not _on_tpu())

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.api import BACKENDS, MODES, get_preset
-from repro.core.graph import MulticutInstance
+from repro.core.graph import DEFAULT_SPARSE_THRESHOLD, MulticutInstance
 from repro.core.solver import SolverConfig
 
 __all__ = ["Route", "RoutingRule", "Router", "TRAFFIC", "default_router"]
@@ -182,11 +182,15 @@ class Router:
 
 
 def default_router(batch_shards: int = 1,
-                   dense_max_nodes: int = 1024) -> Router:
+                   dense_max_nodes: int = DEFAULT_SPARSE_THRESHOLD) -> Router:
     """The measured-economics default: dense separation below
     ``dense_max_nodes`` padded nodes, sparse CSR with chunked separation
-    above. ``batch_shards`` spreads every dispatch's batch axis over that
-    many devices (clamped to the devices present at dispatch)."""
+    above. The node cutoff defaults to the same measured dense/sparse
+    crossover the solver's ``graph_impl="auto"`` uses
+    (:data:`repro.core.graph.DEFAULT_SPARSE_THRESHOLD`, justified by
+    ``benchmarks/calibrate.py``). ``batch_shards`` spreads every
+    dispatch's batch axis over that many devices (clamped to the devices
+    present at dispatch)."""
     small = Route(mode="pd",
                   config=SolverConfig(graph_impl="dense"),
                   batch_shards=batch_shards)

@@ -115,8 +115,11 @@ def _big_window_avals(jaxpr, bound):
 def test_chunked_jaxpr_has_no_full_batch_allocation():
     """With chunking on, NOTHING in the solve jaxpr may be as large as the
     full max_neg-proportional candidate working set — peak separation
-    memory is bounded by separation_chunk. The unchunked jaxpr must trip
-    the same detector (sanity that the bound is real)."""
+    memory is bounded by separation_chunk. Degree bucketing alone (default
+    short cap, NO chunking) must satisfy the same bound: the short pass
+    runs narrow windows and the long pass streams scaled-down chunks. The
+    unchunked AND unbucketed jaxpr must trip the detector (sanity that the
+    bound is real)."""
     max_neg, nbr_k, row_cap = 128, 4, 64
     bound = max_neg * nbr_k * row_cap          # full-batch window elements
     inst = random_instance(200, 0.03, seed=0, pad_edges=701, pad_nodes=257)
@@ -128,7 +131,12 @@ def test_chunked_jaxpr_has_no_full_batch_allocation():
         lambda i: solve_device(i, mode="pd+", cfg=chunked))(inst)
     bad = _big_window_avals(jx.jaxpr, bound)
     assert not bad, f"max_neg-sized allocations despite chunking: {bad}"
+    bad = _big_window_avals(jax.make_jaxpr(
+        lambda i: solve_device(i, mode="pd+", cfg=base))(inst).jaxpr, bound)
+    assert not bad, \
+        f"max_neg-sized allocations despite degree bucketing: {bad}"
+    flat = dataclasses.replace(base, sparse_row_cap_short=0)
     jx_full = jax.make_jaxpr(
-        lambda i: solve_device(i, mode="pd+", cfg=base))(inst)
+        lambda i: solve_device(i, mode="pd+", cfg=flat))(inst)
     assert _big_window_avals(jx_full.jaxpr, bound), \
         "detector saw nothing in the unchunked jaxpr — bound is miscalibrated"

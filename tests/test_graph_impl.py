@@ -100,6 +100,11 @@ def test_resolve_graph_impl():
     assert resolve_graph_impl("sparse", 4) == "sparse"
     assert resolve_graph_impl("auto", 100, threshold=2048) == "dense"
     assert resolve_graph_impl("auto", 5000, threshold=2048) == "sparse"
+    # default threshold is the derived constant, not a per-call magic number
+    from repro.core.graph import DEFAULT_SPARSE_THRESHOLD
+    assert resolve_graph_impl("auto", DEFAULT_SPARSE_THRESHOLD) == "dense"
+    assert resolve_graph_impl("auto", DEFAULT_SPARSE_THRESHOLD + 1) == \
+        "sparse"
     with pytest.raises(ValueError):
         resolve_graph_impl("csr", 10)
 
@@ -144,6 +149,31 @@ def test_separation_identical(family, with45):
             np.testing.assert_array_equal(
                 np.asarray(getattr(d.instance, f)),
                 np.asarray(getattr(s.instance, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("with45", [False, True])
+def test_separation_identical_degree_bucketed(with45):
+    """Two-level degree bucketing (a short cap small enough that BOTH
+    buckets are populated) stays bit-identical to the unbucketed sparse
+    path AND to dense — triangles, chords, instance."""
+    inst = FAMILIES["random"](0)
+    d = separate(inst, max_neg=64, max_tri_per_edge=4,
+                 with_cycles45=with45, graph_impl="dense")
+    for chunk in (0, 16, 7):
+        b = separate(inst, max_neg=64, max_tri_per_edge=4,
+                     with_cycles45=with45, graph_impl="sparse",
+                     sparse_row_cap_short=5, separation_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(d.triangles.valid),
+                                      np.asarray(b.triangles.valid),
+                                      err_msg=str(chunk))
+        np.testing.assert_array_equal(np.asarray(d.triangles.edges),
+                                      np.asarray(b.triangles.edges),
+                                      err_msg=str(chunk))
+        for f in ("u", "v", "cost", "edge_valid", "node_valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(d.instance, f)),
+                np.asarray(getattr(b.instance, f)),
+                err_msg=f"{chunk}/{f}")
 
 
 # ---------------------------------------------------------------------------
@@ -226,3 +256,21 @@ def test_auto_threshold_picks_sparse():
     jaxpr = jax.make_jaxpr(
         lambda i: solve_device(i, mode="pd", cfg=cfg))(inst)
     assert not _nxn_shapes(jaxpr.jaxpr, inst.num_nodes)
+
+
+def test_sparse_peak_memory_within_dense():
+    """Regression pinning the tentpole of PR 7: compiled sparse pd+ peak
+    temp memory ≤ 1.5× dense on the smoke-bench shapes (it was ~4.7× before
+    degree bucketing). Compile-only — no solve runs."""
+    inst = random_instance(100, 0.1, seed=0, pad_edges=1024, pad_nodes=128)
+
+    def temp_bytes(impl):
+        cfg = SolverConfig(max_neg=512, max_tri_per_edge=8, nbr_k=8,
+                           mp_iters=2, max_rounds=4, graph_impl=impl)
+        c = jax.jit(
+            lambda i: solve_device(i, mode="pd+", cfg=cfg)).lower(inst) \
+            .compile()
+        return c.memory_analysis().temp_size_in_bytes
+
+    dense, sparse = temp_bytes("dense"), temp_bytes("sparse")
+    assert sparse <= 1.5 * dense, (sparse, dense)

@@ -90,6 +90,38 @@ def test_cycle_intersect_block_sweep():
             np.asarray(intersect_rows(ci, cj, block_rows=br)), want)
 
 
+@pytest.mark.parametrize("R,W,Wj", [(5, 130, 130), (16, 129, 257),
+                                    (3, 200, 64), (32, 8, 150),
+                                    (33, 96, 300), (8, 1, 300)])
+def test_cycle_intersect_ragged_widths(R, W, Wj):
+    """Widths NOT multiples of 128 (and rows not multiples of block_rows):
+    the kernel's in-kernel tail masking must match the ref exactly — filler
+    cj lanes may alias real ids and must do no compare work."""
+    ci = _sorted_rows(R * 7 + W, R, W, max(W, Wj) + 9)
+    cj = _sorted_rows(R * 7 + Wj + 1, R, Wj, max(W, Wj) + 9)
+    want = np.asarray(intersect_rows_ref(ci, cj))
+    np.testing.assert_array_equal(np.asarray(intersect_rows(ci, cj)), want)
+    # explicit tile overrides exercise tail tiles at several alignments
+    for br, tj in [(8, 128), (16, 256), (32, 128)]:
+        np.testing.assert_array_equal(
+            np.asarray(intersect_rows(ci, cj, block_rows=br, tile_j=tj)),
+            want, err_msg=f"br={br} tj={tj}")
+
+
+def test_cycle_intersect_empty_rows():
+    """All-sentinel (empty) rows: sentinel matches sentinel positionally,
+    exactly like the ref (callers mask by window validity); rows empty on
+    one side only yield no matches."""
+    n = 50
+    ci = jnp.full((6, 40), n, jnp.int32)
+    cj = jnp.full((6, 70), n, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(intersect_rows(ci, cj)),
+                                  np.asarray(intersect_rows_ref(ci, cj)))
+    ci2 = _sorted_rows(11, 6, 40, n)
+    np.testing.assert_array_equal(np.asarray(intersect_rows(ci2, cj)),
+                                  np.asarray(intersect_rows_ref(ci2, cj)))
+
+
 # ---------------------------------------------------------------------------
 # contract_matmul
 # ---------------------------------------------------------------------------

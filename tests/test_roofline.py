@@ -70,3 +70,37 @@ def test_collective_bytes_on_real_compile():
     hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
     out = collective_bytes(hlo)
     assert out["total"] == 0
+
+
+def test_loop_corrected_linear():
+    from repro.roofline.solver import loop_corrected
+    # setup 10, per-iter 5: depth-1 = 15, depth-2 = 20, depth-8 = 50
+    assert loop_corrected(15.0, 20.0, 8) == pytest.approx(50.0)
+    assert loop_corrected(15.0, 20.0, 1) == pytest.approx(15.0)
+
+
+@pytest.mark.parametrize("impl", ["dense", "sparse"])
+def test_profile_solve_round(impl):
+    """One round profiled end to end on both data paths: every phase gets
+    measured flops/bytes/wall, MP carries the loop-trip correction, and
+    the round totals are the phase sums."""
+    from repro.core.graph import random_instance
+    from repro.core.solver import SolverConfig
+    from repro.roofline.solver import PHASES, profile_solve_round
+
+    inst = random_instance(40, 0.2, seed=0, pad_edges=256, pad_nodes=64)
+    cfg = SolverConfig(max_neg=64, max_tri_per_edge=4, nbr_k=4, mp_iters=3,
+                       graph_impl=impl)
+    prof = profile_solve_round(inst, cfg)
+    assert prof["impl"] == impl
+    assert set(prof["phases"]) == set(PHASES)
+    for rec in prof["phases"].values():
+        assert rec["wall_s"] > 0
+        assert rec["flops"] >= 0 and rec["bytes_accessed"] > 0
+        assert rec["dominant"] in ("compute", "memory", "collective")
+    loop = prof["phases"]["message_passing"]["loop"]
+    assert loop["iters"] == cfg.mp_iters
+    # depth-2 does strictly more work than depth-1
+    assert loop["flops_depth2"] > loop["flops_depth1"]
+    assert prof["round_wall_s"] == pytest.approx(
+        sum(p["wall_s"] for p in prof["phases"].values()))
