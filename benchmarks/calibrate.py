@@ -1,7 +1,13 @@
 """Dense-vs-sparse crossover sweep: the measurement behind
 :data:`repro.core.graph.DEFAULT_SPARSE_THRESHOLD`.
 
-    PYTHONPATH=src python -m benchmarks.calibrate
+    PYTHONPATH=src python -m benchmarks.calibrate [--json OUT.json]
+
+``--json`` additionally writes the sweep (per-size walls, the measured
+crossover, and the committed threshold) as a machine-readable report —
+CI uploads it as a build artifact (report-only, never gated: the
+crossover is a same-machine ratio, but absolute walls are runner-class
+noise) so threshold drift is visible across runs without failing them.
 
 Runs the same PD solve through both separation data paths on
 sparse-degree random instances of growing padded node count and prints
@@ -22,6 +28,8 @@ cancels out.
 from __future__ import annotations
 
 import dataclasses
+import json
+import sys
 
 import jax
 
@@ -44,10 +52,12 @@ def _case(n: int):
                            pad_edges=max(256, 8 * n), pad_nodes=pad_n)
 
 
-def run(csv=None) -> int | None:
+def run(csv=None, json_path: str | None = None) -> int | None:
     """Sweep, print, and return the measured crossover size (None if the
-    dense path won everywhere)."""
+    dense path won everywhere). ``json_path`` writes the machine-readable
+    report CI archives as an artifact."""
     crossover = None
+    sweep = []
     for n in SIZES:
         inst = _case(n)
         walls = {}
@@ -61,6 +71,9 @@ def run(csv=None) -> int | None:
             if csv is not None:
                 csv.add("calibrate", f"n{n}/{impl}", "wall_s", round(t, 4))
         ratio = walls["sparse"] / walls["dense"]
+        sweep.append({"n": n, "dense_wall_s": round(walls["dense"], 5),
+                      "sparse_wall_s": round(walls["sparse"], 5),
+                      "sparse_over_dense": round(ratio, 3)})
         print(f"  n={n:5d}: dense {walls['dense']*1e3:8.1f}ms  "
               f"sparse {walls['sparse']*1e3:8.1f}ms  "
               f"(sparse/dense {ratio:.2f}x)")
@@ -68,13 +81,39 @@ def run(csv=None) -> int | None:
             crossover = n
     print(f"crossover: {crossover} "
           f"(DEFAULT_SPARSE_THRESHOLD = {DEFAULT_SPARSE_THRESHOLD})")
+    if json_path is not None:
+        report = {
+            "bench": "calibrate",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "degree": DEGREE,
+            "sweep": sweep,
+            "crossover": crossover,
+            "committed_threshold": DEFAULT_SPARSE_THRESHOLD,
+        }
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {json_path}")
     return crossover
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json needs an output path")
+        del argv[i:i + 2]
+    if argv:
+        raise SystemExit(f"unknown arguments {argv}; usage: "
+                         "python -m benchmarks.calibrate [--json OUT.json]")
     csv = Csv()
     csv.emit_header()
-    run(csv)
+    run(csv, json_path=json_path)
 
 
 if __name__ == "__main__":

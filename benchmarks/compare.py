@@ -8,7 +8,10 @@ a PR intentionally moves the numbers) and FAIL (exit 1) on regressions:
 * objective worse (higher) than baseline by > 1e-3, or lower bound worse
   (lower) by > 1e-3 — those only move when the algorithm changes, and a
   change must come with a refreshed baseline;
-* a finite objective/LB going non-finite (recorded as null).
+* a finite objective/LB going non-finite (recorded as null);
+* serving efficiency: batch-slot ``occupancy`` dropping more than 0.05
+  below baseline, or the open-loop ``deadline_miss_rate`` rising more
+  than 0.05 above it (both machine-independent under seeded streams).
 
     PYTHONPATH=src python -m benchmarks.compare \
         benchmarks/BENCH_solver.baseline.json BENCH_solver.json
@@ -43,6 +46,8 @@ WALL_ABS_FLOOR = 0.6    # ... and the absolute delta exceeds this (seconds).
                         # through both thresholds at once.
 OBJ_TOL = 1e-3          # objective may not worsen (rise) beyond this
 LB_TOL = 1e-3           # lower bound may not worsen (drop) beyond this
+OCC_TOL = 0.05          # occupancy may not drop more than this ...
+MISS_TOL = 0.05         # ... nor deadline_miss_rate rise more than this
 
 
 def _normalize(report: dict) -> dict:
@@ -112,6 +117,10 @@ def compare(baseline: dict, fresh: dict) -> list[str]:
                     and abs(bv - fv) > (OBJ_TOL if metric == "objective"
                                         else LB_TOL):
                 lines.append(f"    *** {metric} CHANGED: {bv} -> {fv}")
+        for metric in ("occupancy", "deadline_miss_rate"):
+            bv, fv = b.get(metric), f.get(metric)
+            if isinstance(bv, (int, float)) and isinstance(fv, (int, float)):
+                lines.append(f"    {metric} {_fmt_delta(bv, fv)}")
     return lines
 
 
@@ -140,6 +149,13 @@ def gate_failures(baseline: dict, fresh: dict) -> list[str]:
                 fails.append(f"{name}: {metric} went non-finite "
                              f"({bv} -> null)")
             elif isinstance(bv, (int, float)) and isinstance(fv, (int, float)) \
+                    and sign * (fv - bv) > tol:
+                fails.append(f"{name}: {metric} worsened {bv} -> {fv} "
+                             f"(tol {tol})")
+        for metric, tol, sign in (("occupancy", OCC_TOL, -1),
+                                  ("deadline_miss_rate", MISS_TOL, +1)):
+            bv, fv = b.get(metric), f.get(metric)
+            if isinstance(bv, (int, float)) and isinstance(fv, (int, float)) \
                     and sign * (fv - bv) > tol:
                 fails.append(f"{name}: {metric} worsened {bv} -> {fv} "
                              f"(tol {tol})")

@@ -124,7 +124,8 @@ def _measure(hw: int, cold_cfg: SolverConfig, iters: int) -> dict:
         "speedup_x": round(cold_t / warm_t, 2),
         "objective": _finite(warm_res.objective),
         "cold_objective": _finite(cold_res.objective),
-        "lower_bound": None,        # warm re-solves carry no dual bound
+        "lower_bound": _finite(warm_res.lower_bound),   # the carried bound:
+        # last exact tick's dual corrected by the patch slack (valid, loose)
         "rounds": int(warm_res.rounds),
         "cold_rounds": int(cold_res.rounds),
         "churn_frac": CHURN,

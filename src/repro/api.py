@@ -77,7 +77,7 @@ __all__ = [
     "list_presets", "make_instance", "make_patch", "pad_patch",
     "register_preset", "set_cache_maxsize", "solve", "solve_batch",
     "solve_delta", "solve_with_state", "stack_instances", "trace_count",
-    "unstack_results",
+    "tree_ready", "unstack_results",
 ]
 
 
@@ -318,6 +318,25 @@ def cache_info():
     return _compiled.cache_info()
 
 
+def tree_ready(tree) -> bool:
+    """Non-blocking readiness probe for a pytree of device arrays.
+
+    Every registry executable dispatches asynchronously — the returned
+    arrays are device futures, and the only host synchronisation happens
+    when someone *reads* them. ``tree_ready`` answers "has the device
+    finished computing this result?" without forcing that sync: True iff
+    every leaf that exposes ``jax.Array.is_ready`` reports ready (host
+    numpy leaves are trivially ready). This is the handle the serving
+    engine's overlapped dispatch harvests on: dispatch N batches, keep
+    admitting requests, and demux each result only once it polls ready.
+    """
+    for leaf in jax.tree.leaves(tree):
+        is_ready = getattr(leaf, "is_ready", None)
+        if is_ready is not None and not is_ready():
+            return False
+    return True
+
+
 def _normalize(mode, config, backend, preset, graph_impl=None):
     if preset is not None:
         p = get_preset(preset) if isinstance(preset, str) else preset
@@ -413,9 +432,11 @@ def solve_delta(state: DeltaState, patch: DeltaPatch,
     lifts the previous solution instead: clusters untouched by the patch
     (no endpoint within ``config.delta_halo`` hops) stay contracted and
     round-0 separation is restricted to the patch frontier — much faster
-    under small churn, at the price of the global dual bound (the result's
-    ``lower_bound`` is ``-inf``; the objective is still exact for the
-    returned labels)."""
+    under small churn, at the price of dual tightness: the result's
+    ``lower_bound`` is the *carried* bound — the last exact/cold tick's
+    bound corrected by the patch slack ``Σ min(0, Δcost)`` — valid for the
+    patched problem but looser than a fresh dual solve (the objective is
+    still exact for the returned labels)."""
     mode, config, backend = _normalize(mode, config, backend, preset,
                                        graph_impl)
     if warm and mode == "d":

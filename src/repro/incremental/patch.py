@@ -63,6 +63,13 @@ class PatchInfo(NamedTuple):
     n_deleted: jax.Array    # () i32 edges removed
     n_reweighted: jax.Array  # () i32 existing edges with cost set
     n_dropped: jax.Array    # () i32 inserts lost to missing free slots
+    lb_slack: jax.Array     # () f32 Σ_e min(0, Δcost_e) over the applied
+                            # ops — the additive correction that keeps a
+                            # pre-patch dual bound valid for the patched
+                            # problem: for any clustering y and cost change
+                            # Δ, ⟨c+Δ, y⟩ ≥ ⟨c, y⟩ + Σ min(0, Δ). Deletes
+                            # contribute −old_cost, inserts +new_cost,
+                            # reweights new−old; dropped inserts nothing.
 
 
 def make_patch(num_nodes: int, *, insert=None, delete=None, reweight=None,
@@ -216,11 +223,17 @@ def apply_patch(inst: MulticutInstance, csr: CsrGraph, patch: DeltaPatch):
     csr2 = splice_csr(csr, drop, lo, hi,
                       jnp.where(ok_alloc, slot, 0).astype(jnp.int32),
                       ok_alloc)
+    # per-entry cost delta: the old cost for resolved entries (0 for
+    # inserts — the edge did not exist, so its implicit old cost is 0)
+    old_cost = jnp.where(exists, inst.cost[jnp.clip(eid, 0)], 0.0)
+    delta = jnp.where(is_del, -old_cost,
+                      jnp.where(upd | ok_alloc, patch.cost - old_cost, 0.0))
     info = PatchInfo(
         n_inserted=jnp.sum(ok_alloc).astype(jnp.int32),
         n_deleted=jnp.sum(is_del).astype(jnp.int32),
         n_reweighted=jnp.sum(upd).astype(jnp.int32),
-        n_dropped=jnp.sum(fresh & ~ok_alloc).astype(jnp.int32))
+        n_dropped=jnp.sum(fresh & ~ok_alloc).astype(jnp.int32),
+        lb_slack=jnp.sum(jnp.minimum(0.0, delta)).astype(jnp.float32))
     return inst2, csr2, info
 
 

@@ -26,11 +26,18 @@ Two traceable entrypoints (both jit/vmap-safe; executable caching lives in
   restricted to the frontier. The solver then only re-decides
   the patched neighbourhood; far-away clusters can still merge in later
   rounds (separation is only frontier-restricted on round 0, and
-  contraction always sees the whole condensed graph). The reported
-  ``lower_bound`` is ``-inf`` — the dual bound of the condensed problem
-  does not transfer to the original — and the objective is recomputed on
-  the full patched instance, so it is always the true objective of the
-  returned labels.
+  contraction always sees the whole condensed graph). The dual bound of
+  the *condensed* problem does not transfer to the original, so warm
+  ticks report the **carried** bound instead: the last exact/cold tick's
+  bound corrected by each patch's slack ``Σ_e min(0, Δcost_e)``
+  (:class:`repro.incremental.patch.PatchInfo.lb_slack`). For any
+  clustering y, ``⟨c+Δ, y⟩ ≥ ⟨c, y⟩ + Σ min(0, Δ)``, and a clustering of
+  the patched instance restricted to the surviving edges is a clustering
+  of the pre-patch instance (deleted slots cost 0, inserted slots had
+  implicit cost 0) — so the carried bound stays a valid, if loose, lower
+  bound across any warm chain, re-tightening at the next exact tick. The
+  objective is recomputed on the full patched instance either way, so it
+  is always the true objective of the returned labels.
 """
 from __future__ import annotations
 
@@ -46,6 +53,14 @@ from repro.incremental.state import DeltaState, init_delta_state
 __all__ = ["patch_frontier", "solve_cold_device", "solve_delta_device"]
 
 
+def _carriable_bound(lb: jax.Array) -> jax.Array:
+    """Lift a solve's reported bound into the carried DeltaState slot:
+    −inf survives (it stays a valid bound under any patch slack), but NaN
+    would poison every later warm tick, so it degrades to −inf."""
+    lb = jnp.asarray(lb, jnp.float32)
+    return jnp.where(jnp.isnan(lb), jnp.float32(-jnp.inf), lb)
+
+
 def solve_cold_device(inst: MulticutInstance, mode: str = "pd",
                       cfg: SolverConfig = SolverConfig(), sweep=None,
                       intersect=None) -> tuple[SolveResult, DeltaState]:
@@ -57,7 +72,8 @@ def solve_cold_device(inst: MulticutInstance, mode: str = "pd",
                        csr=state.csr)
     return res, state._replace(
         labels=res.labels.astype(jnp.int32),
-        has_solution=jnp.bool_(mode != "d"))
+        has_solution=jnp.bool_(mode != "d"),
+        lower_bound=_carriable_bound(res.lower_bound))
 
 
 def patch_frontier(inst: MulticutInstance, patch: DeltaPatch,
@@ -119,8 +135,9 @@ def solve_delta_device(state: DeltaState, patch: DeltaPatch,
     """One update tick: splice the patch in, re-solve, carry the state.
 
     Exact mode (``warm=False``) is bit-identical to a cold solve of the
-    patched instance; warm mode trades the global dual bound
-    (``lower_bound`` becomes ``-inf``) for re-solving only the patched
+    patched instance; warm mode trades dual tightness — ``lower_bound``
+    becomes the carried bound (previous bound + patch slack, valid but
+    loose; see module docstring) — for re-solving only the patched
     neighbourhood. Mode "d" has no primal solution to carry and is
     rejected for warm (exact "d" works: it just re-runs the dual)."""
     if warm and mode == "d":
@@ -131,6 +148,7 @@ def solve_delta_device(state: DeltaState, patch: DeltaPatch,
         res = solve_device(inst2, mode, cfg, sweep=sweep,
                            intersect=intersect, csr=csr2)
         final = res.labels.astype(jnp.int32)
+        carried = _carriable_bound(res.lower_bound)
     else:
         inst_c, csr_c, lift, fr_c = _warm_seed(inst2, state, patch,
                                                cfg.delta_halo)
@@ -138,9 +156,11 @@ def solve_delta_device(state: DeltaState, patch: DeltaPatch,
                              intersect=intersect, csr=csr_c,
                              sep_node_mask=fr_c)
         final = res_c.labels.astype(jnp.int32)[lift]
+        carried = (state.lower_bound + info.lb_slack).astype(jnp.float32)
         res = res_c._replace(labels=final,
                              objective=inst2.objective(final),
-                             lower_bound=jnp.float32(-jnp.inf))
+                             lower_bound=carried)
     state2 = DeltaState(instance=inst2, csr=csr2, labels=final,
-                        has_solution=jnp.bool_(mode != "d"))
+                        has_solution=jnp.bool_(mode != "d"),
+                        lower_bound=carried)
     return res, state2, info

@@ -27,6 +27,13 @@ class DeltaState(NamedTuple):
     labels: jax.Array           # (N,) i32 previous solution (identity before
                                 # the first solve)
     has_solution: jax.Array     # () bool — ``labels`` hold a real solution
+    lower_bound: jax.Array      # () f32 best-known dual bound for
+                                # ``instance``: the last exact/cold tick's
+                                # bound, corrected by every warm patch's
+                                # ``PatchInfo.lb_slack`` since (−inf before
+                                # the first dual-producing solve) — what
+                                # keeps warm ticks reporting a valid (if
+                                # loose) bound instead of −inf
 
 
 def init_delta_state(inst: MulticutInstance,
@@ -38,4 +45,5 @@ def init_delta_state(inst: MulticutInstance,
         csr = csr_from_instance(inst)
     return DeltaState(instance=inst, csr=csr,
                       labels=jnp.arange(inst.num_nodes, dtype=jnp.int32),
-                      has_solution=jnp.bool_(False))
+                      has_solution=jnp.bool_(False),
+                      lower_bound=jnp.float32(-jnp.inf))

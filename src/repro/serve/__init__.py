@@ -10,7 +10,11 @@ The production front end over :mod:`repro.api`'s executable registry:
 * :mod:`repro.serve.session` — sticky sessions carrying incremental
   :class:`repro.incremental.DeltaState` between update ticks;
 * :mod:`repro.serve.engine` — the queueing / continuous micro-batching /
-  demux engine itself.
+  demux engine itself: asynchronous (overlapped dispatch behind a bounded
+  in-flight window), deadline-aware (``deadline_s`` drives early partial
+  flushes over a power-of-two sub-batch ladder), and optionally
+  latency-adaptive (``adaptive_routing=True`` routes on measured
+  per-bucket wall EMAs instead of the static size table).
 
 Quickstart::
 
@@ -25,11 +29,11 @@ Quickstart::
     res = ticket.result()                        # warm re-solve
 """
 from repro.serve.buckets import (
-    Bucket, BucketPolicy, filler_instance, pad_batch, pad_instance,
-    strip_result,
+    Bucket, BucketPolicy, batch_ladder, decompose_batch, filler_instance,
+    pad_batch, pad_instance, strip_result,
 )
 from repro.serve.engine import (
-    DeltaTicket, EngineStats, SolveEngine, SolveTicket,
+    DeltaTicket, EngineStats, RouteWall, SolveEngine, SolveTicket,
 )
 from repro.serve.router import (
     Route, Router, RoutingRule, TRAFFIC, default_router,
@@ -38,7 +42,8 @@ from repro.serve.session import DeltaSession, SessionStore
 
 __all__ = [
     "Bucket", "BucketPolicy", "DeltaSession", "DeltaTicket", "EngineStats",
-    "Route", "Router", "RoutingRule", "SessionStore", "SolveEngine",
-    "SolveTicket", "TRAFFIC", "default_router", "filler_instance",
-    "pad_batch", "pad_instance", "strip_result",
+    "Route", "RouteWall", "Router", "RoutingRule", "SessionStore",
+    "SolveEngine", "SolveTicket", "TRAFFIC", "batch_ladder",
+    "decompose_batch", "default_router", "filler_instance", "pad_batch",
+    "pad_instance", "strip_result",
 ]

@@ -158,3 +158,46 @@ def strip_result(res, num_nodes: int):
     back at the request's original padded length; scalars and per-round
     history are untouched (padding adds only exact-zero terms to them)."""
     return res._replace(labels=res.labels[:num_nodes])
+
+
+def batch_ladder(batch_cap: int, shards: int = 1) -> tuple[int, ...]:
+    """The geometric sub-batch ladder for partial flushes: ``batch_cap``
+    plus every power of two below it, descending (restricted to multiples
+    of ``shards`` so each rung still splits across the route's batch
+    shards). A partial queue decomposed over these rungs dispatches with
+    (near-)zero filler slots instead of padding straight to ``batch_cap``
+    — the vmapped round loop then never pays for dead slots — at the cost
+    of at most ``len(ladder)`` compiled batch shapes per (bucket, route)
+    instead of one (the same logarithmic trade the bucket ladder makes
+    for instance shapes)."""
+    if batch_cap < 1:
+        raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
+    if shards < 1 or batch_cap % shards:
+        raise ValueError(f"batch_cap={batch_cap} must be a positive "
+                         f"multiple of shards={shards}")
+    rungs = [batch_cap]
+    p = 1
+    while p < batch_cap:
+        if p % shards == 0 and p not in rungs:
+            rungs.append(p)
+        p <<= 1
+    return tuple(sorted(rungs, reverse=True))
+
+
+def decompose_batch(n: int, rungs: tuple[int, ...]) -> list[tuple[int, int]]:
+    """Greedy decomposition of ``n`` queued requests over a descending
+    rung ladder: a list of ``(take, size)`` dispatch chunks with ``take``
+    real requests padded to ``size`` slots. Exact (zero filler) whenever
+    the ladder contains 1 — true for every power-of-two-ladder from
+    :func:`batch_ladder` with ``shards=1``; with coarser ladders only the
+    final chunk pads (to the smallest rung)."""
+    if n < 1:
+        raise ValueError(f"need at least one queued request, got {n}")
+    out = []
+    for r in rungs:
+        while n >= r:
+            out.append((r, r))
+            n -= r
+    if n:
+        out.append((n, rungs[-1]))
+    return out

@@ -1,36 +1,61 @@
 """The serving engine: admission → bucketed queues → micro-batched
-dispatch → demux.
+dispatch → overlapped (async) harvest → demux.
 
 :class:`SolveEngine` turns a stream of arbitrary-size multicut requests
 into dense work for a *fixed* set of compiled executables:
 
 1. **Admission** (:meth:`SolveEngine.submit`): the request's instance is
    routed (:class:`repro.serve.router.Router` picks mode / config /
-   backend / batch_shards from its size) and bucketed
+   backend / batch_shards from its size — or, with
+   ``adaptive_routing=True``, from the measured per-slot wall-clock EMA
+   of each candidate route on the request's bucket, falling back to the
+   static size table until every candidate is warm) and bucketed
    (:class:`repro.serve.buckets.BucketPolicy` quantises its shape), then
    parked on the queue keyed by ``(bucket, route)``. Instances over the
    policy caps are rejected here — every admitted request is guaranteed a
-   compiled shape.
+   compiled shape. Requests may carry a relative ``deadline_s``; see
+   step 2. On sparse-routed buckets the engine also self-tunes
+   ``SolverConfig.sparse_row_cap_short`` from the first instance seen
+   (p95 of its attractive-degree histogram, clamped to
+   ``[8, sparse_row_cap]``) — the degree-bucketed CSR separation then
+   fits the traffic instead of the static default, at zero accuracy cost
+   (the covering caps make the kernel bit-identical for any value).
 2. **Continuous micro-batching** (:meth:`SolveEngine.pump`): a queue
    dispatches as soon as it holds ``batch_cap`` requests; a non-empty
-   queue whose head has waited ``flush_timeout_s`` dispatches partially,
-   with the tail of the batch padded by neutral filler instances. The
-   batch axis is therefore always exactly ``batch_cap`` — one executable
-   per (bucket, route) serves every dispatch, full or not.
+   queue flushes partially when its head has waited ``flush_timeout_s``
+   *or* when the earliest queued deadline minus the route's EMA wall is
+   about to be violated (deadline pressure; tightest-deadline queues
+   flush first). Partial flushes decompose over the power-of-two
+   sub-batch ladder (:func:`repro.serve.buckets.batch_ladder`) instead
+   of padding to ``batch_cap``, so filler slots — and the dead vmap
+   lanes they cost — (almost) vanish.
 3. **Dispatch** goes through :func:`repro.api.compiled_solve` — the same
    bounded executable registry behind ``api.solve`` — as one vmapped
    (optionally batch-sharded) device executable per (bucket, route).
-4. **Demux**: the batched :class:`SolveResult` is unstacked, filler slots
-   dropped, node padding stripped, and each request's ticket resolved.
-   Results are bit-identical to ``api.solve`` on the same bucket-padded
-   instance (asserted in tests/test_serve_engine.py) because they *are*
-   the same executable modulo vmap — which the same test shows is
-   bit-preserving.
+   Dispatch is **non-blocking**: JAX returns unready device arrays, and
+   the engine parks them on a per-backend in-flight window
+   (``max_inflight`` dispatches deep) instead of blocking. Later pumps
+   **harvest** completed dispatches (non-blocking readiness probe,
+   :func:`repro.api.tree_ready`); a full window back-pressures by
+   blocking on the oldest entry only. ``max_inflight=0`` recovers the
+   fully synchronous engine — per-request results are bit-identical
+   either way (asserted in tests/test_serve_async.py), because overlap
+   reorders only *waiting*, never the executables or their operands.
+4. **Demux** (at harvest): the batched :class:`SolveResult` is unstacked,
+   filler slots dropped, node padding stripped, and each request's
+   ticket resolved. Results are bit-identical to ``api.solve`` on the
+   same bucket-padded instance (asserted in tests/test_serve_engine.py)
+   because they *are* the same executable modulo vmap — which the same
+   test shows is bit-preserving. Harvest also feeds the per-(bucket,
+   route) wall-clock EMAs that adaptive routing and deadline pressure
+   consult, and the deadline-miss counters the sustained-load benchmark
+   reports.
 
 Compile accounting: the engine counts solver traces (via
 ``api.trace_count``) across its lifetime in ``stats.compiles``; serving
-any stream costs at most ``len(buckets seen) × len(routes seen)``
-compilations, and the serve smoke benchmark asserts exactly that.
+any stream costs at most ``len(buckets seen) × len(routes seen) ×
+len(batch ladder)`` compilations, and the serve smoke benchmark asserts
+exactly that.
 
 **Sticky delta sessions** ride the same machinery: ``open_session`` cold
 solves an instance (routed as "delta" traffic) and parks its carried
@@ -39,59 +64,94 @@ DeltaSession`; ``submit_delta`` queues a patch tick under the session's
 pinned (bucket, route, warm) key, micro-batched with other sessions'
 ticks; the batched delta executable returns updated states, which the
 demux writes back to exactly the sessions that own them. A session's own
-ticks are serialised (a tick's patch applies to the previous tick's
-output state); filler slots carry an empty patch on an empty graph.
+ticks are serialised — submitting against a session *settles* (dispatches
+and harvests) its previous tick first, because the new patch applies to
+the state that tick produces — while different sessions' ticks overlap
+freely, in flight included. Delta dispatches keep the fixed ``batch_cap``
+axis (their filler is a cached empty-patch state, and cross-session
+micro-batching already keeps the axis dense). With ``max_sessions`` set,
+opening a session past the cap LRU-evicts the session idle the longest
+(settling its in-flight tick first) — the engine's resident-memory bound,
+counted in ``stats.n_sessions_evicted``.
 
-The engine is synchronous and single-threaded by design — JAX dispatch
-is; overlap comes from batching, not threads. ``clock`` is injectable so
-timeout behaviour is testable without sleeping.
+The engine is single-threaded by design — overlap comes from JAX's async
+dispatch plus batching, not Python threads. ``clock`` and ``ready_fn``
+are injectable so timeout, deadline, and harvest behaviour are testable
+without sleeping or real device timing.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import api
 from repro.core.dist import resolve_batch_shards
-from repro.core.graph import MulticutInstance
+from repro.core.graph import MulticutInstance, resolve_graph_impl
 from repro.core.solver import SolveResult
 from repro.incremental.patch import DeltaPatch, make_patch, pad_patch
 from repro.incremental.state import init_delta_state
 from repro.serve.buckets import (
-    Bucket, BucketPolicy, filler_instance, pad_batch, pad_instance,
-    strip_result,
+    Bucket, BucketPolicy, batch_ladder, decompose_batch, filler_instance,
+    pad_batch, pad_instance, strip_result,
 )
 from repro.serve.router import Route, Router, default_router
 from repro.serve.session import DeltaSession, SessionStore
 
-__all__ = ["DeltaTicket", "EngineStats", "SolveEngine", "SolveTicket"]
+__all__ = ["DeltaTicket", "EngineStats", "RouteWall", "SolveEngine",
+           "SolveTicket"]
 
 
 LATENCY_WINDOW = 65536      # most-recent request latencies kept for
                             # percentile reporting; bounded so a long-lived
                             # engine's memory doesn't grow with traffic
 
+EMA_ALPHA = 0.4             # wall-clock EMA smoothing: heavy enough to
+                            # forget the compile-tainted first dispatches
+                            # within a few samples, light enough not to
+                            # chase per-dispatch jitter
+
+ROW_CAP_FLOOR = 8           # sparse_row_cap_short self-tuning clamp floor
+
+
+@dataclasses.dataclass
+class RouteWall:
+    """Measured wall-clock for one (bucket, route[, warm]) executable:
+    EMAs of the per-dispatch wall and the per-*slot* wall (wall divided
+    by the dispatch's batch slots — the unit adaptive routing compares
+    across routes, since different routes may flush different sizes)."""
+    ema_wall_s: float = 0.0
+    ema_slot_s: float = 0.0
+    n: int = 0
+
 
 @dataclasses.dataclass
 class EngineStats:
     """Counters the benchmarks and tests read; all cumulative except
-    ``latencies_s``, a sliding window of the most recent requests."""
+    ``latencies_s`` (a sliding window of the most recent requests) and
+    ``route_walls`` (per-executable wall EMAs, see :class:`RouteWall`)."""
     n_submitted: int = 0
     n_completed: int = 0
     n_dispatches: int = 0
     n_filler_slots: int = 0     # batch slots served to padding, not requests
     compiles: int = 0           # solver traces triggered through the engine
     n_sessions_opened: int = 0
+    n_sessions_evicted: int = 0  # LRU evictions under max_sessions
     n_delta_submitted: int = 0
     n_delta_completed: int = 0
     n_delta_dispatches: int = 0
     n_delta_filler_slots: int = 0
+    n_deadlined: int = 0        # requests submitted with a deadline
+    n_deadline_missed: int = 0  # ... that completed after it passed
+    inflight_high_water: int = 0
     latencies_s: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    route_walls: dict = dataclasses.field(default_factory=dict)
 
     @property
     def occupancy(self) -> float:
@@ -99,23 +159,56 @@ class EngineStats:
         total = self.n_completed + self.n_filler_slots
         return self.n_completed / total if total else 0.0
 
+    @property
+    def deadline_miss_rate(self) -> float:
+        """Fraction of deadlined requests that missed (0 when none)."""
+        return (self.n_deadline_missed / self.n_deadlined
+                if self.n_deadlined else 0.0)
+
+    def record_wall(self, key, wall_s: float, slots: int) -> None:
+        """Fold one harvested dispatch into the key's wall EMAs."""
+        rw = self.route_walls.get(key)
+        if rw is None:
+            self.route_walls[key] = RouteWall(
+                ema_wall_s=wall_s, ema_slot_s=wall_s / slots, n=1)
+        else:
+            rw.ema_wall_s += EMA_ALPHA * (wall_s - rw.ema_wall_s)
+            rw.ema_slot_s += EMA_ALPHA * (wall_s / slots - rw.ema_slot_s)
+            rw.n += 1
+
+    def wall_ema(self, key) -> float | None:
+        """Expected per-dispatch wall for the key (None until sampled) —
+        what deadline pressure subtracts from the earliest deadline."""
+        rw = self.route_walls.get(key)
+        return rw.ema_wall_s if rw is not None else None
+
+    def slot_ema(self, key, min_samples: int = 1) -> float | None:
+        """Per-slot wall EMA, or None until ``min_samples`` dispatches
+        have been measured — the adaptive router's comparison unit."""
+        rw = self.route_walls.get(key)
+        return (rw.ema_slot_s
+                if rw is not None and rw.n >= min_samples else None)
+
 
 class SolveTicket:
     """Handle for one submitted request. ``result()`` blocks the caller's
     Python thread by pumping the engine until this request's batch has
     been dispatched (force-flushing its queue if the stream has gone
-    quiet), then returns the padding-stripped :class:`SolveResult`."""
+    quiet) and harvested, then returns the padding-stripped
+    :class:`SolveResult`."""
 
-    __slots__ = ("inst", "bucket", "route", "t_submit", "t_done", "_result",
-                 "_engine", "_key")
+    __slots__ = ("inst", "bucket", "route", "t_submit", "t_done",
+                 "deadline", "_result", "_engine", "_key")
 
     def __init__(self, engine: "SolveEngine", inst: MulticutInstance,
-                 bucket: Bucket, route: Route, t_submit: float):
+                 bucket: Bucket, route: Route, t_submit: float,
+                 deadline: float | None = None):
         self._engine = engine
         self.inst = inst
         self.bucket = bucket
         self.route = route
         self.t_submit = t_submit
+        self.deadline = deadline        # absolute (engine-clock) or None
         self.t_done: float | None = None
         self._result: SolveResult | None = None
         self._key = (bucket, route)
@@ -133,24 +226,29 @@ class SolveTicket:
             self._engine.pump()
         if self._result is None:        # partial batch: force my queue out
             self._engine.flush(self._key)
+        if self._result is None:        # dispatched but in flight: wait
+            self._engine._drain_ticket(self)
         assert self._result is not None
         return self._result
 
 
 class DeltaTicket:
     """Handle for one submitted delta tick. Mirrors :class:`SolveTicket`
-    (``result()`` pumps, then force-flushes its own queue); resolving it
-    also writes the updated state back into the session."""
+    (``result()`` pumps, force-flushes its own queue, then waits out the
+    in-flight window); resolving it also writes the updated state back
+    into the session."""
 
-    __slots__ = ("session", "patch", "t_submit", "t_done", "_result",
-                 "_engine", "_key")
+    __slots__ = ("session", "patch", "t_submit", "t_done", "deadline",
+                 "_result", "_engine", "_key")
 
     def __init__(self, engine: "SolveEngine", session: DeltaSession,
-                 patch: DeltaPatch, t_submit: float):
+                 patch: DeltaPatch, t_submit: float,
+                 deadline: float | None = None):
         self._engine = engine
         self.session = session
         self.patch = patch
         self.t_submit = t_submit
+        self.deadline = deadline
         self.t_done: float | None = None
         self._result: SolveResult | None = None
         self._key = session.key
@@ -168,51 +266,113 @@ class DeltaTicket:
             self._engine.pump()
         if self._result is None:
             self._engine.flush_deltas(self._key)
+        if self._result is None:
+            self._engine._drain_ticket(self)
         assert self._result is not None
         return self._result
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unharvested batch: the unready device results
+    plus everything demux needs once they land."""
+    kind: str                   # "solve" | "delta"
+    key: tuple                  # the queue key it dispatched under
+    ema_key: tuple              # the (bucket, STATIC route[, warm]) the
+                                # wall EMA records under — tuned routes
+                                # fold into their static parent so
+                                # adaptive routing compares like to like
+    tickets: list
+    res: object                 # batched SolveResult (device, maybe unready)
+    states2: object | None      # batched DeltaState for delta dispatches
+    t_dispatch: float
+    n_slots: int                # batch axis of this dispatch (ladder rung)
+
+
 class SolveEngine:
-    """Bucketed, routed, micro-batching front end over the executable
-    registry. See the module docstring for the pipeline; construction is
-    cheap (executables compile lazily on first dispatch, or eagerly via
-    :meth:`warmup`)."""
+    """Bucketed, routed, micro-batching, deadline-aware front end over
+    the executable registry. See the module docstring for the pipeline;
+    construction is cheap (executables compile lazily on first dispatch,
+    or eagerly via :meth:`warmup`).
+
+    Async knobs: ``max_inflight`` bounds the per-backend window of
+    dispatched-but-unharvested batches (0 = synchronous engine);
+    ``adaptive_routing`` switches admission from the static size table to
+    measured wall EMAs (see :meth:`repro.serve.router.Router
+    .route_adaptive`); ``min_route_samples`` is how warm every candidate
+    must be before adaptation kicks in; ``tune_short_cap`` enables the
+    per-bucket ``sparse_row_cap_short`` self-tuning; ``max_sessions``
+    LRU-bounds resident delta sessions; ``ready_fn`` overrides the
+    readiness probe (tests inject flags here)."""
 
     def __init__(self, router: Router | None = None,
                  policy: BucketPolicy | None = None, batch_cap: int = 8,
                  flush_timeout_s: float | None = 0.05, clock=time.monotonic,
-                 patch_cap: int = 64):
+                 patch_cap: int = 64, max_inflight: int = 4,
+                 adaptive_routing: bool = False, min_route_samples: int = 3,
+                 tune_short_cap: bool = True,
+                 max_sessions: int | None = None, ready_fn=None):
         if batch_cap < 1:
             raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
         if patch_cap < 1:
             raise ValueError(f"patch_cap must be >= 1, got {patch_cap}")
+        if max_inflight < 0:
+            raise ValueError(f"max_inflight must be >= 0, got "
+                             f"{max_inflight}")
+        if max_sessions is not None and max_sessions < 1:
+            raise ValueError(f"max_sessions must be >= 1 (or None), got "
+                             f"{max_sessions}")
         self.router = router if router is not None else default_router()
         self.policy = policy if policy is not None else BucketPolicy()
         self.batch_cap = batch_cap
         self.patch_cap = patch_cap
         self.flush_timeout_s = flush_timeout_s
+        self.max_inflight = max_inflight
+        self.adaptive_routing = adaptive_routing
+        self.min_route_samples = min_route_samples
+        self.tune_short_cap = tune_short_cap
+        self.max_sessions = max_sessions
         self._clock = clock
+        self._ready = ready_fn if ready_fn is not None else api.tree_ready
         self._queues: dict[tuple[Bucket, Route], deque[SolveTicket]] = {}
         self._delta_queues: dict[tuple[Bucket, Route, bool],
                                  deque[DeltaTicket]] = {}
+        self._inflight: dict[str, deque[_InFlight]] = {}
         self._filler_states: dict[Bucket, object] = {}
+        self._ladders: dict[Route, tuple[int, ...]] = {}
+        self._tuned_routes: dict[tuple[Bucket, Route], Route] = {}
+        self._static_route: dict[Route, Route] = {}
         self.sessions = SessionStore()
         self.stats = EngineStats()
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, inst: MulticutInstance,
-               route: Route | None = None) -> SolveTicket:
-        """Admit one request. ``route`` pins the routing decision (else the
-        engine's router decides from the instance size); bucketing may
-        reject instances over the policy caps with ``ValueError``."""
-        if route is None:
-            route = self.router.route_instance(inst)
-        self._check_batch_split(route)
+    def submit(self, inst: MulticutInstance, route: Route | None = None,
+               deadline_s: float | None = None) -> SolveTicket:
+        """Admit one request. ``route`` pins the routing decision (else
+        the engine routes — statically by size, or by measured wall EMAs
+        under ``adaptive_routing``); ``deadline_s`` is a relative
+        completion deadline driving early partial flushes (and miss
+        accounting — the engine never drops a late request). Bucketing
+        may reject instances over the policy caps with ``ValueError``."""
         bucket = self.policy.bucket_of(inst)
-        ticket = SolveTicket(self, inst, bucket, route, self._clock())
+        if route is None:
+            if self.adaptive_routing:
+                route = self.router.route_adaptive(
+                    inst.num_nodes, inst.num_edges, bucket, self.stats,
+                    traffic="solve", min_samples=self.min_route_samples)
+            else:
+                route = self.router.route_instance(inst)
+        route = self._resolve_route(bucket, route, inst)
+        self._check_batch_split(route)
+        now = self._clock()
+        deadline = None if deadline_s is None else now + deadline_s
+        ticket = SolveTicket(self, inst, bucket, route, now,
+                             deadline=deadline)
         self._queues.setdefault((bucket, route), deque()).append(ticket)
         self.stats.n_submitted += 1
+        if deadline is not None:
+            self.stats.n_deadlined += 1
         self.pump()                     # full queues dispatch immediately
         return ticket
 
@@ -233,13 +393,22 @@ class SolveEngine:
 
         The cold open dispatches immediately (sessions are expected to be
         long-lived — amortising the open across a batch would couple
-        unrelated sessions' start-up latencies)."""
+        unrelated sessions' start-up latencies). With ``max_sessions``
+        set, the least-recently-used session is settled and evicted
+        first when the store is full."""
         if route is None:
             route = self.router.route_instance(inst, traffic="delta")
+        bucket = self.policy.bucket_of(inst)
+        route = self._resolve_route(bucket, route, inst)
         if warm and route.mode == "d":
             raise ValueError("warm delta sessions need a primal solution "
                              "to lift; mode 'd' produces none")
-        bucket = self.policy.bucket_of(inst)
+        if self.max_sessions is not None:
+            while len(self.sessions) >= self.max_sessions:
+                victim = self.sessions.lru()
+                self._settle_session(victim)
+                self.sessions.close(victim.session_id)
+                self.stats.n_sessions_evicted += 1
         padded = pad_instance(inst, bucket)
         traces0 = api.trace_count()
         res, state = api.solve_with_state(padded, mode=route.mode,
@@ -257,31 +426,42 @@ class SolveEngine:
         self.stats.n_sessions_opened += 1
         return session
 
-    def submit_delta(self, session_id: str,
-                     patch: DeltaPatch) -> DeltaTicket:
+    def submit_delta(self, session_id: str, patch: DeltaPatch,
+                     deadline_s: float | None = None) -> DeltaTicket:
         """Queue one delta tick against a session. Ticks from *different*
-        sessions in the same (bucket, route, warm) micro-batch together;
-        ticks of the *same* session are serialised — an un-dispatched
-        previous tick is force-flushed first, because this tick's patch
-        applies to the state that tick will produce."""
+        sessions in the same (bucket, route, warm) micro-batch together
+        and overlap in flight; ticks of the *same* session are serialised
+        — an unsettled previous tick is dispatched and harvested first,
+        because this tick's patch applies to the state it produces."""
         session = self.sessions.get(session_id)
-        if session.pending is not None and not session.pending.done:
-            self.flush_deltas(session.key)
+        self._settle_session(session)
         patch = pad_patch(patch, self.patch_cap)
-        ticket = DeltaTicket(self, session, patch, self._clock())
+        now = self._clock()
+        deadline = None if deadline_s is None else now + deadline_s
+        ticket = DeltaTicket(self, session, patch, now, deadline=deadline)
         session.pending = ticket
         self._delta_queues.setdefault(session.key, deque()).append(ticket)
         self.stats.n_delta_submitted += 1
+        if deadline is not None:
+            self.stats.n_deadlined += 1
         self.pump()
         return ticket
 
     def close_session(self, session_id: str) -> DeltaSession:
-        """Dispatch any in-flight tick, then drop the session (its carried
+        """Settle any in-flight tick, then drop the session (its carried
         device arrays become collectable)."""
         session = self.sessions.get(session_id)
-        if session.pending is not None and not session.pending.done:
-            self.flush_deltas(session.key)
+        self._settle_session(session)
         return self.sessions.close(session_id)
+
+    def _settle_session(self, session: DeltaSession) -> None:
+        """Bring a session fully up to date: dispatch its queued tick (if
+        any) and harvest it out of the in-flight window, so
+        ``session.state`` reflects every submitted patch."""
+        t = session.pending
+        if t is not None and not t.done:
+            self.flush_deltas(session.key)
+            self._drain_ticket(t)
 
     def _check_batch_split(self, route: Route) -> None:
         """Admission/warmup guard: the dispatch batch axis must split
@@ -294,53 +474,158 @@ class SolveEngine:
                 f"route's {shards} batch shard(s); the dispatch batch "
                 f"axis must split evenly across devices")
 
+    # -- routing refinement -------------------------------------------------
+
+    def _resolve_route(self, bucket: Bucket, route: Route,
+                       inst: MulticutInstance | None) -> Route:
+        """Per-(bucket, route) ``sparse_row_cap_short`` self-tuning:
+        sparse-resolved routes get a cap calibrated to the p95 of the
+        first seen instance's attractive-degree histogram (clamped to
+        ``[ROW_CAP_FLOOR, sparse_row_cap]``), cached so every later
+        request on the bucket reuses the same tuned executable. The
+        covering caps in the degree-bucketed separation make any value
+        bit-identical — this tunes wall-clock only. Dense routes, direct
+        ``api.solve`` callers, and engines with ``tune_short_cap=False``
+        keep the static default."""
+        if not self.tune_short_cap:
+            return route
+        impl = resolve_graph_impl(route.config.graph_impl, bucket.nodes,
+                                  route.config.sparse_threshold)
+        if impl != "sparse":
+            return route
+        cache_key = (bucket, route)
+        tuned = self._tuned_routes.get(cache_key)
+        if tuned is None:
+            if inst is None:        # shape-only warmup: pin the static cap
+                tuned = route
+            else:
+                cap = self._p95_attractive_degree(inst, route)
+                tuned = dataclasses.replace(route, config=dataclasses.replace(
+                    route.config, sparse_row_cap_short=cap))
+            self._tuned_routes[cache_key] = tuned
+            self._static_route[tuned] = route
+        return tuned
+
+    @staticmethod
+    def _p95_attractive_degree(inst: MulticutInstance, route: Route) -> int:
+        """p95 of the per-node attractive (cost > 0) degree over valid
+        nodes — the short-row cap that covers ~95% of CSR rows in the
+        cheap separation bucket."""
+        u = np.asarray(inst.u)
+        v = np.asarray(inst.v)
+        att = np.asarray(inst.edge_valid) & (np.asarray(inst.cost) > 0)
+        deg = (np.bincount(u[att], minlength=inst.num_nodes)
+               + np.bincount(v[att], minlength=inst.num_nodes))
+        deg = deg[np.asarray(inst.node_valid)]
+        p95 = float(np.percentile(deg, 95)) if deg.size else 0.0
+        return int(np.clip(math.ceil(p95), ROW_CAP_FLOOR,
+                           route.config.sparse_row_cap))
+
+    def _ladder(self, route: Route) -> tuple[int, ...]:
+        rungs = self._ladders.get(route)
+        if rungs is None:
+            rungs = batch_ladder(self.batch_cap,
+                                 resolve_batch_shards(route.batch_shards))
+            self._ladders[route] = rungs
+        return rungs
+
     # -- batching / dispatch ------------------------------------------------
 
     def pump(self, force: bool = False) -> int:
-        """One scheduling step: dispatch every full batch, plus partial
-        batches whose head request has waited past ``flush_timeout_s``
-        (or every non-empty queue when ``force``). Returns the number of
-        dispatches issued."""
+        """One scheduling step: harvest completed in-flight dispatches,
+        then dispatch every full batch plus partial batches whose head
+        request has waited past ``flush_timeout_s`` or whose earliest
+        deadline is under pressure (now + the route's EMA wall would
+        overshoot it) — tightest-deadline queues first — then harvest
+        again. ``force`` flushes every non-empty queue. Returns the
+        number of dispatches issued."""
+        self._harvest()
         n = 0
-        for key, q in self._queues.items():
+        for key, q in self._ordered(self._queues):
             while len(q) >= self.batch_cap:
                 self._dispatch(key, [q.popleft()
-                                     for _ in range(self.batch_cap)])
+                                     for _ in range(self.batch_cap)],
+                               self.batch_cap)
                 n += 1
-            # re-read the clock per queue: a multi-second blocking dispatch
-            # above may have pushed later queues' heads past their timeout
+            # re-read the clock per queue: a blocking (window-full)
+            # dispatch above may have pushed later queues' heads past
+            # their timeout or deadline margin
             now = self._clock()
-            timed_out = (q and self.flush_timeout_s is not None
-                         and now - q[0].t_submit >= self.flush_timeout_s)
-            if q and (force or timed_out):
-                self._dispatch(key, [q.popleft() for _ in range(len(q))])
-                n += 1
-        for key, q in self._delta_queues.items():
+            if q and (force or self._timed_out(q, now)
+                      or self._deadline_pressure(key, q, now)):
+                n += self._flush_solve_queue(key, q)
+        for key, q in self._ordered(self._delta_queues):
             while len(q) >= self.batch_cap:
                 self._dispatch_delta(key, [q.popleft()
                                            for _ in range(self.batch_cap)])
                 n += 1
             now = self._clock()
-            timed_out = (q and self.flush_timeout_s is not None
-                         and now - q[0].t_submit >= self.flush_timeout_s)
-            if q and (force or timed_out):
-                self._dispatch_delta(key,
-                                     [q.popleft() for _ in range(len(q))])
-                n += 1
+            if q and (force or self._timed_out(q, now)
+                      or self._deadline_pressure(key, q, now)):
+                while q:
+                    self._dispatch_delta(
+                        key, [q.popleft()
+                              for _ in range(min(len(q), self.batch_cap))])
+                    n += 1
+        self._harvest()
         return n
+
+    @staticmethod
+    def _ordered(queues: dict):
+        """Queues sorted by their earliest queued deadline (deadline-free
+        queues last, in insertion order) — the flush order under load."""
+        def earliest(q):
+            ds = [t.deadline for t in q if t.deadline is not None]
+            return min(ds) if ds else math.inf
+        return sorted(queues.items(), key=lambda kv: earliest(kv[1]))
+
+    def _timed_out(self, q, now: float) -> bool:
+        return (self.flush_timeout_s is not None
+                and now - q[0].t_submit >= self.flush_timeout_s)
+
+    def _deadline_pressure(self, key, q, now: float) -> bool:
+        """True when waiting any longer risks missing the earliest queued
+        deadline: the route's expected wall (EMA; ``flush_timeout_s`` as
+        a cold fallback) no longer fits before it."""
+        ds = [t.deadline for t in q if t.deadline is not None]
+        if not ds:
+            return False
+        est = self.stats.wall_ema(self._ema_key(key))
+        if est is None:
+            est = self.flush_timeout_s or 0.0
+        return now + est >= min(ds)
+
+    def _ema_key(self, key):
+        """Queue key → wall-EMA key: tuned routes record under their
+        static parent so adaptive routing compares like to like."""
+        bucket, route = key[0], key[1]
+        return (bucket, self._static_route.get(route, route), *key[2:])
 
     def flush(self, key: tuple[Bucket, Route] | None = None) -> int:
         """Force-dispatch pending requests — one queue (``key``) or all of
-        them — regardless of occupancy or timeout."""
+        them — regardless of occupancy, timeout, or deadline margin."""
         if key is None:
             return self.pump(force=True)
         q = self._queues.get(key)
         if not q:
             return 0
         n = 0
-        while q:
-            take = [q.popleft() for _ in range(min(len(q), self.batch_cap))]
-            self._dispatch(key, take)
+        while len(q) >= self.batch_cap:
+            self._dispatch(key, [q.popleft()
+                                 for _ in range(self.batch_cap)],
+                           self.batch_cap)
+            n += 1
+        if q:
+            n += self._flush_solve_queue(key, q)
+        return n
+
+    def _flush_solve_queue(self, key, q) -> int:
+        """Dispatch a partial queue over the sub-batch ladder: greedy
+        power-of-two chunks instead of one batch_cap-padded dispatch."""
+        _, route = key
+        n = 0
+        for take, size in decompose_batch(len(q), self._ladder(route)):
+            self._dispatch(key, [q.popleft() for _ in range(take)], size)
             n += 1
         return n
 
@@ -363,25 +648,21 @@ class SolveEngine:
         return n
 
     def _dispatch(self, key: tuple[Bucket, Route],
-                  tickets: list[SolveTicket]) -> None:
+                  tickets: list[SolveTicket], size: int) -> None:
         bucket, route = key
-        batch = pad_batch([t.inst for t in tickets], bucket, self.batch_cap)
+        batch = pad_batch([t.inst for t in tickets], bucket, size)
         fn = api.compiled_solve(mode=route.mode, config=route.config,
                                 backend=route.backend, batched=True,
                                 batch_shards=route.batch_shards)
         traces0 = api.trace_count()
-        res = fn(batch)
-        jax.block_until_ready(res)      # latency honesty: results are real
+        res = fn(batch)                 # non-blocking: device futures
         self.stats.compiles += api.trace_count() - traces0
-        now = self._clock()
-        for b, t in enumerate(tickets):
-            single = jax.tree.map(lambda x: x[b], res)
-            t._result = strip_result(single, t.inst.num_nodes)
-            t.t_done = now
-            self.stats.latencies_s.append(now - t.t_submit)
         self.stats.n_dispatches += 1
-        self.stats.n_completed += len(tickets)
-        self.stats.n_filler_slots += self.batch_cap - len(tickets)
+        self._push(_InFlight(kind="solve", key=key,
+                             ema_key=self._ema_key(key), tickets=tickets,
+                             res=res, states2=None,
+                             t_dispatch=self._clock(), n_slots=size),
+                   route.backend)
 
     def _filler_state(self, bucket: Bucket):
         """Per-bucket cached filler: a fresh DeltaState around the
@@ -408,69 +689,190 @@ class SolveEngine:
                                 backend=route.backend, warm=warm,
                                 batched=True)
         traces0 = api.trace_count()
-        res, states2, _info = fn(sbatch, pbatch)
-        jax.block_until_ready(res)
+        res, states2, _info = fn(sbatch, pbatch)    # non-blocking
         self.stats.compiles += api.trace_count() - traces0
-        now = self._clock()
-        for b, t in enumerate(tickets):
-            t.session.state = jax.tree.map(lambda x: x[b], states2)
-            single = jax.tree.map(lambda x: x[b], res)
-            t._result = strip_result(single, t.session.num_nodes)
-            t.session.last_result = t._result
-            t.session.n_ticks += 1
-            if t.session.pending is t:
-                t.session.pending = None
-            t.t_done = now
-            self.stats.latencies_s.append(now - t.t_submit)
         self.stats.n_delta_dispatches += 1
-        self.stats.n_delta_completed += len(tickets)
-        self.stats.n_delta_filler_slots += n_fill
+        self._push(_InFlight(kind="delta", key=key,
+                             ema_key=self._ema_key(key), tickets=tickets,
+                             res=res, states2=states2,
+                             t_dispatch=self._clock(),
+                             n_slots=self.batch_cap),
+                   route.backend)
+
+    # -- in-flight window ---------------------------------------------------
+
+    def _push(self, entry: _InFlight, backend: str) -> None:
+        """Park a dispatch on its backend's in-flight window. A full
+        window back-pressures by harvesting (blocking on) the *oldest*
+        entry only — the one most likely already done — so dispatch keeps
+        overlapping with device execution. ``max_inflight=0`` finalises
+        immediately: the synchronous engine."""
+        dq = self._inflight.setdefault(backend, deque())
+        dq.append(entry)
+        while len(dq) > self.max_inflight:
+            self._finalize(dq.popleft())
+        total = sum(len(d) for d in self._inflight.values())
+        self.stats.inflight_high_water = max(
+            self.stats.inflight_high_water, total)
+
+    def _harvest(self) -> int:
+        """Finalise every in-flight dispatch whose device results are
+        ready, oldest-first per backend, without blocking on any that
+        are not. Returns the number harvested."""
+        n = 0
+        for dq in self._inflight.values():
+            while dq and self._ready(dq[0].res):
+                self._finalize(dq.popleft())
+                n += 1
+        return n
+
+    def drain(self) -> int:
+        """Blocking harvest of the whole in-flight window: after this,
+        every dispatched request's ticket is resolved."""
+        n = 0
+        for dq in self._inflight.values():
+            while dq:
+                self._finalize(dq.popleft())
+                n += 1
+        return n
+
+    def _drain_ticket(self, ticket) -> None:
+        """Finalise in-flight entries (oldest-first per backend) until
+        the given ticket resolves. The ticket must already have been
+        dispatched (its queue flushed)."""
+        for dq in self._inflight.values():
+            while dq and not ticket.done:
+                self._finalize(dq.popleft())
+            if ticket.done:
+                return
+
+    def _finalize(self, entry: _InFlight) -> None:
+        """Demux one dispatch: block until its device results are real
+        (a no-op when harvested ready), strip and hand each ticket its
+        result, write delta states back to their sessions, and fold the
+        measured wall into the route's EMAs and deadline counters."""
+        jax.block_until_ready(entry.res)
+        now = self._clock()
+        self.stats.record_wall(entry.ema_key, now - entry.t_dispatch,
+                               entry.n_slots)
+        if entry.kind == "solve":
+            for b, t in enumerate(entry.tickets):
+                single = jax.tree.map(lambda x, b=b: x[b], entry.res)
+                t._result = strip_result(single, t.inst.num_nodes)
+                t.t_done = now
+                self._account_latency(t, now)
+            self.stats.n_completed += len(entry.tickets)
+            self.stats.n_filler_slots += entry.n_slots - len(entry.tickets)
+        else:
+            for b, t in enumerate(entry.tickets):
+                t.session.state = jax.tree.map(lambda x, b=b: x[b],
+                                               entry.states2)
+                single = jax.tree.map(lambda x, b=b: x[b], entry.res)
+                t._result = strip_result(single, t.session.num_nodes)
+                t.session.last_result = t._result
+                t.session.n_ticks += 1
+                if t.session.pending is t:
+                    t.session.pending = None
+                t.t_done = now
+                self._account_latency(t, now)
+            self.stats.n_delta_completed += len(entry.tickets)
+            self.stats.n_delta_filler_slots += (entry.n_slots
+                                                - len(entry.tickets))
+
+    def _account_latency(self, ticket, now: float) -> None:
+        self.stats.latencies_s.append(now - ticket.t_submit)
+        if ticket.deadline is not None and now > ticket.deadline:
+            self.stats.n_deadline_missed += 1
 
     # -- lifecycle helpers --------------------------------------------------
 
-    def warmup(self, shapes) -> int:
-        """Pre-compile the executables the given (num_nodes, num_edges)
-        example shapes would hit: each shape is routed and bucketed exactly
-        like a real request, then its executable runs once on an all-filler
-        batch. Returns the number of fresh compilations. Requests landing
-        in warmed (bucket, route)s never pay a compile."""
-        from repro.serve.buckets import filler_instance
+    def warmup(self, examples, route: Route | None = None) -> int:
+        """Pre-compile the executables the given examples would hit: each
+        example — a ``(num_nodes, num_edges)`` tuple or a full
+        :class:`MulticutInstance` — is routed and bucketed exactly like a
+        real request (``route`` pins the routing, e.g. to warm every
+        candidate route for adaptive serving), then its executable runs
+        once on an all-filler batch at *every* sub-batch ladder rung.
+        Returns the number of fresh compilations; requests landing in
+        warmed (bucket, route)s never pay a compile.
+
+        Instance examples additionally feed the ``sparse_row_cap_short``
+        self-tuning, so the warmed executable is the tuned one; shape
+        tuples pin the static cap for their (bucket, route) instead
+        (there is no degree histogram to tune from)."""
         traces0 = api.trace_count()
         seen = set()
-        for (num_nodes, num_edges) in shapes:
+        for ex in examples:
+            if isinstance(ex, MulticutInstance):
+                inst, (num_nodes, num_edges) = ex, (ex.num_nodes,
+                                                    ex.num_edges)
+            else:
+                inst, (num_nodes, num_edges) = None, ex
             bucket = self.policy.bucket_for(num_nodes, num_edges)
-            route = self.router.route(num_nodes, num_edges)
-            self._check_batch_split(route)
-            if (bucket, route) in seen:
+            r = (route if route is not None
+                 else self.router.route(num_nodes, num_edges))
+            r = self._resolve_route(bucket, r, inst)
+            self._check_batch_split(r)
+            if (bucket, r) in seen:
                 continue
-            seen.add((bucket, route))
-            fn = api.compiled_solve(mode=route.mode, config=route.config,
-                                    backend=route.backend, batched=True,
-                                    batch_shards=route.batch_shards)
-            batch = pad_batch([filler_instance(bucket)], bucket,
-                              self.batch_cap)
-            jax.block_until_ready(fn(batch))
+            seen.add((bucket, r))
+            fn = api.compiled_solve(mode=r.mode, config=r.config,
+                                    backend=r.backend, batched=True,
+                                    batch_shards=r.batch_shards)
+            for size in self._ladder(r):
+                batch = pad_batch([filler_instance(bucket)], bucket, size)
+                jax.block_until_ready(fn(batch))
         fresh = api.trace_count() - traces0
         self.stats.compiles += fresh
         return fresh
 
+    def calibration(self) -> dict:
+        """Portable calibration snapshot: the measured per-(bucket, route)
+        wall EMAs plus the tuned-route cache. Feed it to a fresh engine's
+        :meth:`load_calibration` so adaptive routing, deadline margins,
+        and row-cap tuning all start warm — what the sustained-load
+        benchmark does between its calibration and timed engines."""
+        return {
+            "route_walls": {k: dataclasses.replace(v) for k, v in
+                            self.stats.route_walls.items()},
+            "tuned_routes": dict(self._tuned_routes),
+            "static_route": dict(self._static_route),
+        }
+
+    def load_calibration(self, cal: dict) -> None:
+        """Adopt another engine's :meth:`calibration` snapshot."""
+        self.stats.route_walls.update(
+            {k: dataclasses.replace(v) for k, v in
+             cal["route_walls"].items()})
+        self._tuned_routes.update(cal["tuned_routes"])
+        self._static_route.update(cal["static_route"])
+
     def solve_stream(self, instances) -> list[SolveResult]:
-        """Convenience driver: submit everything, drain, and return results
-        in submission order — the engine equivalent of mapping
-        ``api.solve`` over the stream."""
+        """Convenience driver: submit everything, flush, drain the
+        in-flight window, and return results in submission order — the
+        engine equivalent of mapping ``api.solve`` over the stream."""
         tickets = self.submit_many(instances)
         self.flush()
+        self.drain()
         return [t.result() for t in tickets]
 
     @property
     def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
         return (sum(len(q) for q in self._queues.values())
                 + sum(len(q) for q in self._delta_queues.values()))
+
+    @property
+    def inflight(self) -> int:
+        """Dispatches issued but not yet harvested."""
+        return sum(len(dq) for dq in self._inflight.values())
 
     def __repr__(self):
         return (f"SolveEngine(batch_cap={self.batch_cap}, "
                 f"flush_timeout_s={self.flush_timeout_s}, "
+                f"max_inflight={self.max_inflight}, "
                 f"queues={len(self._queues)}, pending={self.pending}, "
+                f"inflight={self.inflight}, "
                 f"served={self.stats.n_completed}, "
                 f"sessions={len(self.sessions)}, "
                 f"delta_served={self.stats.n_delta_completed}, "

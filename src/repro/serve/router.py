@@ -117,6 +117,44 @@ class Router:
                 out.append(r)
         return tuple(out)
 
+    def candidates(self, traffic: str = "solve") -> tuple[Route, ...]:
+        """Every distinct Route a request of this traffic class *could*
+        take under some size — the adaptive router's choice set. Static
+        rule order is preserved (default last)."""
+        if traffic not in TRAFFIC:
+            raise ValueError(f"unknown traffic class {traffic!r}; "
+                             f"expected one of {TRAFFIC}")
+        out = []
+        for rule in self.rules:
+            if (rule.traffic in ("any", traffic)
+                    and rule.route not in out):
+                out.append(rule.route)
+        if self.default not in out:
+            out.append(self.default)
+        return tuple(out)
+
+    def route_adaptive(self, num_nodes: int, num_edges: int, bucket,
+                       stats, traffic: str = "solve",
+                       min_samples: int = 3) -> Route:
+        """Latency-adaptive routing: pick the candidate route with the
+        lowest measured per-slot wall-clock EMA for this bucket
+        (:meth:`repro.serve.engine.EngineStats.slot_ema`). Falls back to
+        the static size table (:meth:`route`) until *every* candidate has
+        at least ``min_samples`` completed dispatches on the bucket —
+        comparing a warm EMA against nothing would lock in whichever
+        route happened to run first, so the engine instead keeps routing
+        statically (exploring for free: static traffic itself warms the
+        EMAs of whichever routes it exercises; a calibration pass warms
+        the rest)."""
+        static = self.route(num_nodes, num_edges, traffic)
+        cands = self.candidates(traffic)
+        if len(cands) < 2:
+            return static
+        emas = [stats.slot_ema((bucket, r), min_samples) for r in cands]
+        if any(e is None for e in emas):
+            return static
+        return cands[min(range(len(cands)), key=lambda i: emas[i])]
+
     @classmethod
     def from_spec(cls, spec: dict) -> "Router":
         """Build a router from a JSON-able dict::

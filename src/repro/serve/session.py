@@ -18,6 +18,7 @@ still in flight), while patches from different sessions in the same
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -54,10 +55,17 @@ class DeltaSession:
 
 
 class SessionStore:
-    """Engine-owned registry of live sessions (id allocation + lookup)."""
+    """Engine-owned registry of live sessions (id allocation + lookup).
+
+    Kept in recency order: :meth:`get` and :meth:`touch` move a session to
+    the most-recently-used end, so :meth:`lru` is always the session idle
+    the longest — the engine's eviction candidate when ``max_sessions`` is
+    exceeded (each open session carries a full DeltaState on device, so
+    the store is the serving tier's resident-memory knob)."""
 
     def __init__(self):
-        self._sessions: dict[str, DeltaSession] = {}
+        self._sessions: collections.OrderedDict[str, DeltaSession] = \
+            collections.OrderedDict()
         self._next = 0
 
     def allocate_id(self) -> str:
@@ -73,10 +81,20 @@ class SessionStore:
 
     def get(self, session_id: str) -> DeltaSession:
         try:
-            return self._sessions[session_id]
+            sess = self._sessions[session_id]
         except KeyError:
             raise KeyError(f"unknown session {session_id!r}; open: "
                            f"{sorted(self._sessions)}") from None
+        self._sessions.move_to_end(session_id)
+        return sess
+
+    def touch(self, session_id: str) -> None:
+        """Mark a session recently used without fetching it."""
+        self._sessions.move_to_end(session_id)
+
+    def lru(self) -> Optional[DeltaSession]:
+        """The least-recently-used open session (None when empty)."""
+        return next(iter(self._sessions.values()), None)
 
     def close(self, session_id: str) -> DeltaSession:
         return self._sessions.pop(self.get(session_id).session_id)

@@ -62,6 +62,34 @@ def test_gate_skips_new_and_dropped_cases():
     assert gate_failures(base, fresh) == []
 
 
+def _serve_report(occ=1.0, miss=0.0):
+    return {"backend": "cpu", "modes": {
+        "serve-mixed64": {"wall_s": 6.0, "objective": -5.0,
+                          "occupancy": occ, "deadline_miss_rate": miss}}}
+
+
+def test_gate_fails_on_occupancy_drop():
+    fails = gate_failures(_serve_report(occ=1.0), _serve_report(occ=0.9))
+    assert len(fails) == 1 and "occupancy" in fails[0]
+
+
+def test_gate_tolerates_small_occupancy_drop():
+    assert gate_failures(_serve_report(occ=1.0),
+                         _serve_report(occ=0.96)) == []
+
+
+def test_gate_fails_on_miss_rate_rise():
+    fails = gate_failures(_serve_report(miss=0.0), _serve_report(miss=0.2))
+    assert len(fails) == 1 and "deadline_miss_rate" in fails[0]
+
+
+def test_gate_allows_miss_rate_jitter_and_improvement():
+    assert gate_failures(_serve_report(miss=0.0),
+                         _serve_report(miss=0.03)) == []
+    assert gate_failures(_serve_report(occ=0.8, miss=0.2),
+                         _serve_report(occ=1.0, miss=0.0)) == []
+
+
 def test_main_exits_nonzero_on_regression(tmp_path, capsys):
     b = tmp_path / "base.json"
     f = tmp_path / "fresh.json"

@@ -1,0 +1,365 @@
+"""The async serving engine: overlapped dispatch + harvest, in-flight
+backpressure, deadline-driven flushing/accounting, latency-adaptive
+routing, the sub-batch ladder, and sparse row-cap self-tuning.
+
+Everything timing-shaped is driven through the injectable ``clock`` and
+``ready_fn`` — no sleeps, no reliance on real device latency. The one
+contract that matters most: per-request results are **bit-identical**
+between the synchronous engine (``max_inflight=0``) and the overlapped
+one, because the async window reorders only waiting, never the compiled
+executables or their operands.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import random_instance
+from repro.core.solver import SolverConfig
+from repro.serve import (
+    BucketPolicy, Route, Router, RoutingRule, SolveEngine, batch_ladder,
+    decompose_batch, pad_instance,
+)
+
+CFG_DENSE = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4,
+                         graph_impl="dense")
+CFG_SPARSE = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4,
+                          graph_impl="sparse", sparse_row_cap=64)
+ROUTE_D = Route(mode="pd", config=CFG_DENSE)
+ROUTE_S = Route(mode="pd", config=CFG_SPARSE)
+POLICY = BucketPolicy(node_floor=16, edge_floor=64)
+
+
+def _router():
+    """Small → dense, default sparse: two candidates for the adaptive
+    router to arbitrate between."""
+    return Router(rules=[RoutingRule(route=ROUTE_D, max_nodes=24)],
+                  default=ROUTE_S)
+
+
+def _mixed_stream(n):
+    rng = np.random.default_rng(17)
+    return [random_instance(int(rng.integers(8, 48)), 0.4, seed=100 + s)
+            for s in range(n)]
+
+
+def _small(seed):
+    return random_instance(12, 0.5, seed=seed, pad_edges=64, pad_nodes=16)
+
+
+def _large(seed):
+    return random_instance(28, 0.4, seed=seed, pad_edges=256, pad_nodes=32)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+class Gate:
+    """Injectable readiness probe: nothing harvests until opened (real
+    readiness still required afterwards, so demux never sees garbage)."""
+    def __init__(self):
+        self.open = False
+
+    def __call__(self, tree):
+        return self.open and api.tree_ready(tree)
+
+
+def _bit_eq(a, b):
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# the sub-batch ladder
+# ---------------------------------------------------------------------------
+
+def test_batch_ladder_shapes():
+    assert batch_ladder(8) == (8, 4, 2, 1)
+    assert batch_ladder(1) == (1,)
+    assert batch_ladder(6) == (6, 4, 2, 1)
+    assert batch_ladder(8, shards=4) == (8, 4)
+    assert batch_ladder(4, shards=2) == (4, 2)
+    with pytest.raises(ValueError):
+        batch_ladder(8, shards=3)       # cap not a multiple of shards
+    with pytest.raises(ValueError):
+        batch_ladder(0)
+
+
+def test_decompose_batch_greedy_and_exact():
+    assert decompose_batch(8, (8, 4, 2, 1)) == [(8, 8)]
+    assert decompose_batch(5, (8, 4, 2, 1)) == [(4, 4), (1, 1)]
+    assert decompose_batch(3, (8, 4)) == [(3, 4)]   # coarse ladder pads
+    with pytest.raises(ValueError):
+        decompose_batch(0, (4, 2, 1))
+    # with a shards=1 ladder the decomposition is exact for every n:
+    # zero filler slots no matter how a partial flush falls
+    for cap in (4, 8):
+        rungs = batch_ladder(cap)
+        for n in range(1, 3 * cap + 1):
+            chunks = decompose_batch(n, rungs)
+            assert sum(t for t, _ in chunks) == n
+            assert sum(s for _, s in chunks) == n
+
+
+def test_partial_flush_uses_ladder_zero_filler():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None, max_inflight=0)
+    tickets = eng.submit_many([_small(s) for s in range(5)])
+    eng.flush()
+    assert all(t.done for t in tickets)
+    assert eng.stats.n_dispatches == 2          # 5 = 4 + 1, not one 8-pad
+    assert eng.stats.n_filler_slots == 0
+    assert eng.stats.occupancy == 1.0
+
+
+# ---------------------------------------------------------------------------
+# overlapped dispatch: harvest, backpressure, bit-identity
+# ---------------------------------------------------------------------------
+
+def test_async_bit_identical_to_sync():
+    insts = _mixed_stream(12)
+    r_sync = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                         flush_timeout_s=None,
+                         max_inflight=0).solve_stream(insts)
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, max_inflight=4)
+    r_async = eng.solve_stream(insts)
+    assert eng.stats.inflight_high_water >= 1
+    for a, b in zip(r_sync, r_async):
+        assert _bit_eq(a.objective, b.objective)
+        assert _bit_eq(a.lower_bound, b.lower_bound)
+        assert _bit_eq(a.lb_history, b.lb_history)
+        assert np.array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+def test_harvest_after_pump_resolves_tickets():
+    gate = Gate()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None, max_inflight=8, ready_fn=gate)
+    tickets = eng.submit_many([_small(s) for s in range(2)])
+    assert eng.stats.n_dispatches == 1          # full batch went out...
+    assert not any(t.done for t in tickets)     # ...but is still in flight
+    assert eng.inflight == 1
+    # let the device genuinely finish: the gate (not readiness) must be
+    # the only thing holding the harvest back
+    jax.block_until_ready(eng._inflight["reference"][0].res)
+    assert eng.pump() == 0                      # closed gate: no harvest
+    assert not any(t.done for t in tickets)
+    gate.open = True
+    assert eng.pump() == 0                      # nothing new dispatched...
+    assert all(t.done for t in tickets)         # ...but harvest resolved
+    assert eng.inflight == 0
+    assert eng.stats.n_completed == 2
+
+
+def test_inflight_window_backpressure():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None, max_inflight=2,
+                      ready_fn=lambda tree: False)
+    tickets = eng.submit_many([_small(s) for s in range(6)])
+    # 3 full batches dispatched; the window holds 2, so the 3rd dispatch
+    # blocked on (finalised) the oldest — in order
+    assert eng.stats.n_dispatches == 3
+    assert eng.inflight == 2
+    assert eng.stats.inflight_high_water == 2
+    assert tickets[0].done and tickets[1].done
+    assert not any(t.done for t in tickets[2:])
+    eng.drain()                                 # blocking harvest ignores
+    assert all(t.done for t in tickets)         # the never-ready probe
+    assert eng.inflight == 0
+
+
+def test_max_inflight_zero_is_synchronous():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=2,
+                      flush_timeout_s=None, max_inflight=0,
+                      ready_fn=lambda tree: False)
+    tickets = eng.submit_many([_small(s) for s in range(2)])
+    assert all(t.done for t in tickets)         # finalised at dispatch
+    assert eng.inflight == 0
+    assert eng.stats.inflight_high_water == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines: pressure-driven flushing + miss accounting
+# ---------------------------------------------------------------------------
+
+def test_deadline_pressure_flushes_early():
+    clock = FakeClock()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=10.0, clock=clock, max_inflight=0,
+                      tune_short_cap=False)
+    inst = _small(0)
+    bucket = eng.policy.bucket_of(inst)
+    eng.stats.record_wall((bucket, ROUTE_D), 1.0, 8)    # expected wall: 1s
+    t = eng.submit(inst, deadline_s=3.0)
+    assert not t.done
+    clock.advance(1.0)
+    assert eng.pump() == 0      # 1.0 + 1.0 < 3.0: margin still holds
+    clock.advance(1.2)
+    assert eng.pump() == 1      # 2.2 + 1.0 >= 3.0: flush NOW
+    assert t.done
+    assert eng.stats.n_deadlined == 1
+    assert eng.stats.n_deadline_missed == 0     # completed at 2.2 < 3.0
+
+    # a deadline the clock blows past still completes — late, and counted
+    # as missed. Leave headroom at submit time (no pressure yet), then
+    # jump the clock beyond the deadline before the next pump.
+    est = eng.stats.wall_ema((bucket, ROUTE_D))
+    t2 = eng.submit(inst, deadline_s=est + 1.0)
+    assert not t2.done                          # no pressure at submit
+    clock.advance(est + 2.0)                    # now past the deadline
+    eng.pump()
+    assert t2.done
+    assert eng.stats.n_deadlined == 2
+    assert eng.stats.n_deadline_missed == 1
+    assert eng.stats.deadline_miss_rate == pytest.approx(0.5)
+
+
+def test_tightest_deadline_queue_flushes_first():
+    clock = FakeClock()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None, clock=clock, max_inflight=8,
+                      ready_fn=lambda tree: False, tune_short_cap=False)
+    ta = eng.submit(_small(1), deadline_s=5.0)      # 16-node bucket
+    tb = eng.submit(_large(1), deadline_s=1.0)      # 32-node bucket
+    clock.advance(10.0)                             # both overdue
+    assert eng.pump() == 2
+    dq = eng._inflight["reference"]
+    assert [e.key[0] for e in dq] == [tb.bucket, ta.bucket]
+    eng.drain()
+    assert ta.done and tb.done
+    assert eng.stats.n_deadline_missed == 2
+
+
+def test_no_deadline_no_pressure():
+    clock = FakeClock()
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
+                      flush_timeout_s=None, clock=clock, max_inflight=0)
+    t = eng.submit(_small(2))
+    clock.advance(1e6)
+    assert eng.pump() == 0      # no timeout, no deadline: nothing moves
+    assert not t.done
+    assert t.result() is not None
+
+
+# ---------------------------------------------------------------------------
+# latency-adaptive routing on measured wall EMAs
+# ---------------------------------------------------------------------------
+
+def test_route_wall_ema_accounting():
+    from repro.serve import EngineStats
+    st = EngineStats()
+    assert st.wall_ema("k") is None
+    assert st.slot_ema("k") is None
+    st.record_wall("k", 1.0, 4)
+    assert st.wall_ema("k") == pytest.approx(1.0)
+    assert st.slot_ema("k") == pytest.approx(0.25)
+    assert st.slot_ema("k", min_samples=2) is None  # not warm enough yet
+    st.record_wall("k", 2.0, 4)
+    assert st.slot_ema("k", min_samples=2) is not None
+    assert st.wall_ema("k") == pytest.approx(1.4)   # EMA_ALPHA = 0.4
+    rw = st.route_walls["k"]
+    assert rw.n == 2
+
+
+def test_adaptive_routing_follows_wall_emas():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, adaptive_routing=True,
+                      min_route_samples=1, tune_short_cap=False)
+    inst = _large(0)
+    bucket = eng.policy.bucket_of(inst)
+    # cold EMAs: falls back to the static table (28 nodes → sparse)
+    t0 = eng.submit(inst)
+    assert t0.route == ROUTE_S
+    # dense measured faster on this bucket → adaptive flips the route
+    eng.stats.record_wall((bucket, ROUTE_D), 0.1, 4)
+    eng.stats.record_wall((bucket, ROUTE_S), 1.0, 4)
+    t1 = eng.submit(inst)
+    assert t1.route == ROUTE_D
+    # skew reverses → routing follows the EMAs back
+    for _ in range(10):
+        eng.stats.record_wall((bucket, ROUTE_D), 5.0, 4)
+    t2 = eng.submit(inst)
+    assert t2.route == ROUTE_S
+    eng.flush()
+    eng.drain()
+    # route choice is a latency decision only: results agree bit-for-bit
+    assert _bit_eq(t1.result().objective, t2.result().objective)
+    assert np.array_equal(np.asarray(t1.result().labels),
+                          np.asarray(t2.result().labels))
+
+
+def test_adaptive_static_fallback_until_all_candidates_warm():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, adaptive_routing=True,
+                      min_route_samples=2, tune_short_cap=False)
+    inst = _large(3)
+    bucket = eng.policy.bucket_of(inst)
+    # only one candidate warm → still static
+    eng.stats.record_wall((bucket, ROUTE_D), 0.1, 4)
+    eng.stats.record_wall((bucket, ROUTE_D), 0.1, 4)
+    assert eng.submit(inst).route == ROUTE_S
+    # second candidate warm but under min_samples → still static
+    eng.stats.record_wall((bucket, ROUTE_S), 9.0, 4)
+    assert eng.submit(inst).route == ROUTE_S
+    # fully warm → adapts
+    eng.stats.record_wall((bucket, ROUTE_S), 9.0, 4)
+    assert eng.submit(inst).route == ROUTE_D
+    eng.flush()
+    eng.drain()
+
+
+# ---------------------------------------------------------------------------
+# sparse_row_cap_short self-tuning at route time
+# ---------------------------------------------------------------------------
+
+def test_row_cap_tuning_bit_identical_and_cached():
+    api.clear_cache()
+    eng = SolveEngine(router=Router(default=ROUTE_S), policy=POLICY,
+                      batch_cap=4, flush_timeout_s=None)
+    insts = [_large(10 + s) for s in range(4)]
+    bucket = eng.policy.bucket_of(insts[0])
+    tickets = eng.submit_many(insts)
+    eng.flush()
+    eng.drain()
+    tuned = eng._tuned_routes[(bucket, ROUTE_S)]
+    assert 8 <= tuned.config.sparse_row_cap_short \
+        <= tuned.config.sparse_row_cap
+    assert tickets[0].route == tuned
+    # one tuned route per (bucket, static route): later requests reuse it
+    assert len({t.route for t in tickets}) == 1
+    # tuning is a wall-clock knob only — results match the static config
+    for inst, t in zip(insts, tickets):
+        direct = api.solve(pad_instance(inst, bucket), mode="pd",
+                           config=CFG_SPARSE)
+        assert _bit_eq(t.result().objective, direct.objective)
+        assert _bit_eq(t.result().lower_bound, direct.lower_bound)
+        assert np.array_equal(np.asarray(t.result().labels),
+                              np.asarray(direct.labels)[:inst.num_nodes])
+
+
+def test_dense_routes_not_tuned():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None)
+    t = eng.submit(_small(20))      # dense rule: no sparse cap to tune
+    assert t.route == ROUTE_D
+    assert t.result() is not None
+
+
+def test_warmup_with_instances_precompiles_tuned_routes():
+    api.clear_cache()
+    eng = SolveEngine(router=Router(default=ROUTE_S), policy=POLICY,
+                      batch_cap=4, flush_timeout_s=None)
+    insts = [_large(30 + s) for s in range(4)]
+    fresh = eng.warmup(insts)
+    assert fresh == eng.stats.compiles > 0
+    before = eng.stats.compiles
+    eng.solve_stream(insts)
+    assert eng.stats.compiles == before     # tuned rungs all pre-warmed

@@ -1,8 +1,10 @@
 """SolveEngine end-to-end: micro-batching, demux fidelity, compile
 accounting, timeout flush, and the acceptance contract — a mixed-size
-stream of ≥ 64 instances served with at most (buckets × routes)
-compilations and per-request results bit-identical to a direct
-``api.solve`` of the same bucket-padded instance."""
+stream of ≥ 64 instances served with at most (buckets × routes × ladder
+rungs) compilations and per-request results bit-identical to a direct
+``api.solve`` of the same bucket-padded instance. (Async-specific
+behaviour — harvest, backpressure, deadlines, adaptive routing — lives
+in tests/test_serve_async.py.)"""
 import numpy as np
 import pytest
 
@@ -10,7 +12,8 @@ from repro import api
 from repro.core.graph import random_instance
 from repro.core.solver import SolverConfig
 from repro.serve import (
-    BucketPolicy, Route, Router, RoutingRule, SolveEngine, pad_instance,
+    BucketPolicy, Route, Router, RoutingRule, SolveEngine, batch_ladder,
+    pad_instance,
 )
 
 # cheap configs so 64+ solves stay fast on CPU runners
@@ -68,14 +71,17 @@ def test_mixed_stream_end_to_end():
     assert eng.pending == 0
     assert eng.stats.n_completed == 64
 
-    # compile budget: one executable per (bucket, route) actually seen
+    # compile budget: at most one executable per (bucket, route) per
+    # sub-batch ladder rung actually dispatched; at least one per key
     keys = {(POLICY.bucket_of(i), eng.router.route_instance(i))
             for i in insts}
-    buckets = {k[0] for k in keys}
     routes = {k[1] for k in keys}
     assert len(routes) == 2                      # stream spans both routes
-    assert eng.stats.compiles == len(keys)
-    assert eng.stats.compiles <= len(buckets) * len(routes)
+    rungs = len(batch_ladder(eng.batch_cap))
+    assert len(keys) <= eng.stats.compiles <= len(keys) * rungs
+    # the ladder's payoff: partial flushes decompose instead of padding
+    assert eng.stats.n_filler_slots == 0
+    assert eng.stats.occupancy == 1.0
 
     # per-request results bit-identical to the direct solve of the same
     # bucket-padded instance (same executable family, vmap is bit-preserving)
@@ -123,16 +129,20 @@ def test_full_queue_dispatches_on_submit():
                                    pad_nodes=16) for s in range(4)]
     tickets = [eng.submit(i) for i in same_bucket]
     # 4th submit filled the batch — dispatched without any flush
-    assert all(t.done for t in tickets)
     assert eng.stats.n_dispatches == 1
+    assert eng.pending == 0
+    eng.drain()                        # harvest the in-flight window
+    assert all(t.done for t in tickets)
     assert eng.stats.n_filler_slots == 0
     assert eng.stats.occupancy == 1.0
 
 
 def test_timeout_flush_with_fake_clock():
     clock = FakeClock()
+    # max_inflight=0: the synchronous engine, so `done` flips inside the
+    # pump that dispatches (the async window is exercised elsewhere)
     eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=8,
-                      flush_timeout_s=0.5, clock=clock)
+                      flush_timeout_s=0.5, clock=clock, max_inflight=0)
     t = eng.submit(random_instance(12, 0.5, seed=0, pad_edges=64,
                                    pad_nodes=16))
     assert not t.done and eng.pending == 1
@@ -142,7 +152,9 @@ def test_timeout_flush_with_fake_clock():
     clock.advance(0.2)
     assert eng.pump() == 1                     # 0.6s > 0.5s: partial flush
     assert t.done
-    assert eng.stats.n_filler_slots == 7       # 1 real + 7 filler slots
+    # the sub-batch ladder dispatched a 1-slot batch, not cap-padded
+    assert eng.stats.n_filler_slots == 0
+    assert eng.stats.occupancy == 1.0
     assert t.latency_s == pytest.approx(0.6)
 
 

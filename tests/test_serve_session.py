@@ -169,7 +169,11 @@ def test_warm_session_tick_valid_objective():
     labels = np.asarray(s.state.labels)
     assert float(res.objective) == pytest.approx(
         float(padded.objective(s.state.labels)), abs=1e-4)
-    assert float(res.lower_bound) == -np.inf
+    # the warm tick reports the *carried* bound (cold-open bound + patch
+    # slack), finite and still below the returned objective
+    lb = float(res.lower_bound)
+    assert np.isfinite(lb)
+    assert lb <= float(res.objective) + 1e-4
     assert ((labels >= 0) & (labels < s.bucket.nodes)).all()
 
 
@@ -222,5 +226,52 @@ def test_delta_compile_budget():
         for s, i in zip(sessions, insts):
             eng.submit_delta(s.session_id, _patch_for(i, tick))
     eng.flush_deltas()
+    eng.drain()
     assert eng.stats.n_delta_completed == 6
     assert eng.stats.compiles == compiles_after_open + 1
+
+
+# ---------------------------------------------------------------------------
+# session memory bound: LRU eviction under max_sessions
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_and_readmit():
+    """Opening past ``max_sessions`` settles + evicts the session idle the
+    longest; the evicted id is gone but can be re-opened (fresh state)."""
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      flush_timeout_s=None, patch_cap=4, max_sessions=2)
+    insts = [_inst(s) for s in range(3)]
+    s0 = eng.open_session(insts[0], warm=False)
+    s1 = eng.open_session(insts[1], warm=False)
+    # s0 has a queued (un-dispatched) tick when eviction hits: the engine
+    # must settle it — dispatch + write-back — before dropping the session
+    t0 = eng.submit_delta(s0.session_id, _patch_for(insts[0], 0))
+    t1 = eng.submit_delta(s1.session_id, _patch_for(insts[1], 0))
+    # submit_delta touched s1 last, so s0 is the LRU victim
+    s2 = eng.open_session(insts[2], warm=False)
+    assert eng.stats.n_sessions_evicted == 1
+    assert s0.session_id not in eng.sessions
+    assert s1.session_id in eng.sessions and s2.session_id in eng.sessions
+    assert len(eng.sessions) == 2
+    assert t0.done                              # settled before eviction
+    with pytest.raises(KeyError):
+        eng.submit_delta(s0.session_id, _patch_for(insts[0], 1))
+
+    # re-admit after evict: same id can be reopened as a fresh session
+    s0b = eng.open_session(insts[0], session_id=s0.session_id, warm=False)
+    assert eng.stats.n_sessions_evicted == 2    # s1 went this time
+    assert s1.session_id not in eng.sessions
+    assert t1.done
+    assert s0b.session_id == s0.session_id and s0b is not s0
+    assert s0b.n_ticks == 0                     # fresh state, no history
+    res = eng.submit_delta(s0b.session_id, _patch_for(insts[0], 0)).result()
+    assert np.isfinite(float(res.objective))
+
+
+def test_no_eviction_within_cap():
+    eng = SolveEngine(router=_router(), policy=POLICY, batch_cap=4,
+                      patch_cap=4, max_sessions=3)
+    for s in range(3):
+        eng.open_session(_inst(s), warm=False)
+    assert eng.stats.n_sessions_evicted == 0
+    assert len(eng.sessions) == 3
