@@ -105,6 +105,15 @@ def compare(baseline: dict, fresh: dict) -> list[str]:
                      f"{_fmt_delta(b.get('wall_s'), f.get('wall_s'), 's')}")
         if b.get("peak_mem_bytes") or f.get("peak_mem_bytes"):
             lines.append(f"    peak_mem {_fmt_delta(b.get('peak_mem_bytes'), f.get('peak_mem_bytes'), 'B')}")
+        # per-device footprint of the state-sharded rows: report-only (the
+        # resolved shard count depends on the runner's device count, so a
+        # gate would compare different partitions across machines)
+        if b.get("peak_mem_per_device_bytes") \
+                or f.get("peak_mem_per_device_bytes"):
+            bs, fs = b.get("state_shards"), f.get("state_shards")
+            lines.append(
+                f"    peak_mem/device (report-only, shards {bs} -> {fs}) "
+                f"{_fmt_delta(b.get('peak_mem_per_device_bytes'), f.get('peak_mem_per_device_bytes'), 'B')}")
         for metric in ("objective", "lower_bound"):
             bv, fv = b.get(metric), f.get(metric)
             if isinstance(bv, list) or isinstance(fv, list):

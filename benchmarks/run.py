@@ -8,6 +8,11 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Emits ``bench,case,metric,value`` CSV on stdout.
 
+``--state-shards=N`` (scaling module) adds the fully sharded solve to the
+sweep — per-size wall plus per-device peak-memory rows vs the replicated
+CSR path; combine with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+for a virtual mesh and ``RAMA_SMOKE_XL=1`` for the XL sharded row.
+
 ``--smoke`` runs the fast per-mode solver benchmark instead and writes
 ``BENCH_solver.json`` (per-mode wall-clock + objective/LB) for CI perf
 tracking, plus the incremental delta-churn row (warm ``solve_delta``
@@ -29,6 +34,16 @@ from benchmarks.common import Csv
 
 def main(argv=None) -> None:
     argv = list(argv if argv is not None else sys.argv[1:])
+    state_shards = 0
+    for a in list(argv):
+        if a.startswith("--state-shards"):
+            argv.remove(a)
+            try:
+                state_shards = int(a.split("=", 1)[1])
+            except (IndexError, ValueError):
+                raise SystemExit("usage: --state-shards=N (forwarded to "
+                                 "the scaling module; shards clamp to the "
+                                 "devices present)")
     csv = Csv()
     csv.emit_header()
     if "--smoke" in argv or "--profile" in argv:
@@ -63,7 +78,10 @@ def main(argv=None) -> None:
     wanted = argv or list(mods)
     for name in wanted:
         t0 = time.time()
-        mods[name].run(csv)
+        if name == "scaling":
+            mods[name].run(csv, state_shards=state_shards)
+        else:
+            mods[name].run(csv)
         csv.add(name, "_total", "wall_s", round(time.time() - t0, 1))
 
 

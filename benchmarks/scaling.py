@@ -17,6 +17,7 @@ more nodes than the dense ceiling the seed capped out at.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -44,7 +45,7 @@ def _timed_solve(inst, mode, cfg):
     return time.perf_counter() - t0, res
 
 
-def run(csv):
+def run(csv, state_shards: int = 0):
     cfg_sparse = dataclasses.replace(CFG, graph_impl="sparse")
     rows = {"GAEC": [], "P": [], "PD": [], "PD-sparse": []}
     edges = []
@@ -66,7 +67,115 @@ def run(csv):
         slope = np.polyfit(le, np.log(ts), 1)[0]
         csv.add("scaling", name, "loglog_slope", round(float(slope), 3))
 
+    if state_shards:
+        run_state_sharded(csv, state_shards)
     run_xl(csv)
+
+
+def _sharded_cfg(state_shards: int):
+    # 3-cycle separation only; shards clamp to the devices present
+    return dataclasses.replace(CFG, graph_impl="sparse",
+                               first_round_cycles45=False,
+                               state_shards=state_shards)
+
+
+def _per_device_peak(inst, mode, cfg):
+    """XLA's per-device temp estimate from a compile-only lowering (no
+    execution — the SPMD module already is per-device)."""
+    import jax
+    from repro.core.solver import solve_device
+    compiled = jax.jit(
+        lambda i: solve_device(i, mode=mode, cfg=cfg)).lower(inst).compile()
+    try:
+        ma = compiled.memory_analysis()
+        return None if ma is None else int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def run_state_sharded(csv, state_shards: int):
+    """--state-shards: the fully sharded solve (edge-range-partitioned
+    SolverState, repro.core.sharded) across the same grid sweep, plus the
+    per-device peak-memory comparison against the replicated CSR path on
+    the largest sweep size. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or on a real
+    mesh) to get N-way partitions; shards clamp to the devices present."""
+    from repro.core.dist import resolve_state_shards
+    from repro.core.graph import round_up_edges, to_host_edges
+    from repro.core.graph import make_instance
+
+    shards = resolve_state_shards(state_shards)
+    cfg = _sharded_cfg(state_shards)
+    for hw in SIZES:
+        inst0 = grid_instance(hw, hw, seed=0)
+        u, v, c = to_host_edges(inst0)
+        inst = make_instance(u, v, c, hw * hw,
+                             pad_edges=round_up_edges(len(u), shards))
+        n_edges = len(u)
+        t, _ = _timed_solve(inst, "pd", cfg)
+        csv.add("scaling", f"PD-state-sharded{shards}/E={n_edges}",
+                "time_s", round(t, 4))
+
+    # per-device footprint on the largest sweep instance: sharded vs
+    # replicated CSR (compile-only; report-only downstream)
+    hw = SIZES[-1]
+    inst0 = grid_instance(hw, hw, seed=0)
+    u, v, c = to_host_edges(inst0)
+    inst = make_instance(u, v, c, hw * hw,
+                         pad_edges=round_up_edges(len(u), shards))
+    rep = _per_device_peak(inst, "pd", dataclasses.replace(
+        CFG, graph_impl="sparse", first_round_cycles45=False))
+    sh = _per_device_peak(inst, "pd", cfg)
+    if rep is not None:
+        csv.add("scaling", f"mem-replicated/hw={hw}",
+                "peak_temp_bytes", rep)
+    if sh is not None:
+        csv.add("scaling", f"mem-state-sharded{shards}/hw={hw}",
+                "peak_temp_bytes_per_device", sh)
+    if rep and sh:
+        csv.add("scaling", f"mem-state-sharded{shards}/hw={hw}",
+                "per_device_vs_replicated", round(sh / rep, 3))
+
+    if os.environ.get("RAMA_SMOKE_XL"):
+        run_xl_sharded(csv, state_shards)
+
+
+def run_xl_sharded(csv, state_shards: int, hw: int = XL_HW):
+    """The XL grid on the sharded solve (RAMA_SMOKE_XL-gated like the
+    replicated XL row): wall, per-round wall, and the per-device peak
+    next to the replicated number."""
+    from repro.core.dist import resolve_state_shards
+    from repro.core.graph import make_instance, round_up_edges, \
+        to_host_edges
+
+    shards = resolve_state_shards(state_shards)
+    cfg = dataclasses.replace(XL_CFG, separation_chunk=0,
+                              first_round_cycles45=False,
+                              state_shards=state_shards)
+    inst0 = grid_instance(hw, hw, seed=0)
+    u, v, c = to_host_edges(inst0)
+    inst = make_instance(u, v, c, hw * hw,
+                         pad_edges=round_up_edges(len(u), shards))
+    n_edges = len(u)
+    t, res = _timed_solve(inst, "pd", cfg)
+    rounds = int(res.rounds)
+    case = f"xl-state-sharded{shards}/N={hw * hw}"
+    csv.add("scaling", case, "edges", n_edges)
+    csv.add("scaling", case, "wall_s", round(t, 2))
+    csv.add("scaling", case, "wall_per_round_s",
+            round(t / max(rounds, 1), 3))
+    csv.add("scaling", case, "objective", round(float(res.objective), 2))
+    csv.add("scaling", case, "rounds", rounds)
+    sh = _per_device_peak(inst, "pd", cfg)
+    rep = _per_device_peak(inst, "pd", dataclasses.replace(
+        XL_CFG, separation_chunk=0, first_round_cycles45=False))
+    if sh is not None:
+        csv.add("scaling", case, "peak_temp_bytes_per_device", sh)
+    if rep is not None:
+        csv.add("scaling", case, "peak_temp_bytes_replicated", rep)
+    if rep and sh:
+        csv.add("scaling", case, "per_device_vs_replicated",
+                round(sh / rep, 3))
 
 
 def run_xl(csv, hw: int = XL_HW):

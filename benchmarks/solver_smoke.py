@@ -41,6 +41,14 @@ CHUNKED_CFG = dataclasses.replace(SMOKE_CFG, graph_impl="sparse",
 XL_HW = 192
 XL_CFG = api.SolverConfig(max_neg=256, mp_iters=3, max_rounds=8,
                           graph_impl="sparse", separation_chunk=64)
+# the fully sharded solve (repro.core.sharded): shards clamp to the devices
+# present, so this row degrades to a single-shard shard_map on default CI
+# and exercises the real edge partition under the dist-4dev job
+STATE_SHARDED_CFG = api.SolverConfig(max_neg=512, max_tri_per_edge=8,
+                                     nbr_k=8, mp_iters=8,
+                                     graph_impl="sparse",
+                                     first_round_cycles45=False,
+                                     state_shards=4)
 
 
 def smoke_instance():
@@ -120,6 +128,30 @@ def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
     }}
     if csv is not None:
         csv.add("smoke", "pd-chunked64/sparse", "wall_s", round(t, 4))
+
+    # fully sharded solve: peak_mem here is XLA's PER-DEVICE temp estimate
+    # (the SPMD module is per-device), recorded under its own key so the
+    # compare report can show the per-device footprint next to the
+    # replicated rows without gating on it (shard count varies by runner)
+    from repro.core.dist import resolve_state_shards
+    shards = resolve_state_shards(STATE_SHARDED_CFG.state_shards)
+    compiled = _compile_solve(inst, "pd", STATE_SHARDED_CFG)
+    t, res = timed(compiled, inst)
+    report["modes"]["pd-state-sharded"] = {"sparse": {
+        "wall_s": round(t, 4),
+        "objective": _finite(res.objective),
+        "lower_bound": _finite(res.lower_bound),
+        "rounds": int(res.rounds),
+        "state_shards": shards,
+        "peak_mem_per_device_bytes": _peak_memory_bytes(compiled),
+    }}
+    if csv is not None:
+        csv.add("smoke", "pd-state-sharded/sparse", "wall_s", round(t, 4))
+        pm = report["modes"]["pd-state-sharded"]["sparse"][
+            "peak_mem_per_device_bytes"]
+        if pm is not None:
+            csv.add("smoke", "pd-state-sharded/sparse",
+                    "peak_mem_per_device_bytes", pm)
 
     if os.environ.get("RAMA_SMOKE_XL"):
         xl = grid_instance(XL_HW, XL_HW, seed=0)

@@ -145,6 +145,13 @@ for _p in (
                                separation_chunk=64, separation_shards=4),
            "CSR PD with the repulsive chunk axis shard_mapped over up to 4 "
            "devices (clamped to the devices present; bit-identical)"),
+    Preset("pd-state-sharded", "pd",
+           dataclasses.replace(_PAPER, graph_impl="sparse",
+                               first_round_cycles45=False, state_shards=4),
+           "fully sharded solve: the whole SolverState (CSR included) "
+           "edge-range-partitioned over up to 4 devices for the life of "
+           "the solve (repro.core.sharded; 3-cycle separation; clamped to "
+           "the devices present; bit-identical across shard counts)"),
 ):
     register_preset(_p)
 
@@ -228,6 +235,11 @@ def _make_registry(maxsize: int):
 
         if not batched:
             return jax.jit(run)
+        if cfg.state_shards:
+            raise ValueError(
+                "state_shards and batched solves are mutually exclusive "
+                "(one device mesh): a state-sharded solve already spans "
+                "the devices a batch axis would shard over")
         fn = jax.vmap(run)
         if batch_shards > 1:
             if kind != "solve":
@@ -365,12 +377,34 @@ def _normalize(mode, config, backend, preset, graph_impl=None):
 def solve(inst: MulticutInstance, mode: str | None = None,
           config: SolverConfig | None = None, backend: str | None = None,
           preset: str | Preset | None = None,
-          graph_impl: str | None = None) -> SolveResult:
+          graph_impl: str | None = None,
+          tune_sparse_caps: bool = False) -> SolveResult:
     """Solve one multicut instance. The whole solve — separation, message
     passing, contraction, outer rounds — is a single device executable.
-    ``graph_impl`` overrides the config's dense/sparse/auto data path."""
+    ``graph_impl`` overrides the config's dense/sparse/auto data path.
+
+    ``tune_sparse_caps=True`` runs the serving engine's one-shot
+    ``sparse_row_cap_short`` tuner before the executable lookup: a
+    host-side pre-trace pass over the instance's attractive-degree
+    histogram picks the p95 degree (clamped to ``[ROW_CAP_FLOOR,
+    sparse_row_cap]``, same clamp as the per-bucket serve tuner) so
+    ~95% of CSR rows take the narrow separation pass. Results are
+    bit-identical for any cap (the degree buckets cover every row);
+    only wall-clock changes. No-op for dense-resolved solves. Each
+    distinct tuned cap compiles its own executable — reuse a
+    :class:`~repro.serve.SolveEngine` for per-bucket caching instead of
+    calling this on many differently-shaped instances."""
     mode, config, backend = _normalize(mode, config, backend, preset,
                                        graph_impl)
+    if tune_sparse_caps:
+        from repro.core.graph import (ROW_CAP_FLOOR, attractive_degree_p95,
+                                      resolve_graph_impl)
+        impl = resolve_graph_impl(config.graph_impl, inst.num_nodes,
+                                  config.sparse_threshold)
+        if impl == "sparse":
+            cap = attractive_degree_p95(inst, ROW_CAP_FLOOR,
+                                        config.sparse_row_cap)
+            config = dataclasses.replace(config, sparse_row_cap_short=cap)
     return _compiled(mode, config, backend, False, 1)(inst)
 
 

@@ -286,6 +286,317 @@ def contract_csr(inst: MulticutInstance, S: jax.Array):
     return _contract_core(inst, S)
 
 
+# ---------------------------------------------------------------------------
+# Edge-range-sharded contraction (SolverConfig.state_shards)
+#
+# Every function below runs under shard_map over the "state" mesh: per-edge
+# arrays are the local (E/S,) contiguous-range slices, per-node arrays are
+# replicated (N,). The engineering constraint throughout is BIT-IDENTITY
+# with the replicated kernels above for every shard count: min/max/or
+# scatters combine across shards with pmin/pmax (order-invariant exactly),
+# argmax tie-breaks travel as integer keys encoding the replicated concat
+# index (dist.combine_node_best), float accumulations either go through
+# dist.blocked_sum (scalars) or reproduce the replicated segment_sum's
+# per-destination accumulation order entry for entry (merged costs).
+# ---------------------------------------------------------------------------
+
+def connected_components_sharded(u_loc, v_loc, edge_mask_loc, num_nodes: int,
+                                 axis: str):
+    """Sharded :func:`connected_components`: each shard min-scatters its own
+    edges, an elementwise ``pmin`` fuses the partial scatters (min is
+    associative/commutative/idempotent, so this equals the full scatter
+    exactly), then the pointer jumping runs replicated. The label
+    trajectory — and hence the iteration count — is bitwise identical to
+    the replicated loop, so every shard's ``while_loop`` stays in
+    lockstep."""
+    labels0 = jnp.arange(num_nodes, dtype=jnp.int32)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        lu, lv = labels[u_loc], labels[v_loc]
+        m = jnp.minimum(lu, lv)
+        new = labels.at[u_loc].min(jnp.where(edge_mask_loc, m, lu))
+        new = new.at[v_loc].min(jnp.where(edge_mask_loc, m, lv))
+        new = jax.lax.pmin(new, axis)
+        new = new[new]
+        new = new[new]
+        changed = jnp.any(new != labels)
+        return new, changed
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+    return labels
+
+
+def _node_best_edge_sharded(seg0, seg1, cost_loc, active_loc,
+                            num_segments: int, shards: int, axis: str):
+    """Sharded :func:`_node_best_positive_edge` (segments = node ids for the
+    matching, component labels for the forest). Returns the (N,) GLOBAL
+    edge id each segment picks, or -1.
+
+    The replicated kernel argmaxes over the 2E concat [u-copies, v-copies]
+    and tie-breaks to the smallest concat index. Each shard's local
+    ``segment_argmax`` already picks its smallest-local-index max, and the
+    local concat index order coincides with the global tie key
+    ``direction * E + global_eid``, so folding the per-shard winners by
+    (max value, min key) in :func:`~repro.core.dist.combine_node_best`
+    reproduces the replicated pick exactly — including the degenerate
+    all-masked segment, where every value ties at the mask sentinel and
+    the smallest key wins, just as the replicated argmin-over-ties does."""
+    from repro.core.dist import combine_node_best, edge_range_start
+    E_loc = cost_loc.shape[0]
+    E = E_loc * shards
+    e0 = edge_range_start(E_loc, axis)
+    seg = jnp.concatenate([seg0, seg1])
+    val = jnp.concatenate([cost_loc, cost_loc])
+    msk = jnp.concatenate([active_loc, active_loc])
+    arg, vmax = segment_argmax(val, seg, num_segments, mask=msk)
+    dir_ = (arg >= E_loc).astype(jnp.int32)
+    lid = arg - dir_ * E_loc
+    key = jnp.where(arg >= 0, dir_ * E + e0 + lid,
+                    jnp.iinfo(jnp.int32).max)
+    pay = jnp.where(arg >= 0, e0 + lid, -1)
+    _, _, best = combine_node_best(vmax, key, pay, axis)
+    return best
+
+
+def maximum_matching_sharded(u_loc, v_loc, cost_loc, ev_loc, node_valid,
+                             rounds: int, min_cost, shards: int, axis: str):
+    """Sharded :func:`maximum_matching`; returns the local (E/S,) slice of
+    the replicated matching, bitwise."""
+    from repro.core.dist import edge_range_start
+    N = node_valid.shape[0]
+    E_loc = u_loc.shape[0]
+    geid = edge_range_start(E_loc, axis) + jnp.arange(E_loc, dtype=jnp.int32)
+    S = jnp.zeros(E_loc, dtype=bool)
+    free = node_valid
+
+    def one_round(carry, _):
+        S, free = carry
+        active = ev_loc & (cost_loc > min_cost) & free[u_loc] & free[v_loc]
+        best = _node_best_edge_sharded(u_loc, v_loc, cost_loc, active, N,
+                                       shards, axis)
+        sel = active & (best[u_loc] == geid) & (best[v_loc] == geid)
+        S = S | sel
+        m_loc = jnp.zeros(N, jnp.int32).at[u_loc].max(sel.astype(jnp.int32))
+        m_loc = m_loc.at[v_loc].max(sel.astype(jnp.int32))
+        matched = jax.lax.pmax(m_loc, axis) > 0
+        return (S, free & ~matched), None
+
+    (S, _), _ = jax.lax.scan(one_round, (S, free), None, length=rounds)
+    return S
+
+
+def spanning_forest_sharded(u_loc, v_loc, cost_loc, ev_loc, node_valid,
+                            rounds: int, min_cost, shards: int, axis: str):
+    """Sharded :func:`spanning_forest_contraction`; returns the local slice
+    of the replicated forest, bitwise (component labels, freezing masks and
+    best-edge picks are all replicated-exact per round)."""
+    from repro.core.dist import edge_range_start
+    N = node_valid.shape[0]
+    E_loc = u_loc.shape[0]
+    e0 = edge_range_start(E_loc, axis)
+    neg = ev_loc & (cost_loc < 0)
+    S = jnp.zeros(E_loc, dtype=bool)
+    labels0 = jnp.arange(N, dtype=jnp.int32)
+
+    def one_round(carry, _):
+        S, labels = carry
+        cl_u, cl_v = labels[u_loc], labels[v_loc]
+        active = ev_loc & (cost_loc > min_cost) & (cl_u != cl_v)
+        best_edge = _node_best_edge_sharded(cl_u, cl_v, cost_loc, active, N,
+                                            shards, axis)
+        own = (best_edge >= e0) & (best_edge < e0 + E_loc)
+        idx = jnp.where(own, best_edge - e0, E_loc)
+        cand = jnp.zeros(E_loc, dtype=bool).at[idx].max(own, mode="drop")
+        cand = cand & active
+        S_try = S | cand
+        labels_try = connected_components_sharded(u_loc, v_loc, S_try, N,
+                                                  axis)
+        conflict = neg & (labels_try[u_loc] == labels_try[v_loc]) \
+            & (labels[u_loc] != labels[v_loc])
+        fr_loc = jnp.zeros(N, jnp.int32).at[labels_try[u_loc]].max(
+            conflict.astype(jnp.int32))
+        frozen = jax.lax.pmax(fr_loc, axis) > 0
+        keep = cand & ~frozen[labels_try[u_loc]] & ~frozen[labels_try[v_loc]]
+        S_new = S | keep
+        labels_new = connected_components_sharded(u_loc, v_loc, S_new, N,
+                                                  axis)
+        return (S_new, labels_new), None
+
+    (S, _), _ = jax.lax.scan(one_round, (S, labels0), None, length=rounds)
+    return S
+
+
+def choose_contraction_set_sharded(u_loc, v_loc, cost_loc, ev_loc,
+                                   node_valid, matching_rounds: int,
+                                   forest_rounds: int, switch_frac: float,
+                                   contract_frac: float, shards: int,
+                                   axis: str):
+    """Sharded :func:`choose_contraction_set`. Edge counts cross shards as
+    exact integer psums and the cost ceiling as a pmax (max is
+    order-invariant), so the matching/forest switch decides identically to
+    the replicated kernel."""
+    min_cost = 0.0
+    if contract_frac > 0.0:
+        cmax = jax.lax.pmax(jnp.max(jnp.where(ev_loc, cost_loc, 0.0)), axis)
+        min_cost = contract_frac * jnp.maximum(cmax, 0.0)
+    S_match = maximum_matching_sharded(u_loc, v_loc, cost_loc, ev_loc,
+                                       node_valid, matching_rounds, min_cost,
+                                       shards, axis)
+    n_match = jax.lax.psum(jnp.sum(S_match.astype(jnp.int32)), axis)
+    n_nodes = jnp.sum(node_valid)
+    enough = n_match >= switch_frac * n_nodes
+    S_forest = spanning_forest_sharded(u_loc, v_loc, cost_loc, ev_loc,
+                                       node_valid, forest_rounds, min_cost,
+                                       shards, axis)
+    n_forest = jax.lax.psum(jnp.sum(S_forest.astype(jnp.int32)), axis)
+    use_match = enough | (n_forest < n_match)
+    return jnp.where(use_match, S_match, S_forest)
+
+
+def _lex2_count_less(lo_sorted, hi_sorted, l, h):
+    """Count of entries of the lex-sorted pair list strictly before (l, h) —
+    fixed-iteration bisect (the 2-key sibling of
+    :func:`~repro.core.graph._lex_count_less`). Scalar in/out; vmap for
+    batches."""
+    import math
+    n = lo_sorted.shape[0]
+    iters = max(1, int(math.ceil(math.log2(max(2, n)))) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = jnp.clip((lo + hi) // 2, 0, n - 1)
+        less = (lo_sorted[mid] < l) | ((lo_sorted[mid] == l)
+                                       & (hi_sorted[mid] < h))
+        go_right = (lo < hi) & less
+        lo2 = jnp.where(go_right, mid + 1, lo)
+        hi2 = jnp.where(lo < hi, jnp.where(go_right, hi, mid), hi)
+        return lo2, hi2
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (jnp.int32(0), jnp.int32(n)))
+    return lo
+
+
+class ShardedContraction(NamedTuple):
+    """Per-shard view of one contraction: per-edge leaves are the local
+    (E/S,) slice of the contracted instance (global new-edge range
+    ``[shard * E/S, (shard+1) * E/S)``), per-node leaves replicated."""
+    u2: jax.Array          # (E/S,) local contracted COO
+    v2: jax.Array
+    c2: jax.Array
+    ev2: jax.Array
+    node_valid: jax.Array  # (N,) replicated
+    mapping: jax.Array     # (N,) replicated old node -> new compact id
+    n_new: jax.Array
+    self_loop_gain: jax.Array
+    n_contracted: jax.Array
+    csr: CsrGraph          # local CSR over the shard's range (LOCAL edge ids)
+
+
+def contract_sharded(u_loc, v_loc, cost_loc, ev_loc, node_valid, S_loc,
+                     shards: int, axis: str):
+    """Sharded :func:`_contract_core`: local dedupe + lexsort per shard,
+    then a two-step boundary exchange merging parallel edges whose
+    endpoints collapsed across shard cuts.
+
+    Exchange 1 all_gathers the shard-local deduped (lo, hi) pair lists and
+    re-derives the global unique pair list + ranks on every shard — the
+    rank in (lo, hi) order equals the replicated kernel's forward-run rank,
+    so new edge ids match bitwise. Exchange 2 all_gathers each original
+    edge's (cost, target new id) twice — once for (fu < fv)-oriented
+    entries, once for (fu > fv) — concatenated in exactly the replicated
+    lexsort's within-run entry order (orientation-major, ascending original
+    id), so the per-target segment_sum reproduces the replicated merged
+    costs bit for bit. Both exchange buffers are transient; nothing full-E
+    persists past the round."""
+    from repro.core.dist import blocked_sum, edge_range_start
+    from repro.core.graph import build_csr
+    N = node_valid.shape[0]
+    E_loc = u_loc.shape[0]
+    E = E_loc * shards
+    e0 = edge_range_start(E_loc, axis)
+    labels = connected_components_sharded(u_loc, v_loc, S_loc & ev_loc, N,
+                                          axis)
+    is_root = (labels == jnp.arange(N, dtype=jnp.int32)) & node_valid
+    new_id = jnp.cumsum(is_root.astype(jnp.int32)) - 1
+    f = new_id[labels].astype(jnp.int32)
+    f = jnp.where(node_valid, f, 0)
+    n_new = jnp.sum(is_root)
+
+    fu, fv = f[u_loc], f[v_loc]
+    self_loop = ev_loc & (fu == fv)
+    gain = blocked_sum(jnp.where(self_loop, cost_loc, 0.0), shards, axis)
+    valid2 = ev_loc & ~self_loop
+
+    lo = jnp.where(valid2, jnp.minimum(fu, fv), N).astype(jnp.int32)
+    hi = jnp.where(valid2, jnp.maximum(fu, fv), N).astype(jnp.int32)
+
+    # local dedupe: sort my pairs, compact run heads (stays sorted)
+    order = jnp.lexsort((hi, lo))
+    lo_s, hi_s = lo[order], hi[order]
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            (lo_s[1:] != lo_s[:-1])
+                            | (hi_s[1:] != hi_s[:-1])])
+    is_new = (lo_s < N) & head
+    lrid = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    cpos = jnp.where(is_new, lrid, E_loc)
+    ulo = jnp.full((E_loc,), N, jnp.int32).at[cpos].set(lo_s, mode="drop")
+    uhi = jnp.full((E_loc,), N, jnp.int32).at[cpos].set(hi_s, mode="drop")
+
+    # exchange 1: merge the shard-local unique pair lists globally
+    glo = jax.lax.all_gather(ulo, axis).reshape(-1)     # (E,) transient
+    ghi = jax.lax.all_gather(uhi, axis).reshape(-1)
+    gord = jnp.lexsort((ghi, glo))
+    glo_s, ghi_s = glo[gord], ghi[gord]
+    ghead = jnp.concatenate([jnp.ones((1,), bool),
+                             (glo_s[1:] != glo_s[:-1])
+                             | (ghi_s[1:] != ghi_s[:-1])])
+    gnew = (glo_s < N) & ghead
+    grank = jnp.cumsum(gnew.astype(jnp.int32)) - 1
+    n_unique = jnp.sum(gnew)
+    gpos = jnp.where(gnew, grank, E)
+    cglo = jnp.full((E,), N, jnp.int32).at[gpos].set(glo_s, mode="drop")
+    cghi = jnp.full((E,), N, jnp.int32).at[gpos].set(ghi_s, mode="drop")
+
+    # new edge id of each surviving original edge: rank of its pair
+    target = jax.vmap(lambda l, h: _lex2_count_less(cglo, cghi, l, h))(lo, hi)
+    target = jnp.where(valid2, target, -1).astype(jnp.int32)
+
+    # exchange 2: merged costs, gathered in the replicated accumulation
+    # order — (fu < fv)-oriented entries ascend by global id first, then
+    # the (fu > fv)-oriented ones (= the replicated lexsort's within-run
+    # tile order)
+    fo = valid2 & (fu < fv)
+    bo = valid2 & (fu > fv)
+    gc = jnp.concatenate([
+        jax.lax.all_gather(jnp.where(fo, cost_loc, 0.0), axis).reshape(-1),
+        jax.lax.all_gather(jnp.where(bo, cost_loc, 0.0), axis).reshape(-1)])
+    gt = jnp.concatenate([
+        jax.lax.all_gather(jnp.where(fo, target, -1), axis).reshape(-1),
+        jax.lax.all_gather(jnp.where(bo, target, -1), axis).reshape(-1)])
+    mine = (gt >= e0) & (gt < e0 + E_loc)
+    seg = jnp.where(mine, gt - e0, E_loc)
+    c2 = jax.ops.segment_sum(gc, seg, num_segments=E_loc + 1)[:E_loc]
+
+    idx = e0 + jnp.arange(E_loc, dtype=jnp.int32)
+    ev2 = idx < n_unique
+    u2 = jnp.where(ev2, cglo[idx], 0)
+    v2 = jnp.where(ev2, cghi[idx], 0)
+    c2 = jnp.where(ev2, c2, 0.0)
+    node_valid2 = jnp.arange(N) < n_new
+    n_contracted = jax.lax.psum(
+        jnp.sum((S_loc & ev_loc).astype(jnp.int32)), axis)
+    csr = build_csr(u2, v2, ev2, N)
+    return ShardedContraction(u2=u2, v2=v2, c2=c2, ev2=ev2,
+                              node_valid=node_valid2, mapping=f, n_new=n_new,
+                              self_loop_gain=gain, n_contracted=n_contracted,
+                              csr=csr)
+
+
 def adjacency_dense(inst: MulticutInstance) -> jax.Array:
     """Dense symmetric adjacency (Definition 2) — small-N / test path."""
     N = inst.num_nodes

@@ -162,6 +162,35 @@ def separate_triangles(inst: MulticutInstance, adj: DenseAdj,
     return Triangles(edges=jnp.where(goods[:, None], tris, 0), valid=goods)
 
 
+def triangles_from_windows(ci, ei, oki, cj, ej, e_, ok_, K, intersect):
+    """Triangle candidates from prefetched endpoint windows.
+
+    ``ci``/``ei``/``oki`` are the (B, W) column/edge-id/validity windows of
+    the repulsive edges' first endpoints, ``cj``/``ej`` the second
+    endpoints'; ``e_``/``ok_`` the (B,) repulsive edge ids and masks. The
+    common-neighbour test is ``intersect`` over the sorted windows; the
+    first K matches reproduce the dense top_k (K smallest common
+    neighbours). Shared by the replicated and edge-sharded separation
+    paths so their triangle math is identical by construction."""
+    Wb = ci.shape[1]
+    pos = intersect(ci, cj)                 # (B, Wb) match position or -1
+    pc = jnp.clip(pos, 0, Wb - 1)
+    found = (pos >= 0) & oki                # mask ci's sentinel padding
+
+    def per_edge(found_, ei_, ej_, pc_, e__, ok__):
+        vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
+        good = (vals > 0) & ok__
+        e_ik = ei_[idxs]
+        e_jk = ej_[pc_[idxs]]
+        tri = jnp.stack([jnp.full((K,), e__, dtype=jnp.int32), e_ik,
+                         e_jk], axis=-1)
+        good = good & (e_ik >= 0) & (e_jk >= 0)
+        return tri, good
+
+    tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, e_, ok_)
+    return (tris.reshape(-1, 3).astype(jnp.int32), goods.reshape(-1))
+
+
 def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
                               max_neg: int, max_tri_per_edge: int,
                               row_cap: int = 128, row_cap_short: int = 0,
@@ -196,22 +225,8 @@ def separate_triangles_sparse(inst: MulticutInstance, csr_pos: CsrGraph,
             window = jax.vmap(lambda n: csr_row_window(csr_pos, n, Wb))
             ci, ei, oki = window(i_)            # (B, Wb) each
             cj, ej, _ = window(j_)
-            pos = intersect(ci, cj)             # (B, Wb) match position or -1
-            pc = jnp.clip(pos, 0, Wb - 1)
-            found = (pos >= 0) & oki            # mask ci's sentinel padding
-
-            def per_edge(found_, ei_, ej_, pc_, e__, ok__):
-                vals, idxs = jax.lax.top_k(found_.astype(jnp.float32), K)
-                good = (vals > 0) & ok__
-                e_ik = ei_[idxs]
-                e_jk = ej_[pc_[idxs]]
-                tri = jnp.stack([jnp.full((K,), e__, dtype=jnp.int32), e_ik,
-                                 e_jk], axis=-1)
-                good = good & (e_ik >= 0) & (e_jk >= 0)
-                return tri, good
-
-            tris, goods = jax.vmap(per_edge)(found, ei, ej, pc, e_, ok_)
-            return (tris.reshape(-1, 3).astype(jnp.int32), goods.reshape(-1))
+            return triangles_from_windows(ci, ei, oki, cj, ej, e_, ok_, K,
+                                          intersect)
         return batch
 
     if Ws >= W:

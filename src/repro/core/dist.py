@@ -76,6 +76,143 @@ def resolve_batch_shards(shards: int) -> int:
     return min(int(shards), jax.device_count())
 
 
+# ---------------------------------------------------------------------------
+# Edge-range state sharding (SolverConfig.state_shards): the mesh + the
+# collective primitives the fully sharded solve is built from. Everything
+# here is engineered for SHARD-COUNT INVARIANCE — bit-identical results for
+# every state_shards setting — which rules out float psum (reduction order
+# varies with S): scalars go through fixed-range blocked sums, per-edge
+# values through ownership gathers (all_gather + integer select, no float
+# arithmetic).
+# ---------------------------------------------------------------------------
+
+STATE_AXIS = "state"
+
+# Fixed number of reduction ranges for S-invariant scalar sums over the
+# edge axis: the padded edge count is split into STATE_BLOCKS contiguous
+# ranges, each summed locally, and the (STATE_BLOCKS,) partials are
+# combined in the same fixed order on every device. Any S dividing
+# STATE_BLOCKS computes the identical float result because the per-range
+# partial sums and their combine order never depend on S.
+STATE_BLOCKS = 16
+
+
+@lru_cache(maxsize=None)
+def state_mesh(shards: int):
+    """1-D mesh over the first ``shards`` devices, axis name "state" — the
+    mesh the edge-range-partitioned :class:`~repro.core.solver.SolverState`
+    lives on for the lifetime of a solve. Cached like the sep/batch
+    meshes."""
+    n = jax.device_count()
+    if shards > n:
+        raise ValueError(f"state_shards={shards} exceeds the "
+                         f"{n} available device(s)")
+    return jax.sharding.Mesh(np.array(jax.devices()[:shards]), (STATE_AXIS,))
+
+
+def resolve_state_shards(shards: int) -> int:
+    """Clamp a requested state-shard count to the devices present AND to a
+    divisor of STATE_BLOCKS (the blocked reductions require S | blocks;
+    divisors keep every padded-E constraint a single 'divisible by 16')."""
+    if shards is None or shards <= 1:
+        return 1
+    s = min(int(shards), jax.device_count())
+    while STATE_BLOCKS % s:
+        s -= 1
+    return s
+
+
+def edge_range_start(num_local_edges: int, axis: str = STATE_AXIS):
+    """Global edge id of this shard's first slot (traced int32)."""
+    return (jax.lax.axis_index(axis) * num_local_edges).astype(jnp.int32)
+
+
+def gather_edge_field(x_local: jax.Array, ids: jax.Array,
+                      axis: str = STATE_AXIS, fill=0):
+    """Ownership halo gather: the value of a sharded per-edge field at
+    arbitrary *global* edge ids, replicated on every shard.
+
+    Each shard contributes its owned values (everything else masked to
+    ``fill``); one ``all_gather`` + an integer owner-select recovers the
+    exact stored bits — no float arithmetic touches the values, so the
+    result is invariant to the shard count by construction.
+    """
+    E_loc = x_local.shape[0]
+    e0 = edge_range_start(E_loc, axis)
+    local = ids - e0
+    mine = (local >= 0) & (local < E_loc)
+    vals = jnp.where(mine, x_local[jnp.clip(local, 0, E_loc - 1)], fill)
+    gathered = jax.lax.all_gather(vals, axis)          # (S, ...) halo buffer
+    owner = jnp.clip(ids // E_loc, 0, gathered.shape[0] - 1)
+    return jnp.take_along_axis(gathered, owner[None], axis=0)[0]
+
+
+def tree_sum(x: jax.Array) -> jax.Array:
+    """Sum along the LAST axis by an explicit pairwise halving tree of
+    elementwise adds. ``jnp.sum`` lowers to an XLA reduce whose float
+    accumulation order is a compiler choice — it can change with the
+    surrounding program (fusion context), which breaks bit-reproducibility
+    across shard counts even at identical reduce widths. Spelling the tree
+    out as adds of distinct tensors pins the float DAG to the (static)
+    width alone: same width → same bits, on every backend."""
+    while x.shape[-1] > 1:
+        half = x.shape[-1] // 2
+        paired = x[..., : 2 * half : 2] + x[..., 1: 2 * half : 2]
+        if x.shape[-1] % 2:
+            paired = jnp.concatenate([paired, x[..., -1:]], axis=-1)
+        x = paired
+    return x[..., 0]
+
+
+def blocked_sum(x_local: jax.Array, shards: int, axis: str = STATE_AXIS,
+                blocks: int = STATE_BLOCKS) -> jax.Array:
+    """Shard-count-invariant sum of a sharded (E/S,) float array.
+
+    The global edge axis is cut into ``blocks`` fixed ranges (``shards``
+    must divide ``blocks`` and ``blocks`` the padded E; both enforced at
+    the solve entry): each shard reduces its ``blocks/S`` ranges locally
+    with the deterministic :func:`tree_sum`, the per-range partials are
+    all_gathered in shard-major order — which IS ascending range order —
+    and combined by the same fixed tree on every device. The float result
+    is identical for every S dividing ``blocks`` (each range's summand
+    set, tree shape and combine order never change), which is what lets
+    lower bounds / objectives / gains match bitwise across
+    ``state_shards`` settings. ``shards`` is the static mesh size (shapes
+    depend on it).
+    """
+    local_ranges = blocks // shards
+    parts_local = tree_sum(x_local.reshape(local_ranges, -1))
+    parts = jax.lax.all_gather(parts_local, axis).reshape(-1)   # (blocks,)
+    return tree_sum(parts)
+
+
+def combine_node_best(val_local: jax.Array, key_local: jax.Array,
+                      payload_local: jax.Array, axis: str = STATE_AXIS):
+    """Combine per-shard (value, tie-key, payload) node tables into the
+    global per-node argmax with the replicated tie-break (max value; ties
+    to the smallest key).
+
+    Every shard contributes its local winner per node; the fold over the
+    all_gathered (S, N) tables runs in shard order with pure
+    compare-and-select (no float accumulation), so the result is exact and
+    identical for every shard count: it is the element the replicated
+    ``segment_argmax`` would pick, because keys encode the replicated
+    global tie order and each shard's local winner is already its
+    smallest-key max. Empty segments carry val = -inf and survive as
+    (-inf, key, payload) for the caller to mask."""
+    vals = jax.lax.all_gather(val_local, axis)        # (S, N)
+    keys = jax.lax.all_gather(key_local, axis)
+    pays = jax.lax.all_gather(payload_local, axis)
+    S = vals.shape[0]
+    bv, bk, bp = vals[0], keys[0], pays[0]
+    for s in range(1, S):
+        better = (vals[s] > bv) | ((vals[s] == bv) & (keys[s] < bk))
+        bv = jnp.where(better, vals[s], bv)
+        bk = jnp.where(better, keys[s], bk)
+        bp = jnp.where(better, pays[s], bp)
+    return bv, bk, bp
+
+
 def local_pd_round(u, v, cost, edge_valid, node_valid, *, mp_iters: int,
                    max_neg: int, max_tri_per_edge: int):
     """One PD round on a single block — the same fused separation → message

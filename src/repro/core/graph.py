@@ -23,6 +23,53 @@ import numpy as np
 
 GRAPH_IMPLS = ("dense", "sparse", "auto")
 
+INT32_MAX = 2 ** 31 - 1
+
+# --------------------------------------------------------------------------
+# Addressing dtype policy (>2^31-edge safety)
+# --------------------------------------------------------------------------
+#
+# Edge ids stay int32 *within a shard* (the sharded solve partitions the
+# edge range, so per-shard counts are E/S); what can overflow first are the
+# CSR *offsets*: ``row_ptr`` counts directed entries, i.e. runs to 2E.
+# The policy: offsets widen to int64 once 2E exceeds int32 — but int64 on
+# device requires x64 mode, so without ``jax.config.jax_enable_x64`` any
+# build that would need wide offsets raises an actionable ValueError
+# instead of silently wrapping (see :func:`check_edge_addressing`).
+
+
+def offset_dtype(num_edges: int):
+    """Dtype for CSR offsets (values run to 2·num_edges): int32 while they
+    fit, int64 beyond (requires x64 — checked by
+    :func:`check_edge_addressing` before any array is built)."""
+    return jnp.int64 if 2 * num_edges > INT32_MAX else jnp.int32
+
+
+def index_dtype(num_edges: int):
+    """Dtype for edge ids (values run to num_edges): int32 while they fit.
+    Within a shard of the edge-partitioned solve this is always int32 —
+    only a replicated build over >2^31 edges widens."""
+    return jnp.int64 if num_edges > INT32_MAX else jnp.int32
+
+
+def check_edge_addressing(num_edges: int, where: str = "build_csr") -> None:
+    """Raise an actionable ValueError when ``num_edges`` needs int64
+    addressing (edge count or 2E CSR offsets past int32) but x64 mode is
+    off — the failure mode otherwise is silent int32 wraparound producing
+    wrong CSR rows with no error."""
+    if 2 * num_edges <= INT32_MAX:
+        return
+    if not jax.config.jax_enable_x64:
+        raise ValueError(
+            f"{where}: {num_edges} edges need int64 addressing (CSR "
+            f"offsets run to 2E = {2 * num_edges} > int32 max "
+            f"{INT32_MAX}), but jax x64 mode is off — offsets would "
+            f"silently wrap. Enable the int64 offset policy with "
+            f"jax.config.update('jax_enable_x64', True) (edge ids stay "
+            f"int32 within a shard; see graph.py 'Addressing dtype "
+            f"policy'), or shard the instance so each shard holds "
+            f"<= {INT32_MAX // 2} edges.")
+
 # "auto" flips the separation data path to CSR above this padded node count.
 # Derived, not guessed: the dense path's per-round cost is dominated by the
 # (N, N) adjacency build + the per-repulsive-edge (nbr_k, N)·(N, nbr_k)
@@ -119,6 +166,7 @@ def make_instance(u, v, cost, num_nodes: int, pad_edges: int | None = None,
     Ep = pad_edges if pad_edges is not None else E
     Np = pad_nodes if pad_nodes is not None else num_nodes
     assert Ep >= E and Np >= num_nodes
+    check_edge_addressing(Ep, where="make_instance")
     uu = np.zeros(Ep, dtype=np.int32); uu[:E] = lo
     vv = np.zeros(Ep, dtype=np.int32); vv[:E] = hi
     cc = np.zeros(Ep, dtype=np.float32); cc[:E] = cost
@@ -134,6 +182,163 @@ def to_host_edges(inst: MulticutInstance):
     ev = np.asarray(inst.edge_valid)
     return (np.asarray(inst.u)[ev], np.asarray(inst.v)[ev],
             np.asarray(inst.cost)[ev])
+
+
+class StreamStats(NamedTuple):
+    """Host-memory accounting of :func:`make_instance_streamed` — what the
+    allocation test pins: the ingest never buffers more than one shard
+    range plus one chunk of COO on the host."""
+    n_chunks: int           # COO chunks consumed
+    n_edges: int            # valid edges ingested
+    peak_host_elems: int    # max host-resident edge slots at any instant
+                            # (shard buffer + in-flight chunk)
+
+
+def make_instance_streamed(chunks, num_nodes: int, pad_edges: int,
+                           state_shards: int = 1,
+                           pad_nodes: int | None = None,
+                           ) -> tuple[MulticutInstance, StreamStats]:
+    """Streaming instance ingest: build the padded edge arrays shard range
+    by shard range from an iterable of COO ``(u, v, cost)`` chunks, so the
+    full edge list is never materialized on one host.
+
+    ``chunks`` yields host arrays in final edge-id order; the input must be
+    **duplicate-free** (cross-chunk parallel-edge merging would require the
+    full list — exactly what streaming avoids; :func:`make_instance` merges
+    duplicates for callers who can afford materialization). Each chunk is
+    validated like ``make_instance`` (id range, self-loop costs).
+
+    Edges are accumulated into one host buffer of ``pad_edges /
+    state_shards`` slots; every time a contiguous shard range fills, it is
+    shipped to its device (``jax.device_put`` onto the state mesh's
+    devices) and the buffer is reused — peak host memory is one shard
+    range + one chunk, not E (returned in :class:`StreamStats`, pinned by
+    tests/test_state_sharded.py). With ``state_shards=1`` this degrades to
+    chunked assembly of a single-device instance (still bounded by the one
+    reusable buffer since S=1 means the buffer IS the edge range).
+
+    Returns ``(instance, stats)``; the instance's edge leaves are sharded
+    jax Arrays (leading axis split over the state mesh) ready for
+    ``api.solve(config=SolverConfig(state_shards=...))``.
+    """
+    from repro.core.dist import resolve_state_shards, state_mesh
+    S = resolve_state_shards(state_shards)
+    if pad_edges % S:
+        raise ValueError(f"pad_edges={pad_edges} must be divisible by the "
+                         f"{S} resolved state shard(s)")
+    check_edge_addressing(pad_edges, where="make_instance_streamed")
+    E_loc = pad_edges // S
+    mesh = state_mesh(S)
+    devices = list(mesh.devices.ravel())
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("state"))
+
+    buf_u = np.zeros(E_loc, np.int32)
+    buf_v = np.zeros(E_loc, np.int32)
+    buf_c = np.zeros(E_loc, np.float32)
+    buf_ev = np.zeros(E_loc, bool)
+    shard_arrays: list[tuple] = []
+    fill = 0            # edges placed into the current shard buffer
+    shard = 0
+    n_edges = 0
+    n_chunks = 0
+    peak = 0
+
+    def flush_shard():
+        nonlocal shard, fill
+        dev = devices[shard]
+        shard_arrays.append(tuple(
+            jax.device_put(a.copy(), dev)
+            for a in (buf_u, buf_v, buf_c, buf_ev)))
+        buf_u[:] = 0; buf_v[:] = 0; buf_c[:] = 0.0; buf_ev[:] = False
+        shard += 1
+        fill = 0
+
+    for cu, cv, cc in chunks:
+        cu = np.asarray(cu, dtype=np.int32)
+        cv = np.asarray(cv, dtype=np.int32)
+        cc = np.asarray(cc, dtype=np.float32)
+        if not (cu.shape == cv.shape == cc.shape and cu.ndim == 1):
+            raise ValueError(
+                f"chunk {n_chunks}: u/v/cost must be 1-D arrays of equal "
+                f"length; got shapes {cu.shape}, {cv.shape}, {cc.shape}")
+        if len(cu) and (cu.min() < 0 or cv.min() < 0
+                        or max(cu.max(), cv.max()) >= num_nodes):
+            raise ValueError(f"chunk {n_chunks}: node ids must lie in "
+                             f"[0, {num_nodes})")
+        if len(cu) and np.any((cu == cv) & (cc != 0.0)):
+            raise ValueError(f"chunk {n_chunks}: self-loops must have zero "
+                             f"cost (see make_instance)")
+        lo = np.minimum(cu, cv); hi = np.maximum(cu, cv)
+        n_chunks += 1
+        peak = max(peak, E_loc + len(lo))
+        off = 0
+        while off < len(lo):
+            if n_edges + (len(lo) - off) > pad_edges:
+                raise ValueError(
+                    f"streamed edges exceed pad_edges={pad_edges}; raise "
+                    f"the pad (round_up_edges helps pick a shardable one)")
+            take = min(E_loc - fill, len(lo) - off)
+            sl = slice(fill, fill + take)
+            buf_u[sl] = lo[off:off + take]
+            buf_v[sl] = hi[off:off + take]
+            buf_c[sl] = cc[off:off + take]
+            buf_ev[sl] = True
+            fill += take
+            off += take
+            n_edges += take
+            if fill == E_loc:
+                flush_shard()
+    while shard < S:
+        flush_shard()
+
+    def assemble(i):
+        return jax.make_array_from_single_device_arrays(
+            (pad_edges,), sharding, [p[i] for p in shard_arrays])
+
+    u, v, c, ev = assemble(0), assemble(1), assemble(2), assemble(3)
+    Np = pad_nodes if pad_nodes is not None else num_nodes
+    nv = np.zeros(Np, bool); nv[:num_nodes] = True
+    inst = MulticutInstance(u=u, v=v, cost=c, edge_valid=ev,
+                            node_valid=jnp.asarray(nv))
+    return inst, StreamStats(n_chunks=n_chunks, n_edges=n_edges,
+                             peak_host_elems=peak)
+
+
+def round_up_edges(num_edges: int, state_shards: int = 1,
+                   blocks: int = 16) -> int:
+    """Smallest pad_edges >= num_edges compatible with the sharded solve:
+    divisible by ``blocks`` (the S-invariant blocked-reduction ranges,
+    ``repro.core.dist.STATE_BLOCKS``) and by ``state_shards``."""
+    import math
+    q = math.lcm(max(1, int(blocks)), max(1, int(state_shards)))
+    return ((max(1, num_edges) + q - 1) // q) * q
+
+
+ROW_CAP_FLOOR = 8   # never tune sparse_row_cap_short below this: tiny
+                    # windows make every row "long" and the short pass
+                    # pure overhead (shared by the serving engine's
+                    # per-bucket tuner and api.solve's one-shot tuner)
+
+
+def attractive_degree_p95(inst: MulticutInstance, floor: int = ROW_CAP_FLOOR,
+                          cap: int = 128) -> int:
+    """Host-side p95 of the per-node attractive (cost > 0) degree over
+    valid nodes, clamped to ``[floor, cap]`` — the one-shot
+    ``sparse_row_cap_short`` tuning shared by the serving engine's
+    per-bucket self-tuning and ``api.solve(tune_sparse_caps=True)``. The
+    covering caps in degree-bucketed separation make any value
+    bit-identical; this picks the wall-clock sweet spot (windows wide
+    enough for ~95% of rows to take the narrow pass)."""
+    import math
+    u = np.asarray(inst.u)
+    v = np.asarray(inst.v)
+    att = np.asarray(inst.edge_valid) & (np.asarray(inst.cost) > 0)
+    deg = (np.bincount(u[att], minlength=inst.num_nodes)
+           + np.bincount(v[att], minlength=inst.num_nodes))
+    deg = deg[np.asarray(inst.node_valid)]
+    p95 = float(np.percentile(deg, 95)) if deg.size else 0.0
+    return int(np.clip(math.ceil(p95), floor, cap))
 
 
 # ---------------------------------------------------------------------------
@@ -168,11 +373,15 @@ def build_csr(u, v, mask, num_nodes: int) -> CsrGraph:
     """Jit-safe COO→CSR: lexsort the 2E directed copies by (src, dst, eid);
     masked-out edges get sentinel endpoints that sort past every live row,
     and ``row_ptr`` falls out of one searchsorted over the sorted src column
-    (Alg. 4's sort_by_key, shape-static)."""
+    (Alg. 4's sort_by_key, shape-static). Offsets follow the module's
+    addressing dtype policy: int32 while 2E fits, int64 past that (x64
+    required — :func:`check_edge_addressing` raises before anything
+    wraps)."""
     E = u.shape[0]
+    check_edge_addressing(E, where="build_csr")
     src = jnp.concatenate([u, v]).astype(jnp.int32)
     dst = jnp.concatenate([v, u]).astype(jnp.int32)
-    eid = jnp.tile(jnp.arange(E, dtype=jnp.int32), 2)
+    eid = jnp.tile(jnp.arange(E, dtype=index_dtype(E)), 2)
     m = jnp.concatenate([mask, mask])
     src = jnp.where(m, src, num_nodes)
     dst = jnp.where(m, dst, num_nodes)
@@ -180,7 +389,7 @@ def build_csr(u, v, mask, num_nodes: int) -> CsrGraph:
     src_s = src[order]
     row_ptr = jnp.searchsorted(
         src_s, jnp.arange(num_nodes + 1, dtype=jnp.int32),
-        side="left").astype(jnp.int32)
+        side="left").astype(offset_dtype(E))
     return CsrGraph(row_ptr=row_ptr, col=dst[order],
                     edge_id=jnp.where(m[order], eid[order], -1))
 

@@ -131,6 +131,86 @@ def lower_bound(cost, edge_valid, state: MPState) -> jax.Array:
     return lb_e + lb_t
 
 
+def run_message_passing_sharded(cost_local, edge_valid_local, tri, tri_valid,
+                                iters: int, shards: int, sweep=None,
+                                axis: str = None):
+    """Sharded Alg. 2 under ``shard_map``: per-edge cost/validity arrays are
+    the local (E/S,) edge-range slices; triangles (replicated, global edge
+    ids) are swept by every shard. Returns (c_rep_local, lb).
+
+    All halo exchanges are hoisted out of the iteration scan — costs are
+    constant during MP, so the (T, 3) slot costs are gathered ONCE
+    (``gather_edge_field``) and the per-slot degrees and contribution sums
+    run over *compact* triangle-edge ids (the ≤3T distinct edge ids
+    relabelled to [0, 3T)), making the scan body collective-free. The
+    compact segment_sum accumulates the same contributions at the same
+    flat positions as the replicated per-edge segment_sum, so every slot
+    quantity — and hence the sweep — is bitwise identical to
+    :func:`run_message_passing`; the final reduced costs land back on
+    owned edges via one local segment_sum and the lower bound's edge term
+    goes through :func:`~repro.core.dist.blocked_sum`, keeping the scalar
+    invariant to the shard count."""
+    from repro.core.dist import STATE_AXIS, blocked_sum, edge_range_start, \
+        gather_edge_field, tree_sum
+    if axis is None:
+        axis = STATE_AXIS
+    T = tri.shape[0]
+    E_loc = cost_local.shape[0]
+    flat_ids = tri.reshape(-1)                                   # (3T,)
+    # one halo exchange for the whole MP phase
+    cost_at = gather_edge_field(cost_local, flat_ids, axis).reshape(T, 3)
+    # compact ids: distinct triangle-edge ids relabelled to [0, 3T)
+    uniq = jnp.unique(flat_ids, size=flat_ids.shape[0],
+                      fill_value=jnp.iinfo(jnp.int32).max)
+    comp = jnp.searchsorted(uniq, flat_ids).astype(jnp.int32)
+    ones = jnp.broadcast_to(tri_valid[:, None].astype(jnp.int32),
+                            tri.shape).reshape(-1)
+    deg_at = jax.ops.segment_sum(ones, comp,
+                                 num_segments=flat_ids.shape[0])[comp] \
+        .reshape(T, 3)
+    if sweep is None:
+        sweep = mp_sweep_reference
+
+    def slot_contrib(t_cost):
+        contrib = jnp.where(tri_valid[:, None], -t_cost, 0.0).reshape(-1)
+        sums = jax.ops.segment_sum(contrib, comp,
+                                   num_segments=flat_ids.shape[0])
+        return contrib, cost_at + sums[comp].reshape(T, 3)
+
+    def body(t_cost, _):
+        _, c_rep_at = slot_contrib(t_cost)
+        share_at = jnp.where(deg_at > 0,
+                             c_rep_at / jnp.maximum(deg_at, 1), 0.0)
+        t_cost = t_cost + share_at * tri_valid[:, None]
+        swept = sweep(t_cost)
+        t_cost = jnp.where(tri_valid[:, None], swept, t_cost)
+        return t_cost, None
+
+    t_cost0 = jnp.zeros((T, 3), dtype=jnp.float32)
+    t_cost, _ = jax.lax.scan(body, t_cost0, None, length=iters)
+
+    # land the final reparametrization back on owned edges: contributions
+    # at out-of-range ids fall into a dead segment
+    contrib, _ = slot_contrib(t_cost)
+    e0 = edge_range_start(E_loc, axis)
+    local = flat_ids - e0
+    seg = jnp.where((local >= 0) & (local < E_loc), local, E_loc)
+    c_rep_local = cost_local + jax.ops.segment_sum(
+        contrib, seg, num_segments=E_loc + 1)[:E_loc]
+
+    lb_e = blocked_sum(jnp.where(edge_valid_local,
+                                 jnp.minimum(0.0, c_rep_local), 0.0),
+                       shards, axis)
+    a, b, c = t_cost[:, 0], t_cost[:, 1], t_cost[:, 2]
+    states = jnp.stack([jnp.zeros_like(a), a + b, a + c, b + c, a + b + c],
+                       axis=-1)
+    # tri arrays are replicated (same T on every S), but jnp.sum's reduce
+    # order is a compile-time choice that can shift with the surrounding
+    # program — use the width-pinned tree so the scalar matches across S
+    lb_t = tree_sum(jnp.where(tri_valid, jnp.min(states, axis=-1), 0.0))
+    return c_rep_local, lb_e + lb_t
+
+
 @partial(jax.jit, static_argnames=("iters", "sweep", "unroll"))
 def run_message_passing(cost, edge_valid, state: MPState, iters: int,
                         sweep=None, unroll: bool = False):

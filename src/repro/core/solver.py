@@ -99,6 +99,15 @@ class SolverConfig:
                                     # chunk axis over (shard_map; clamped to
                                     # the devices present; bit-identical to
                                     # the single-device solve)
+    state_shards: int = 0           # >=1: edge-range-partitioned solve — the
+                                    # whole SolverState (CSR included) lives
+                                    # sharded across the "state" mesh for the
+                                    # life of the solve (repro.core.sharded;
+                                    # PD + 3-cycles + sparse only; clamped to
+                                    # devices and to a divisor of
+                                    # dist.STATE_BLOCKS; bit-identical across
+                                    # shard counts). 0 = the replicated path,
+                                    # byte-for-byte untouched
     delta_halo: int = 2             # warm delta re-solve: hops of halo
                                     # around patched endpoints included in
                                     # the round-0 separation frontier (see
@@ -354,6 +363,15 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
     :func:`_solve_pd_sparse`; dense ignores ``csr0`` — it has no CSR to
     carry — but honours the round-0 frontier mask).
     """
+    if cfg.state_shards:
+        from repro.core.sharded import solve_state_sharded
+        if csr0 is not None or sep_mask0 is not None:
+            raise ValueError("state_shards does not take warm-start seeds "
+                             "(csr/sep_node_mask): the carried CSR is "
+                             "per-shard with local edge ids, not the "
+                             "replicated one delta re-solves splice")
+        return solve_state_sharded(inst, cfg, mode="pd+" if plus else "pd",
+                                   sweep=sweep, intersect=intersect)
     if resolve_graph_impl(cfg.graph_impl, inst.num_nodes,
                           cfg.sparse_threshold) == "sparse":
         return _solve_pd_sparse(inst, cfg, plus, sweep, intersect,
@@ -472,6 +490,11 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
     if cfg.graph_impl not in GRAPH_IMPLS:
         raise ValueError(f"unknown graph_impl {cfg.graph_impl!r}; expected "
                          f"one of {GRAPH_IMPLS}")
+    if cfg.state_shards and mode in ("p", "d"):
+        raise ValueError(
+            f"state_shards requires mode='pd' (got {mode!r}); the sharded "
+            f"solve supports 3-cycle separation only, and p/d have no "
+            f"edge-partitioned round to run")
     if mode == "p":
         return _solve_p_device(inst, cfg)
     if mode == "pd":

@@ -116,7 +116,9 @@ EMA_ALPHA = 0.4             # wall-clock EMA smoothing: heavy enough to
                             # within a few samples, light enough not to
                             # chase per-dispatch jitter
 
-ROW_CAP_FLOOR = 8           # sparse_row_cap_short self-tuning clamp floor
+# sparse_row_cap_short self-tuning clamp floor — shared with api.solve's
+# one-shot tuner; re-exported here for existing importers
+from repro.core.graph import ROW_CAP_FLOOR  # noqa: E402
 
 
 @dataclasses.dataclass
@@ -510,16 +512,12 @@ class SolveEngine:
     def _p95_attractive_degree(inst: MulticutInstance, route: Route) -> int:
         """p95 of the per-node attractive (cost > 0) degree over valid
         nodes — the short-row cap that covers ~95% of CSR rows in the
-        cheap separation bucket."""
-        u = np.asarray(inst.u)
-        v = np.asarray(inst.v)
-        att = np.asarray(inst.edge_valid) & (np.asarray(inst.cost) > 0)
-        deg = (np.bincount(u[att], minlength=inst.num_nodes)
-               + np.bincount(v[att], minlength=inst.num_nodes))
-        deg = deg[np.asarray(inst.node_valid)]
-        p95 = float(np.percentile(deg, 95)) if deg.size else 0.0
-        return int(np.clip(math.ceil(p95), ROW_CAP_FLOOR,
-                           route.config.sparse_row_cap))
+        cheap separation bucket. Delegates to the shared
+        :func:`repro.core.graph.attractive_degree_p95` (also behind
+        ``api.solve(tune_sparse_caps=True)``)."""
+        from repro.core.graph import attractive_degree_p95
+        return attractive_degree_p95(inst, ROW_CAP_FLOOR,
+                                     route.config.sparse_row_cap)
 
     def _ladder(self, route: Route) -> tuple[int, ...]:
         rungs = self._ladders.get(route)
