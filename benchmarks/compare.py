@@ -19,6 +19,13 @@ a PR intentionally moves the numbers) and FAIL (exit 1) on regressions:
 ``--report-only`` restores the old informational behaviour (exit 0).
 Cases present on only one side (NEW/DROPPED) are reported, never gated.
 
+``--profile BASELINE.json FRESH.json`` additionally prints per-phase
+wall/flops deltas between two ``BENCH_profile.json`` roofline artifacts
+(see benchmarks/profile_smoke.py) — ALWAYS report-only: phase walls are
+measured on standalone executables and carry more runner noise than the
+fused solves, so they localise drift in CI logs without gating on it. A
+missing profile file is reported and skipped, never fatal.
+
 Wall baselines are machine-class-relative: refresh the committed baseline
 from the BENCH_solver artifact a CI run uploads (not from a dev machine —
 a systematically slower/faster runner class shifts every wall number at
@@ -85,6 +92,34 @@ def _phase_lines(baseline: dict, fresh: dict) -> list[str]:
                          f"{_fmt_delta(b.get(phase), f.get(phase), 's')}")
     if lines:
         lines.insert(0, "per-phase round breakdown (report-only):")
+    return lines
+
+
+def profile_lines(baseline: dict, fresh: dict) -> list[str]:
+    """Report-only deltas between two BENCH_profile.json artifacts:
+    per-phase wall and flops for each graph impl, plus the round totals.
+    Never gated (see the module docstring)."""
+    bi, fi = baseline.get("impls", {}), fresh.get("impls", {})
+    lines = []
+    for impl in sorted(set(bi) | set(fi)):
+        b, f = bi.get(impl, {}), fi.get(impl, {})
+        bp, fp = b.get("phases", {}), f.get("phases", {})
+        for phase in sorted(set(bp) | set(fp)):
+            br, fr = bp.get(phase, {}), fp.get(phase, {})
+
+            def r(v, nd=4):
+                return round(v, nd) if isinstance(v, float) else v
+
+            lines.append(f"  {phase}/{impl}: wall "
+                         f"{_fmt_delta(r(br.get('wall_s')), r(fr.get('wall_s')), 's')}"
+                         f"  flops {_fmt_delta(br.get('flops'), fr.get('flops'))}")
+        bw, fw = b.get("round_wall_s"), f.get("round_wall_s")
+        if bw is not None or fw is not None:
+            lines.append(
+                f"  round/{impl}: wall "
+                f"{_fmt_delta(round(bw, 4) if isinstance(bw, float) else bw, round(fw, 4) if isinstance(fw, float) else fw, 's')}")
+    if lines:
+        lines.insert(0, "roofline profile deltas (report-only):")
     return lines
 
 
@@ -175,9 +210,18 @@ def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
     report_only = "--report-only" in argv
     argv = [a for a in argv if a != "--report-only"]
+    profile_paths = None
+    if "--profile" in argv:
+        i = argv.index("--profile")
+        profile_paths = argv[i + 1:i + 3]
+        del argv[i:i + 3]
+        if len(profile_paths) != 2:
+            raise SystemExit("--profile needs BASELINE.json FRESH.json")
     if len(argv) != 2:
         raise SystemExit("usage: python -m benchmarks.compare "
-                         "[--report-only] BASELINE.json FRESH.json")
+                         "[--report-only] BASELINE.json FRESH.json "
+                         "[--profile PROFILE_BASELINE.json "
+                         "PROFILE_FRESH.json]")
     with open(argv[0]) as fh:
         baseline = json.load(fh)
     with open(argv[1]) as fh:
@@ -188,6 +232,19 @@ def main(argv=None) -> None:
         print(line)
     for line in _phase_lines(baseline, fresh):
         print(line)
+    if profile_paths is not None:
+        try:
+            with open(profile_paths[0]) as fh:
+                pbase = json.load(fh)
+            with open(profile_paths[1]) as fh:
+                pfresh = json.load(fh)
+        except OSError as e:
+            print(f"profile compare skipped: {e}")
+        else:
+            print(f"profile trajectory: {profile_paths[0]} -> "
+                  f"{profile_paths[1]}")
+            for line in profile_lines(pbase, pfresh):
+                print(line)
     fails = gate_failures(baseline, fresh)
     if fails:
         print("\nGATE FAILURES (refresh benchmarks/BENCH_solver.baseline"

@@ -28,7 +28,18 @@ pumps between arrivals, so batches form from whatever has genuinely
 arrived and deadline pressure — not batch occupancy — decides when
 partial batches go out. Recorded: occupancy, p50/p99 completion
 latency, and the deadline-miss rate, all gated by
-``benchmarks/compare.py``.
+``benchmarks/compare.py``. Latency percentiles come from the engine's
+bounded log-bucketed histogram (:class:`repro.obs.metrics.Histogram`) —
+O(1) memory with a ≤ 9.06% relative error bound, instead of the old
+truncating 65536-entry window.
+
+**Traced pass**: the closed-loop stream is served once more with the
+request-lifecycle tracer and the metrics registry on; the pass must
+produce the same summed objective, write a valid Perfetto/Chrome trace
+(``SERVE_trace.json``) and a parseable Prometheus exposition
+(``SERVE_metrics.prom``), and stay within ``TRACE_OVERHEAD`` of the
+untraced wall (plus an absolute jitter floor) — the gate that keeps
+observability effectively free.
 
 Baseline note: wall baselines carry deliberate runner-class headroom
 until tightened from CI artifacts, per the policy in
@@ -46,6 +57,7 @@ import numpy as np
 
 from repro.core.graph import random_instance
 from repro.core.solver import SolverConfig
+from repro.obs import SpanRecorder
 from repro.serve import BucketPolicy, Route, Router, RoutingRule, SolveEngine
 
 SERVE_N = 64
@@ -66,6 +78,10 @@ POISSON_RATE = 5.0          # open-loop arrivals per second (~0.6x the
                             # the queue is stable and misses are real
                             # scheduling events, not saturation)
 DEADLINE_S = 2.0            # per-request completion deadline (open loop)
+TRACE_OVERHEAD = 1.05       # traced closed-loop wall must stay within 5%
+                            # of the untraced wall ...
+TRACE_JITTER_S = 0.5        # ... plus this absolute floor (runner noise
+                            # on a ~seconds-scale pass)
 POLICY = BucketPolicy(node_floor=64, edge_floor=256, growth=2 ** 0.5)
 DENSE_ROUTE = Route(mode="pd",
                     config=SolverConfig(max_neg=256, mp_iters=5,
@@ -96,8 +112,56 @@ def _stream(size_seed: int = 42, seed_base: int = 1000):
     return out
 
 
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs), q))
+def _validate_prometheus(text: str) -> int:
+    """Minimal exposition-format check: every sample line is
+    ``name[{labels}] value`` with a parseable value, and every sample's
+    base metric carries a ``# TYPE``. Returns the number of samples."""
+    typed = set()
+    n = 0
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            typed.add(line.split()[2])
+            continue
+        if line.startswith("#"):
+            continue
+        name, _, value = line.partition(" ")
+        base = name.split("{")[0]
+        base = base.rsplit("_bucket", 1)[0].rsplit("_sum", 1)[0] \
+                   .rsplit("_count", 1)[0]
+        if base not in typed:
+            raise SystemExit(f"serve smoke: Prometheus sample {name!r} "
+                             f"has no # TYPE line")
+        float(value.replace("+Inf", "inf"))
+        n += 1
+    if not n:
+        raise SystemExit("serve smoke: empty Prometheus exposition")
+    return n
+
+
+def _validate_chrome_trace(doc: dict) -> int:
+    """Minimal Trace Event Format check: a traceEvents list whose events
+    carry ph/pid/tid, complete events a dur, instants a scope. Returns
+    the number of non-metadata events."""
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        raise SystemExit("serve smoke: trace has no traceEvents")
+    n = 0
+    for ev in evs:
+        if ev["ph"] == "M":
+            continue
+        assert "pid" in ev and "tid" in ev and "ts" in ev, ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0, ev
+        elif ev["ph"] == "i":
+            assert ev.get("s") in ("t", "p", "g"), ev
+        else:
+            raise SystemExit(f"serve smoke: unexpected phase {ev['ph']!r}")
+        n += 1
+    if not n:
+        raise SystemExit("serve smoke: trace has no span events")
+    return n
 
 
 def _engine(**kw) -> SolveEngine:
@@ -152,11 +216,12 @@ def _calibrate(insts, extra=()):
     return eng.calibration(), sums, n_buckets, rungs, eng.stats.compiles
 
 
-def _closed_loop_pass(insts, cal):
+def _closed_loop_pass(insts, cal, tracer=None):
     """One timed closed-loop pass with a fresh adaptive engine seeded
-    from the calibration (executables stay warm in the api registry)."""
+    from the calibration (executables stay warm in the api registry).
+    ``tracer`` switches on request-lifecycle span recording."""
     eng = _engine(flush_timeout_s=None, adaptive_routing=True,
-                  min_route_samples=1)
+                  min_route_samples=1, tracer=tracer)
     eng.load_calibration(cal)
     t0 = time.perf_counter()
     results = eng.solve_stream(insts)
@@ -208,12 +273,42 @@ def run_serve(out_path: str = "BENCH_solver.json", csv=None,
     obj2 = float(sum(float(r.objective) for r in timed_res))
     assert obj2 == objective, "serving is deterministic across passes"
 
-    lat = timed_eng.stats.latencies_s
+    # traced pass: same stream with the span recorder + metrics registry
+    # on; must serve identically and stay within the overhead gate
+    tracer = SpanRecorder()
+    teng, tres, wall_traced = _closed_loop_pass(insts, cal, tracer=tracer)
+    assert teng.stats.compiles == 0, "traced pass must be compile-free"
+    objt = float(sum(float(r.objective) for r in tres))
+    assert objt == objective, "tracing must not change served results"
+    limit = max(TRACE_OVERHEAD * wall, wall + TRACE_JITTER_S)
+    if wall_traced > limit:
+        raise SystemExit(
+            f"serve smoke: traced pass took {wall_traced:.3f}s vs "
+            f"{wall:.3f}s untraced — over the {TRACE_OVERHEAD}x "
+            f"(+{TRACE_JITTER_S}s jitter floor) observability budget")
+
+    out_dir = os.path.dirname(os.path.abspath(out_path))
+    trace_path = os.path.join(out_dir, "SERVE_trace.json")
+    tracer.save(trace_path)
+    with open(trace_path) as f:
+        n_events = _validate_chrome_trace(json.load(f))
+    prom_path = os.path.join(out_dir, "SERVE_metrics.prom")
+    prom = teng.metrics_prometheus()
+    n_samples = _validate_prometheus(prom)
+    with open(prom_path, "w") as f:
+        f.write(prom)
+    print(f"wrote {trace_path} ({n_events} events), "
+          f"{prom_path} ({n_samples} samples)")
+
+    lat = timed_eng.stats.latency_hist
     row = {
         "wall_s": round(wall, 4),
         "throughput_ips": round(SERVE_N / wall, 2),
-        "p50_s": round(_percentile(lat, 50), 4),
-        "p99_s": round(_percentile(lat, 99), 4),
+        "p50_s": round(lat.percentile(50), 4),
+        "p99_s": round(lat.percentile(99), 4),
+        "wall_traced_s": round(wall_traced, 4),
+        "trace_overhead": round(wall_traced / wall, 4),
+        "n_spans": len(tracer),
         "objective": objective,
         "lower_bound": lower_bound,
         "n_requests": SERVE_N,
@@ -230,14 +325,14 @@ def run_serve(out_path: str = "BENCH_solver.json", csv=None,
     peng, pres, pwall = _open_loop_pass(pinsts, cal, POISSON_RATE,
                                         DEADLINE_S)
     assert peng.stats.compiles == 0, "open-loop pass must be compile-free"
-    plat = peng.stats.latencies_s
+    plat = peng.stats.latency_hist
     prow = {
         "wall_s": round(pwall, 4),
         "throughput_ips": round(SERVE_N / pwall, 2),
         "rate_ips": POISSON_RATE,
         "deadline_s": DEADLINE_S,
-        "p50_s": round(_percentile(plat, 50), 4),
-        "p99_s": round(_percentile(plat, 99), 4),
+        "p50_s": round(plat.percentile(50), 4),
+        "p99_s": round(plat.percentile(99), 4),
         "occupancy": round(peng.stats.occupancy, 4),
         "deadline_miss_rate": round(peng.stats.deadline_miss_rate, 4),
         "objective": float(sum(float(r.objective) for r in pres)),

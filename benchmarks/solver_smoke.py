@@ -49,6 +49,13 @@ STATE_SHARDED_CFG = api.SolverConfig(max_neg=512, max_tri_per_edge=8,
                                      graph_impl="sparse",
                                      first_round_cycles45=False,
                                      state_shards=4)
+# traced-solve overhead gate: trace=True stacks the SolveTrace pytree into
+# the while-carry (extra leaves, zero host syncs), so the traced wall must
+# track the untraced pd solve. Gated here (not compare.py) because the
+# bound is machine-independent: same executable pair, same machine, back
+# to back. The absolute floor absorbs sub-second jitter on shared runners.
+TRACE_OVERHEAD = 1.05
+TRACE_JITTER_S = 0.25
 
 
 def smoke_instance():
@@ -116,6 +123,33 @@ def run_smoke(out_path: str = "BENCH_solver.json", csv=None) -> dict:
                     csv.add("smoke", f"{mode}/{impl}", "peak_mem_bytes",
                             entry[impl]["peak_mem_bytes"])
         report["modes"][mode] = entry
+
+    # traced pd solve: wall_traced_s rides in the pd rows (report-only in
+    # compare.py); the overhead bound itself hard-fails right here
+    for impl in GRAPH_IMPLS:
+        cfg = dataclasses.replace(SMOKE_CFG, graph_impl=impl)
+        compiled = jax.jit(lambda i, cfg=cfg: solve_device(
+            i, mode="pd", cfg=cfg, trace=True)).lower(inst).compile()
+        t_tr, (res_tr, _tr) = timed(compiled, inst)
+        base = report["modes"]["pd"][impl]
+        if _finite(res_tr.objective) != base["objective"]:
+            raise SystemExit(
+                f"trace=True changed pd/{impl} objective: "
+                f"{base['objective']} -> {_finite(res_tr.objective)}")
+        base["wall_traced_s"] = round(t_tr, 4)
+        if base["wall_s"] > 0:
+            base["trace_overhead"] = round(t_tr / base["wall_s"], 4)
+        limit = max(TRACE_OVERHEAD * base["wall_s"],
+                    base["wall_s"] + TRACE_JITTER_S)
+        if t_tr > limit:
+            raise SystemExit(
+                f"traced pd/{impl} solve too slow: {t_tr:.4f}s vs "
+                f"untraced {base['wall_s']:.4f}s "
+                f"(limit {limit:.4f}s = max({TRACE_OVERHEAD}x, "
+                f"+{TRACE_JITTER_S}s))")
+        if csv is not None:
+            csv.add("smoke", f"pd/{impl}", "wall_traced_s",
+                    base["wall_traced_s"])
 
     compiled = _compile_solve(inst, "pd", CHUNKED_CFG)
     t, res = timed(compiled, inst)

@@ -69,13 +69,13 @@ def main():
     results = engine.solve_stream(insts)
     wall = time.perf_counter() - t0
 
-    lat = np.asarray(engine.stats.latencies_s)
+    lat = engine.stats.latency_hist
     n_clusters = sum(len(set(r.labels.tolist())) for r in results)
     total_obj = sum(float(r.objective) for r in results)
     print(f"served {len(results)} tiles in {wall:.2f}s "
           f"({len(results) / wall:.1f} tiles/s)")
-    print(f"latency p50 {np.percentile(lat, 50):.3f}s  "
-          f"p99 {np.percentile(lat, 99):.3f}s")
+    print(f"latency p50 {lat.percentile(50):.3f}s  "
+          f"p99 {lat.percentile(99):.3f}s")
     print(f"dispatches {engine.stats.n_dispatches}  "
           f"occupancy {engine.stats.occupancy:.0%}  "
           f"compiles {engine.stats.compiles}")

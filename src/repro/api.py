@@ -190,16 +190,24 @@ def _make_registry(maxsize: int):
 
     @lru_cache(maxsize=maxsize)
     def _compiled(mode: str, cfg: SolverConfig, backend: str, batched: bool,
-                  batch_shards: int = 1, kind: str = "solve"):
+                  batch_shards: int = 1, kind: str = "solve",
+                  traced: bool = False):
         """One jitted callable per (mode, config, backend, batched,
-        batch_shards, kind) — the executable registry behind every public
-        entrypoint and behind :class:`repro.serve.SolveEngine`'s dispatch.
+        batch_shards, kind, traced) — the executable registry behind every
+        public entrypoint and behind :class:`repro.serve.SolveEngine`'s
+        dispatch.
 
         ``kind`` selects the traced program: "solve" takes an instance;
         "delta-open" takes an instance and returns (result, DeltaState);
         "delta"/"delta-warm" take (DeltaState, DeltaPatch) and return
-        (result, DeltaState, PatchInfo). The trailing default keeps solve
+        (result, DeltaState, PatchInfo). The trailing defaults keep solve
         cache keys identical to the pre-incremental registry.
+
+        ``traced`` ("solve" kind only) compiles the telemetry-carrying
+        variant: the callable returns ``(SolveResult, SolveTrace)`` (see
+        :mod:`repro.obs.trace`). A separate registry entry by design —
+        the traced executable carries extra while-loop leaves, and the
+        untraced one must stay byte-for-byte the pre-trace program.
 
         ``batch_shards > 1`` (batched "solve" only) shard_maps the vmapped
         solve over the leading batch axis on the 1-D batch mesh from
@@ -208,14 +216,18 @@ def _make_registry(maxsize: int):
         instances are independent), so results are bit-identical to the
         unsharded batch.
         """
+        if traced and kind != "solve":
+            raise ValueError(f"trace=True applies to kind='solve' "
+                             f"executables only (got kind={kind!r}); delta "
+                             f"re-solves do not thread a SolveTrace yet")
         sweep = resolve_sweep(backend)
         intersect = resolve_intersect(backend)
 
         if kind == "solve":
-            def run(inst: MulticutInstance) -> SolveResult:
+            def run(inst: MulticutInstance):
                 _trace_count[0] += 1        # executes at trace time only
                 return solve_device(inst, mode=mode, cfg=cfg, sweep=sweep,
-                                    intersect=intersect)
+                                    intersect=intersect, trace=traced)
         elif kind == "delta-open":
             def run(inst: MulticutInstance):
                 _trace_count[0] += 1
@@ -281,7 +293,8 @@ def compiled_solve(mode: str | None = None,
                    config: SolverConfig | None = None,
                    backend: str | None = None,
                    preset: str | Preset | None = None,
-                   batched: bool = False, batch_shards: int = 1):
+                   batched: bool = False, batch_shards: int = 1,
+                   trace: bool = False):
     """Public accessor to the executable registry: the cached jitted
     callable :func:`solve` / :func:`solve_batch` would dispatch to. The
     serving engine uses this to warm up and dispatch per-bucket
@@ -290,11 +303,16 @@ def compiled_solve(mode: str | None = None,
     ``batch_shards`` is clamped to the devices present (a router asking
     for 4 still serves on a 1-device host), and the clamp happens *before*
     the cache key is formed so both spellings share one executable.
+    ``trace=True`` returns the telemetry-carrying executable (its own
+    registry entry; the callable returns ``(SolveResult, SolveTrace)``).
     """
     mode, config, backend = _normalize(mode, config, backend, preset)
     if batch_shards > 1 and not batched:
         raise ValueError("batch_shards applies to batched executables only")
     from repro.core.dist import resolve_batch_shards
+    if trace:
+        return _compiled(mode, config, backend, batched,
+                         resolve_batch_shards(batch_shards), "solve", True)
     return _compiled(mode, config, backend, batched,
                      resolve_batch_shards(batch_shards))
 
@@ -378,10 +396,20 @@ def solve(inst: MulticutInstance, mode: str | None = None,
           config: SolverConfig | None = None, backend: str | None = None,
           preset: str | Preset | None = None,
           graph_impl: str | None = None,
-          tune_sparse_caps: bool = False) -> SolveResult:
+          tune_sparse_caps: bool = False, trace: bool = False):
     """Solve one multicut instance. The whole solve — separation, message
     passing, contraction, outer rounds — is a single device executable.
     ``graph_impl`` overrides the config's dense/sparse/auto data path.
+
+    ``trace=True`` returns ``(SolveResult, SolveTrace)``: per-round lower
+    bound / objective / conflicted-cycle count / edges contracted /
+    MP improvement (plus per-shard balance on ``state_shards`` solves),
+    captured inside the jitted round loop with ZERO additional host
+    syncs — the trace arrays ride back with the result; digest them with
+    :func:`repro.obs.summarize`. Labels/objective/LB stay bitwise
+    identical to the untraced solve (pinned in tests/test_obs_trace.py);
+    the traced executable is a separate registry entry, so flipping the
+    flag never invalidates the untraced cache.
 
     ``tune_sparse_caps=True`` runs the serving engine's one-shot
     ``sparse_row_cap_short`` tuner before the executable lookup: a
@@ -405,6 +433,9 @@ def solve(inst: MulticutInstance, mode: str | None = None,
             cap = attractive_degree_p95(inst, ROW_CAP_FLOOR,
                                         config.sparse_row_cap)
             config = dataclasses.replace(config, sparse_row_cap_short=cap)
+    if trace:
+        return _compiled(mode, config, backend, False, 1, "solve",
+                         True)(inst)
     return _compiled(mode, config, backend, False, 1)(inst)
 
 
@@ -534,9 +565,9 @@ class Multicut:
         new.update(kwargs)
         return Multicut(**new)
 
-    def solve(self, inst: MulticutInstance) -> SolveResult:
+    def solve(self, inst: MulticutInstance, trace: bool = False):
         return solve(inst, mode=self.mode, config=self.config,
-                     backend=self.backend)
+                     backend=self.backend, trace=trace)
 
     def solve_batch(self, batch: MulticutInstance) -> SolveResult:
         return solve_batch(batch, mode=self.mode, config=self.config,

@@ -133,7 +133,7 @@ def lower_bound(cost, edge_valid, state: MPState) -> jax.Array:
 
 def run_message_passing_sharded(cost_local, edge_valid_local, tri, tri_valid,
                                 iters: int, shards: int, sweep=None,
-                                axis: str = None):
+                                axis: str = None, unroll: bool = False):
     """Sharded Alg. 2 under ``shard_map``: per-edge cost/validity arrays are
     the local (E/S,) edge-range slices; triangles (replicated, global edge
     ids) are swept by every shard. Returns (c_rep_local, lb).
@@ -149,7 +149,12 @@ def run_message_passing_sharded(cost_local, edge_valid_local, tri, tri_valid,
     :func:`run_message_passing`; the final reduced costs land back on
     owned edges via one local segment_sum and the lower bound's edge term
     goes through :func:`~repro.core.dist.blocked_sum`, keeping the scalar
-    invariant to the shard count."""
+    invariant to the shard count.
+
+    ``unroll`` inlines the iteration loop (the body is collective-free,
+    so unrolling is safe under shard_map) — used by the roofline's
+    two-depth trip-count correction, exactly like the replicated
+    :func:`run_message_passing`."""
     from repro.core.dist import STATE_AXIS, blocked_sum, edge_range_start, \
         gather_edge_field, tree_sum
     if axis is None:
@@ -187,7 +192,12 @@ def run_message_passing_sharded(cost_local, edge_valid_local, tri, tri_valid,
         return t_cost, None
 
     t_cost0 = jnp.zeros((T, 3), dtype=jnp.float32)
-    t_cost, _ = jax.lax.scan(body, t_cost0, None, length=iters)
+    if unroll:
+        t_cost = t_cost0
+        for _ in range(iters):
+            t_cost, _ = body(t_cost, None)
+    else:
+        t_cost, _ = jax.lax.scan(body, t_cost0, None, length=iters)
 
     # land the final reparametrization back on owned edges: contributions
     # at out-of-range ids fall into a dead segment

@@ -162,12 +162,17 @@ def _merged_windows(csr_loc, nodes, cap: int, axis: str = STATE_AXIS):
 
 def _separate_triangles_state_sharded(u_loc, v_loc, cost_loc, ev_loc,
                                       csr_loc, num_nodes: int, cfg,
-                                      shards: int, intersect):
+                                      shards: int, intersect,
+                                      with_aux: bool = False):
     """Sharded 3-cycle separation over the carried local CSR. The local E⁺
     view is a sort-free ``csr_filter`` (local attractive mask); candidate
     windows merge across shards; the triangle assembly is the exact
     replicated :func:`triangles_from_windows`. Output (tri, valid) is
-    replicated and bitwise equal to the replicated separation's."""
+    replicated and bitwise equal to the replicated separation's.
+
+    ``with_aux`` also returns the replicated repulsive-anchor selection
+    (neg_idx, neg_ok) so telemetry can attribute top-k slots to owner
+    shards without recomputing the hierarchical top-k."""
     keep = ev_loc & (cost_loc > 0)
     csr_pos = csr_filter(csr_loc, keep)
     neg_idx, neg_ok = _select_repulsive_sharded(cost_loc, ev_loc,
@@ -180,7 +185,10 @@ def _separate_triangles_state_sharded(u_loc, v_loc, cost_loc, ev_loc,
     cj, ej, _ = _merged_windows(csr_pos, j, W)
     tris, goods = triangles_from_windows(ci, ei, oki, cj, ej, neg_idx,
                                          neg_ok, K, intersect)
-    return jnp.where(goods[:, None], tris, 0), goods
+    tris = jnp.where(goods[:, None], tris, 0)
+    if with_aux:
+        return tris, goods, neg_idx, neg_ok
+    return tris, goods
 
 
 # ---------------------------------------------------------------------------
@@ -188,26 +196,58 @@ def _separate_triangles_state_sharded(u_loc, v_loc, cost_loc, ev_loc,
 # ---------------------------------------------------------------------------
 
 def _sharded_pd_round(u_loc, v_loc, cost_loc, ev_loc, node_valid, csr_loc,
-                      cfg, shards: int, sweep, intersect):
+                      cfg, shards: int, sweep, intersect,
+                      with_aux: bool = False):
     """One full PD round on the edge-range-partitioned state — the sharded
     mirror of ``solver.fused_pd_round_state`` (3-cycles only). Returns the
-    next round's local state + the round's (replicated) scalars."""
+    next round's local state + the round's (replicated) scalars.
+
+    ``with_aux`` (static) appends replicated telemetry
+    ``(n_cycles, mp_improvement, shard_edges, shard_topk, shard_halo)``:
+    conflicted cycles, the MP lower-bound gain over the trivial edge
+    bound, and the (S,) per-shard balance signals — live edges owned
+    entering the round, repulsive-anchor slots won in the global top-k,
+    and triangle-slot edge references landing on each shard (the halo
+    pressure of the merged windows). Scalar float telemetry goes through
+    :func:`blocked_sum`, so it is identical across shard counts like the
+    result scalars; off by default, leaving the untraced jaxpr unchanged."""
     N = node_valid.shape[0]
-    tri, tri_ok = _separate_triangles_state_sharded(
-        u_loc, v_loc, cost_loc, ev_loc, csr_loc, N, cfg, shards, intersect)
-    c_rep_loc, lb = run_message_passing_sharded(
-        cost_loc, ev_loc, tri, tri_ok, cfg.mp_iters, shards, sweep=sweep)
-    S_loc = choose_contraction_set_sharded(
-        u_loc, v_loc, c_rep_loc, ev_loc, node_valid,
-        cfg.matching_rounds, cfg.forest_rounds, cfg.switch_frac,
-        cfg.contract_frac, shards, STATE_AXIS)
-    con = contract_sharded(u_loc, v_loc, c_rep_loc, ev_loc, node_valid,
-                           S_loc, shards, STATE_AXIS)
-    return con, lb
+    E_loc = u_loc.shape[0]
+    with jax.named_scope("repro.separation"):
+        sep = _separate_triangles_state_sharded(
+            u_loc, v_loc, cost_loc, ev_loc, csr_loc, N, cfg, shards,
+            intersect, with_aux=with_aux)
+        tri, tri_ok = sep[0], sep[1]
+    with jax.named_scope("repro.message_passing"):
+        c_rep_loc, lb = run_message_passing_sharded(
+            cost_loc, ev_loc, tri, tri_ok, cfg.mp_iters, shards, sweep=sweep)
+    with jax.named_scope("repro.contraction"):
+        S_loc = choose_contraction_set_sharded(
+            u_loc, v_loc, c_rep_loc, ev_loc, node_valid,
+            cfg.matching_rounds, cfg.forest_rounds, cfg.switch_frac,
+            cfg.contract_frac, shards, STATE_AXIS)
+        con = contract_sharded(u_loc, v_loc, c_rep_loc, ev_loc, node_valid,
+                               S_loc, shards, STATE_AXIS)
+    if not with_aux:
+        return con, lb
+    neg_idx, neg_ok = sep[2], sep[3]
+    sid = jnp.arange(shards, dtype=jnp.int32)
+    sh_edges = jax.lax.all_gather(jnp.sum(ev_loc).astype(jnp.int32),
+                                  STATE_AXIS)
+    owner = (neg_idx // E_loc).astype(jnp.int32)
+    sh_topk = jnp.sum((owner[:, None] == sid[None, :]) & neg_ok[:, None],
+                      axis=0).astype(jnp.int32)
+    towner = (tri // E_loc).astype(jnp.int32)
+    sh_halo = jnp.sum((towner[..., None] == sid[None, None, :])
+                      & tri_ok[:, None, None], axis=(0, 1)).astype(jnp.int32)
+    trivial_lb = blocked_sum(
+        jnp.where(ev_loc, jnp.minimum(0.0, cost_loc), 0.0), shards)
+    n_cyc = jnp.sum(tri_ok).astype(jnp.int32)
+    return con, lb, (n_cyc, lb - trivial_lb, sh_edges, sh_topk, sh_halo)
 
 
 def solve_state_sharded(inst: MulticutInstance, cfg, mode: str = "pd",
-                        sweep=None, intersect=None):
+                        sweep=None, intersect=None, trace: bool = False):
     """The fully sharded PD solve — ``solver._solve_pd_sparse`` with every
     per-edge leaf partitioned by contiguous edge range over the "state"
     mesh. One ``shard_map`` wraps the entire round loop, so the state is
@@ -215,8 +255,17 @@ def solve_state_sharded(inst: MulticutInstance, cfg, mode: str = "pd",
     are the halo/boundary exchanges documented in the module docstring.
     Returns a replicated ``SolveResult`` whose labels and histories are
     bitwise identical across shard counts (and to the replicated sparse
-    path), with lower bound/objective identical across shard counts."""
+    path), with lower bound/objective identical across shard counts.
+
+    ``trace`` (static) returns ``(SolveResult, SolveTrace)`` with the
+    per-shard balance leaves filled at width S: ``shard_edges`` /
+    ``shard_topk`` / ``shard_halo`` per round (see
+    :func:`_sharded_pd_round`). The traced per-round objective and MP
+    gain go through :func:`blocked_sum`, keeping every traced float
+    identical across shard counts; trace leaves are (R,)/(R, S) and
+    replicated, so the no-full-E-array carry invariant holds."""
     from repro.core.solver import SolveResult
+    from repro.obs.trace import init_trace, trace_set_round
     shards = validate_state_sharded(inst, cfg, mode)
     if intersect is None:
         intersect = intersect_rows_ref
@@ -229,48 +278,81 @@ def solve_state_sharded(inst: MulticutInstance, cfg, mode: str = "pd",
         mapping0 = jnp.arange(N, dtype=jnp.int32)
 
         def round_(u, v, c, ev, nv, csr, mapping):
-            con, lb = _sharded_pd_round(u, v, c, ev, nv, csr, cfg, shards,
-                                        sweep, intersect)
-            return (con.u2, con.v2, con.c2, con.ev2, con.node_valid,
+            out = _sharded_pd_round(u, v, c, ev, nv, csr, cfg, shards,
+                                    sweep, intersect, with_aux=trace)
+            con, lb = out[0], out[1]
+            base = (con.u2, con.v2, con.c2, con.ev2, con.node_valid,
                     con.csr, con.mapping[mapping], lb,
                     con.n_contracted.astype(jnp.int32),
                     con.n_new.astype(jnp.int32))
+            return base + ((out[2],) if trace else ())
 
-        u, v, c, ev, nv, csr, mapping, lb0, nc0, nk0 = round_(
-            u0, v0, c0, ev0, node_valid, csr0, mapping0)
+        def traced_objective(mapping):
+            cut = mapping[u0] != mapping[v0]
+            return blocked_sum(jnp.where(ev0 & cut, c0, 0.0), shards)
+
+        r0 = round_(u0, v0, c0, ev0, node_valid, csr0, mapping0)
+        u, v, c, ev, nv, csr, mapping, lb0, nc0, nk0 = r0[:10]
         hist_lb = jnp.full((R,), -jnp.inf, jnp.float32).at[0].set(lb0)
         hist_nc = jnp.zeros((R,), jnp.int32).at[0].set(nc0)
         hist_nk = jnp.zeros((R,), jnp.int32).at[0].set(nk0)
 
         def cond(carry):
-            r, _, nc_last, _, _, _ = carry
+            r, nc_last = carry[0], carry[2]
             return (r < R) & (nc_last != 0)
 
         def body(carry):
-            r, st, _, hist_lb, hist_nc, hist_nk = carry
+            r, st = carry[0], carry[1]
+            hist_lb, hist_nc, hist_nk = carry[3], carry[4], carry[5]
             u, v, c, ev, nv, csr, mapping = st
-            u, v, c, ev, nv, csr, mapping, lb, nc, nk = round_(
-                u, v, c, ev, nv, csr, mapping)
+            rr = round_(u, v, c, ev, nv, csr, mapping)
+            u, v, c, ev, nv, csr, mapping, lb, nc, nk = rr[:10]
             hist_lb = hist_lb.at[r].set(lb)
             hist_nc = hist_nc.at[r].set(nc)
             hist_nk = hist_nk.at[r].set(nk)
-            return (r + 1, (u, v, c, ev, nv, csr, mapping), nc,
-                    hist_lb, hist_nc, hist_nk)
+            out = (r + 1, (u, v, c, ev, nv, csr, mapping), nc,
+                   hist_lb, hist_nc, hist_nk)
+            if trace:
+                n_cyc, mp_gain, she, shk, shh = rr[10]
+                tr = trace_set_round(
+                    carry[6], r, lower_bound=lb,
+                    objective=traced_objective(mapping),
+                    n_cycles=n_cyc, n_contracted=nc, n_clusters=nk,
+                    mp_improvement=mp_gain, shard_edges=she,
+                    shard_topk=shk, shard_halo=shh)
+                out = out + (tr,)
+            return out
 
         init = (jnp.int32(1), (u, v, c, ev, nv, csr, mapping), nc0,
                 hist_lb, hist_nc, hist_nk)
-        r, st, _, hist_lb, hist_nc, hist_nk = \
-            jax.lax.while_loop(cond, body, init)
+        if trace:
+            n_cyc0, mp_gain0, she0, shk0, shh0 = r0[10]
+            tr0 = trace_set_round(
+                init_trace(R, shards), jnp.int32(0), lower_bound=lb0,
+                objective=traced_objective(mapping),
+                n_cycles=n_cyc0, n_contracted=nc0, n_clusters=nk0,
+                mp_improvement=mp_gain0, shard_edges=she0,
+                shard_topk=shk0, shard_halo=shh0)
+            init = init + (tr0,)
+        fin = jax.lax.while_loop(cond, body, init)
+        r, st = fin[0], fin[1]
+        hist_lb, hist_nc, hist_nk = fin[3], fin[4], fin[5]
         labels = st[6]
         cut = labels[u0] != labels[v0]
         objective = blocked_sum(jnp.where(ev0 & cut, c0, 0.0), shards)
-        return (labels, objective, lb0, r, hist_lb, hist_nc, hist_nk)
+        out = (labels, objective, lb0, r, hist_lb, hist_nc, hist_nk)
+        return out + ((fin[6],) if trace else ())
 
-    labels, obj, lb0, r, hist_lb, hist_nc, hist_nk = shard_map(
+    n_out = 8 if trace else 7
+    out = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(espec, espec, espec, espec, P()),
-        out_specs=(P(),) * 7, check_vma=False,
+        out_specs=(P(),) * n_out, check_vma=False,
     )(inst.u, inst.v, inst.cost, inst.edge_valid, inst.node_valid)
-    return SolveResult(labels=labels, objective=obj, lower_bound=lb0,
-                       rounds=r, lb_history=hist_lb, n_contracted=hist_nc,
-                       n_clusters=hist_nk)
+    labels, obj, lb0, r, hist_lb, hist_nc, hist_nk = out[:7]
+    res = SolveResult(labels=labels, objective=obj, lower_bound=lb0,
+                      rounds=r, lb_history=hist_lb, n_contracted=hist_nc,
+                      n_clusters=hist_nk)
+    if trace:
+        return res, out[7]
+    return res

@@ -52,6 +52,7 @@ from repro.core.graph import (
     csr_from_instance, resolve_graph_impl,
 )
 from repro.core.message_passing import init_mp, run_message_passing
+from repro.obs.trace import init_trace, trace_set_round
 
 MODES = ("p", "pd", "pd+", "d")
 BACKENDS = ("reference", "pallas")
@@ -198,73 +199,110 @@ class SolverState(NamedTuple):
 
 def _dual_round_core(inst: MulticutInstance, cfg: SolverConfig,
                      with45: bool, sweep=None, intersect=None, csr=None,
-                     node_mask=None, update_csr: bool = False):
+                     node_mask=None, update_csr: bool = False,
+                     with_aux: bool = False):
     """One separation + message-passing round. Returns
     (inst', c_rep, lb, csr') — ``csr'`` is the chord-spliced all-edges CSR
-    when ``update_csr`` (sparse path), else None."""
-    sep = separate(inst, max_neg=cfg.max_neg,
-                   max_tri_per_edge=cfg.max_tri_per_edge,
-                   with_cycles45=with45, nbr_k=cfg.nbr_k,
-                   graph_impl=cfg.graph_impl,
-                   sparse_row_cap=cfg.sparse_row_cap,
-                   sparse_row_cap_short=cfg.sparse_row_cap_short,
-                   sparse_threshold=cfg.sparse_threshold,
-                   intersect=intersect, csr=csr,
-                   separation_chunk=cfg.separation_chunk,
-                   separation_shards=cfg.separation_shards,
-                   sep_node_mask=node_mask,
-                   update_csr=update_csr)
+    when ``update_csr`` (sparse path), else None.
+
+    ``with_aux`` (static) appends a telemetry tuple ``(n_cycles,
+    mp_improvement)``: conflicted cycles found by separation, and the LB
+    gain of the MP sweep over the trivial bound Σ_e min(0, c) on the
+    round's pre-MP costs. Off by default so untraced jaxprs are
+    byte-for-byte unchanged."""
+    with jax.named_scope("repro.separation"):
+        sep = separate(inst, max_neg=cfg.max_neg,
+                       max_tri_per_edge=cfg.max_tri_per_edge,
+                       with_cycles45=with45, nbr_k=cfg.nbr_k,
+                       graph_impl=cfg.graph_impl,
+                       sparse_row_cap=cfg.sparse_row_cap,
+                       sparse_row_cap_short=cfg.sparse_row_cap_short,
+                       sparse_threshold=cfg.sparse_threshold,
+                       intersect=intersect, csr=csr,
+                       separation_chunk=cfg.separation_chunk,
+                       separation_shards=cfg.separation_shards,
+                       sep_node_mask=node_mask,
+                       update_csr=update_csr)
     inst2 = sep.instance
-    state = init_mp(sep.triangles)
-    state, c_rep, lb = run_message_passing(
-        inst2.cost, inst2.edge_valid, state, cfg.mp_iters, sweep=sweep)
-    return inst2, c_rep, lb, sep.csr
+    with jax.named_scope("repro.message_passing"):
+        state = init_mp(sep.triangles)
+        state, c_rep, lb = run_message_passing(
+            inst2.cost, inst2.edge_valid, state, cfg.mp_iters, sweep=sweep)
+    if not with_aux:
+        return inst2, c_rep, lb, sep.csr
+    n_cyc = jnp.sum(sep.triangles.valid).astype(jnp.int32)
+    trivial_lb = jnp.sum(jnp.where(inst2.edge_valid,
+                                   jnp.minimum(0.0, inst2.cost), 0.0))
+    return inst2, c_rep, lb, sep.csr, (n_cyc, lb - trivial_lb)
 
 
 def _primal_round_core(inst: MulticutInstance, cfg: SolverConfig):
-    S = choose_contraction_set(inst, matching_rounds=cfg.matching_rounds,
-                               forest_rounds=cfg.forest_rounds,
-                               switch_frac=cfg.switch_frac,
-                               contract_frac=cfg.contract_frac)
-    return contract(inst, S)
+    with jax.named_scope("repro.contraction"):
+        S = choose_contraction_set(inst, matching_rounds=cfg.matching_rounds,
+                                   forest_rounds=cfg.forest_rounds,
+                                   switch_frac=cfg.switch_frac,
+                                   contract_frac=cfg.contract_frac)
+        return contract(inst, S)
+
+
+def _live_edges1(inst: MulticutInstance) -> jnp.ndarray:
+    """(1,) i32 live-edge count — the S=1 row of SolveTrace.shard_edges."""
+    return jnp.sum(inst.edge_valid).astype(jnp.int32).reshape(1)
 
 
 def fused_pd_round(inst: MulticutInstance, cfg: SolverConfig,
-                   with45: bool, sweep=None, intersect=None, node_mask=None):
+                   with45: bool, sweep=None, intersect=None, node_mask=None,
+                   with_aux: bool = False):
     """Alg. 3 lines 3–8 as one traceable unit: separation → message passing
-    → reparametrize → contract. Returns (ContractionResult, lb). Input and
+    → reparametrize → contract. Returns (ContractionResult, lb) — plus the
+    telemetry aux of :func:`_dual_round_core` when ``with_aux``. Input and
     output instances share shapes, so the outer while_loop carries it."""
-    inst2, c_rep, lb, _ = _dual_round_core(inst, cfg, with45, sweep,
-                                           intersect, node_mask=node_mask)
+    out = _dual_round_core(inst, cfg, with45, sweep, intersect,
+                           node_mask=node_mask, with_aux=with_aux)
+    inst2, c_rep = out[0], out[1]
     res = _primal_round_core(inst2._replace(cost=c_rep), cfg)
-    return res, lb
+    if with_aux:
+        return res, out[2], out[4]
+    return res, out[2]
 
 
 def fused_pd_round_state(state: SolverState, cfg: SolverConfig, with45: bool,
-                         sweep=None, intersect=None, node_mask=None):
+                         sweep=None, intersect=None, node_mask=None,
+                         with_aux: bool = False):
     """The state-carrying PD round (sparse data path): separation reads the
     carried CSR (no rebuild), contraction maintains it, and the original→
-    cluster mapping composes in place. Returns (SolverState', lb, res)."""
-    inst2, c_rep, lb, _ = _dual_round_core(state.instance, cfg, with45,
-                                           sweep, intersect, csr=state.csr,
-                                           node_mask=node_mask)
+    cluster mapping composes in place. Returns (SolverState', lb, res) —
+    plus the telemetry aux of :func:`_dual_round_core` when ``with_aux``."""
+    out = _dual_round_core(state.instance, cfg, with45, sweep, intersect,
+                           csr=state.csr, node_mask=node_mask,
+                           with_aux=with_aux)
+    inst2, c_rep = out[0], out[1]
     inst3 = inst2._replace(cost=c_rep)
-    S = choose_contraction_set(inst3, matching_rounds=cfg.matching_rounds,
-                               forest_rounds=cfg.forest_rounds,
-                               switch_frac=cfg.switch_frac,
-                               contract_frac=cfg.contract_frac)
-    res, csr2 = contract_csr(inst3, S)
+    with jax.named_scope("repro.contraction"):
+        S = choose_contraction_set(inst3, matching_rounds=cfg.matching_rounds,
+                                   forest_rounds=cfg.forest_rounds,
+                                   switch_frac=cfg.switch_frac,
+                                   contract_frac=cfg.contract_frac)
+        res, csr2 = contract_csr(inst3, S)
     state2 = SolverState(instance=res.instance, csr=csr2,
                          mapping=res.mapping[state.mapping])
-    return state2, lb, res
+    if with_aux:
+        return state2, out[2], res, out[4]
+    return state2, out[2], res
 
 
 # ---------------------------------------------------------------------------
 # Device-resident solves (one executable per mode; no host sync inside)
 # ---------------------------------------------------------------------------
 
-def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
-    """Purely primal Algorithm 1 loop (paper's P)."""
+def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig,
+                    trace: bool = False):
+    """Purely primal Algorithm 1 loop (paper's P).
+
+    ``trace`` (static) additionally stacks a per-round
+    :class:`repro.obs.trace.SolveTrace` into the loop carry — extra
+    leaves only, no callbacks, so the untraced jaxpr is unchanged and
+    traced results stay bitwise identical."""
     N, R = inst.num_nodes, cfg.max_rounds
     mapping0 = jnp.arange(N, dtype=jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32)
@@ -272,29 +310,42 @@ def _solve_p_device(inst: MulticutInstance, cfg: SolverConfig) -> SolveResult:
     hist_nk = jnp.zeros((R,), dtype=jnp.int32)
 
     def cond(carry):
-        r, _, _, nc_last, _, _ = carry
+        r, nc_last = carry[0], carry[3]
         return (r < R) & (nc_last != 0)
 
     def body(carry):
-        r, cur, mapping, _, hist_nc, hist_nk = carry
+        r, cur, mapping, _, hist_nc, hist_nk = carry[:6]
         res = _primal_round_core(cur, cfg)
         nc = res.n_contracted.astype(jnp.int32)
         hist_nc = hist_nc.at[r].set(nc)
         hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
-        return (r + 1, res.instance, res.mapping[mapping], nc,
-                hist_nc, hist_nk)
+        mapping2 = res.mapping[mapping]
+        out = (r + 1, res.instance, mapping2, nc, hist_nc, hist_nk)
+        if trace:
+            tr = trace_set_round(
+                carry[6], r, objective=inst.objective(mapping2),
+                n_contracted=nc, n_clusters=res.n_new.astype(jnp.int32),
+                shard_edges=_live_edges1(res.instance))
+            out = out + (tr,)
+        return out
 
     init = (jnp.int32(0), inst, mapping0, jnp.int32(1), hist_nc, hist_nk)
-    r, _, mapping, _, hist_nc, hist_nk = jax.lax.while_loop(cond, body, init)
-    return SolveResult(labels=mapping, objective=inst.objective(mapping),
-                       lower_bound=jnp.float32(-jnp.inf), rounds=r,
-                       lb_history=hist_lb, n_contracted=hist_nc,
-                       n_clusters=hist_nk)
+    if trace:
+        init = init + (init_trace(R),)
+    out = jax.lax.while_loop(cond, body, init)
+    r, mapping, hist_nc, hist_nk = out[0], out[2], out[4], out[5]
+    res = SolveResult(labels=mapping, objective=inst.objective(mapping),
+                      lower_bound=jnp.float32(-jnp.inf), rounds=r,
+                      lb_history=hist_lb, n_contracted=hist_nc,
+                      n_clusters=hist_nk)
+    if trace:
+        return res, out[6]
+    return res
 
 
 def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
                      sweep=None, intersect=None, csr0=None,
-                     sep_mask0=None) -> SolveResult:
+                     sep_mask0=None, trace: bool = False):
     """Sparse-path PD/PD+: the :class:`SolverState` recursion. ``build_csr``
     runs exactly once, before round 0; every later round's separation reads
     the CSR maintained by the previous round's ``contract_csr``, so the
@@ -314,9 +365,9 @@ def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
         instance=inst,
         csr=csr_from_instance(inst) if csr0 is None else csr0,
         mapping=jnp.arange(N, dtype=jnp.int32))
-    state, lb0, res0 = fused_pd_round_state(state0, cfg, with45_first,
-                                            sweep, intersect,
-                                            node_mask=sep_mask0)
+    out0 = fused_pd_round_state(state0, cfg, with45_first, sweep, intersect,
+                                node_mask=sep_mask0, with_aux=trace)
+    state, lb0, res0 = out0[0], out0[1], out0[2]
     nc0 = res0.n_contracted.astype(jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
     hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
@@ -324,31 +375,57 @@ def _solve_pd_sparse(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
         res0.n_new.astype(jnp.int32))
 
     def cond(carry):
-        r, _, nc_last, _, _, _ = carry
+        r, nc_last = carry[0], carry[2]
         return (r < R) & (nc_last != 0)
 
     def body(carry):
-        r, st, _, hist_lb, hist_nc, hist_nk = carry
-        st2, lb, res = fused_pd_round_state(st, cfg, with45_rest, sweep,
-                                            intersect)
+        r, st, _, hist_lb, hist_nc, hist_nk = carry[:6]
+        rnd = fused_pd_round_state(st, cfg, with45_rest, sweep, intersect,
+                                   with_aux=trace)
+        st2, lb, res = rnd[0], rnd[1], rnd[2]
         nc = res.n_contracted.astype(jnp.int32)
         hist_lb = hist_lb.at[r].set(lb)
         hist_nc = hist_nc.at[r].set(nc)
         hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
-        return (r + 1, st2, nc, hist_lb, hist_nc, hist_nk)
+        out = (r + 1, st2, nc, hist_lb, hist_nc, hist_nk)
+        if trace:
+            n_cyc, mp_gain = rnd[3]
+            tr = trace_set_round(
+                carry[6], r, lower_bound=lb,
+                objective=inst.objective(st2.mapping),
+                n_cycles=n_cyc, n_contracted=nc,
+                n_clusters=res.n_new.astype(jnp.int32),
+                mp_improvement=mp_gain,
+                shard_edges=_live_edges1(st2.instance))
+            out = out + (tr,)
+        return out
 
     init = (jnp.int32(1), state, nc0, hist_lb, hist_nc, hist_nk)
-    r, state, _, hist_lb, hist_nc, hist_nk = \
-        jax.lax.while_loop(cond, body, init)
+    if trace:
+        n_cyc0, mp_gain0 = out0[3]
+        tr0 = trace_set_round(
+            init_trace(R), jnp.int32(0), lower_bound=lb0,
+            objective=inst.objective(state.mapping),
+            n_cycles=n_cyc0, n_contracted=nc0,
+            n_clusters=res0.n_new.astype(jnp.int32),
+            mp_improvement=mp_gain0,
+            shard_edges=_live_edges1(state.instance))
+        init = init + (tr0,)
+    out = jax.lax.while_loop(cond, body, init)
+    r, state, hist_lb, hist_nc, hist_nk = \
+        out[0], out[1], out[3], out[4], out[5]
     labels = state.mapping
-    return SolveResult(labels=labels, objective=inst.objective(labels),
-                       lower_bound=lb0, rounds=r, lb_history=hist_lb,
-                       n_contracted=hist_nc, n_clusters=hist_nk)
+    res = SolveResult(labels=labels, objective=inst.objective(labels),
+                      lower_bound=lb0, rounds=r, lb_history=hist_lb,
+                      n_contracted=hist_nc, n_clusters=hist_nk)
+    if trace:
+        return res, out[6]
+    return res
 
 
 def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
                      sweep=None, intersect=None, csr0=None,
-                     sep_mask0=None) -> SolveResult:
+                     sep_mask0=None, trace: bool = False):
     """Interleaved primal-dual Algorithm 3 (paper's PD / PD+).
 
     Round 0 runs outside the while_loop: it may use 4/5-cycle separation
@@ -371,18 +448,20 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
                              "per-shard with local edge ids, not the "
                              "replicated one delta re-solves splice")
         return solve_state_sharded(inst, cfg, mode="pd+" if plus else "pd",
-                                   sweep=sweep, intersect=intersect)
+                                   sweep=sweep, intersect=intersect,
+                                   trace=trace)
     if resolve_graph_impl(cfg.graph_impl, inst.num_nodes,
                           cfg.sparse_threshold) == "sparse":
         return _solve_pd_sparse(inst, cfg, plus, sweep, intersect,
-                                csr0=csr0, sep_mask0=sep_mask0)
+                                csr0=csr0, sep_mask0=sep_mask0, trace=trace)
     N, R = inst.num_nodes, cfg.max_rounds
     mapping0 = jnp.arange(N, dtype=jnp.int32)
     with45_first = cfg.always_cycles45 or plus or cfg.first_round_cycles45
     with45_rest = cfg.always_cycles45 or plus
 
-    res0, lb0 = fused_pd_round(inst, cfg, with45_first, sweep, intersect,
-                               node_mask=sep_mask0)
+    out0 = fused_pd_round(inst, cfg, with45_first, sweep, intersect,
+                          node_mask=sep_mask0, with_aux=trace)
+    res0, lb0 = out0[0], out0[1]
     nc0 = res0.n_contracted.astype(jnp.int32)
     hist_lb = jnp.full((R,), -jnp.inf, dtype=jnp.float32).at[0].set(lb0)
     hist_nc = jnp.zeros((R,), dtype=jnp.int32).at[0].set(nc0)
@@ -391,30 +470,58 @@ def _solve_pd_device(inst: MulticutInstance, cfg: SolverConfig, plus: bool,
     mapping = res0.mapping[mapping0]
 
     def cond(carry):
-        r, _, _, nc_last, _, _, _ = carry
+        r, nc_last = carry[0], carry[3]
         return (r < R) & (nc_last != 0)
 
     def body(carry):
-        r, cur, mapping, _, hist_lb, hist_nc, hist_nk = carry
-        res, lb = fused_pd_round(cur, cfg, with45_rest, sweep, intersect)
+        r, cur, mapping, _, hist_lb, hist_nc, hist_nk = carry[:7]
+        rnd = fused_pd_round(cur, cfg, with45_rest, sweep, intersect,
+                             with_aux=trace)
+        res, lb = rnd[0], rnd[1]
         nc = res.n_contracted.astype(jnp.int32)
         hist_lb = hist_lb.at[r].set(lb)
         hist_nc = hist_nc.at[r].set(nc)
         hist_nk = hist_nk.at[r].set(res.n_new.astype(jnp.int32))
-        return (r + 1, res.instance, res.mapping[mapping], nc,
-                hist_lb, hist_nc, hist_nk)
+        mapping2 = res.mapping[mapping]
+        out = (r + 1, res.instance, mapping2, nc,
+               hist_lb, hist_nc, hist_nk)
+        if trace:
+            n_cyc, mp_gain = rnd[2]
+            tr = trace_set_round(
+                carry[7], r, lower_bound=lb,
+                objective=inst.objective(mapping2),
+                n_cycles=n_cyc, n_contracted=nc,
+                n_clusters=res.n_new.astype(jnp.int32),
+                mp_improvement=mp_gain,
+                shard_edges=_live_edges1(res.instance))
+            out = out + (tr,)
+        return out
 
     init = (jnp.int32(1), res0.instance, mapping, nc0,
             hist_lb, hist_nc, hist_nk)
-    r, _, mapping, _, hist_lb, hist_nc, hist_nk = \
-        jax.lax.while_loop(cond, body, init)
-    return SolveResult(labels=mapping, objective=inst.objective(mapping),
-                       lower_bound=lb0, rounds=r, lb_history=hist_lb,
-                       n_contracted=hist_nc, n_clusters=hist_nk)
+    if trace:
+        n_cyc0, mp_gain0 = out0[2]
+        tr0 = trace_set_round(
+            init_trace(R), jnp.int32(0), lower_bound=lb0,
+            objective=inst.objective(mapping),
+            n_cycles=n_cyc0, n_contracted=nc0,
+            n_clusters=res0.n_new.astype(jnp.int32),
+            mp_improvement=mp_gain0,
+            shard_edges=_live_edges1(res0.instance))
+        init = init + (tr0,)
+    out = jax.lax.while_loop(cond, body, init)
+    r, mapping, hist_lb, hist_nc, hist_nk = \
+        out[0], out[2], out[4], out[5], out[6]
+    res = SolveResult(labels=mapping, objective=inst.objective(mapping),
+                      lower_bound=lb0, rounds=r, lb_history=hist_lb,
+                      n_contracted=hist_nc, n_clusters=hist_nk)
+    if trace:
+        return res, out[7]
+    return res
 
 
 def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
-                    intersect=None):
+                    intersect=None, trace: bool = False):
     """Dual-only solver (paper's D): repeated separation + MP on the original
     graph; LB is monotone across rounds. Returns (SolveResult, final inst).
 
@@ -444,24 +551,29 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
     if sparse:
         def body(carry, _):
             cur, csr, tri_lb_sum = carry
-            cur2, c_rep, lb, csr2 = _dual_round_core(
-                cur, cfg, True, sweep, intersect, csr=csr, update_csr=True)
+            rnd = _dual_round_core(cur, cfg, True, sweep, intersect,
+                                   csr=csr, update_csr=True, with_aux=trace)
+            cur2, c_rep, lb, csr2 = rnd[0], rnd[1], rnd[2], rnd[3]
             tri_lb_sum, total = lb_parts(cur2, c_rep, lb, tri_lb_sum)
-            return (cur2._replace(cost=c_rep), csr2, tri_lb_sum), total
+            ys = (total,) + (rnd[4] if trace else ())
+            return (cur2._replace(cost=c_rep), csr2, tri_lb_sum), ys
 
-        (final, _, _), per_round = jax.lax.scan(
+        (final, _, _), ys = jax.lax.scan(
             body, (inst, csr_from_instance(inst), jnp.float32(0.0)),
             None, length=R)
     else:
         def body(carry, _):
             cur, tri_lb_sum = carry
-            cur2, c_rep, lb, _ = _dual_round_core(cur, cfg, True, sweep,
-                                                  intersect)
+            rnd = _dual_round_core(cur, cfg, True, sweep, intersect,
+                                   with_aux=trace)
+            cur2, c_rep, lb = rnd[0], rnd[1], rnd[2]
             tri_lb_sum, total = lb_parts(cur2, c_rep, lb, tri_lb_sum)
-            return (cur2._replace(cost=c_rep), tri_lb_sum), total
+            ys = (total,) + (rnd[4] if trace else ())
+            return (cur2._replace(cost=c_rep), tri_lb_sum), ys
 
-        (final, _), per_round = jax.lax.scan(body, (inst, jnp.float32(0.0)),
-                                             None, length=R)
+        (final, _), ys = jax.lax.scan(body, (inst, jnp.float32(0.0)),
+                                      None, length=R)
+    per_round = ys[0]
     N = inst.num_nodes
     n_nodes = jnp.sum(inst.node_valid).astype(jnp.int32)
     res = SolveResult(labels=jnp.arange(N, dtype=jnp.int32),
@@ -470,13 +582,26 @@ def _solve_d_device(inst: MulticutInstance, cfg: SolverConfig, sweep=None,
                       lb_history=per_round,
                       n_contracted=jnp.zeros((R,), dtype=jnp.int32),
                       n_clusters=jnp.broadcast_to(n_nodes, (R,)))
-    return res, final
+    tr = None
+    if trace:
+        # D has no primal: objective rows stay padding; the stacked scan
+        # outputs land in the trace wholesale (no in-loop scatter needed)
+        n_cycs, mp_gains = ys[1], ys[2]
+        tr = init_trace(R)._replace(
+            rounds=jnp.int32(R),
+            lower_bound=per_round.astype(jnp.float32),
+            n_cycles=n_cycs.astype(jnp.int32),
+            mp_improvement=mp_gains.astype(jnp.float32),
+            n_clusters=jnp.broadcast_to(n_nodes, (R,)),
+            shard_edges=jnp.broadcast_to(
+                jnp.sum(inst.edge_valid).astype(jnp.int32), (R, 1)))
+    return res, final, tr
 
 
 def solve_device(inst: MulticutInstance, mode: str = "pd",
                  cfg: SolverConfig = SolverConfig(),
                  sweep=None, intersect=None, csr=None,
-                 sep_node_mask=None) -> SolveResult:
+                 sep_node_mask=None, trace: bool = False):
     """The unified, pure, traceable solve: dispatches on the (static) mode.
     Safe to wrap in ``jax.jit`` / ``jax.vmap`` / ``shard_map``; prefer the
     cached entrypoints in :mod:`repro.api` — ``api._compiled`` is the one
@@ -486,7 +611,14 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
     is a live all-edges CSR of ``inst`` (spliced by the previous tick —
     skips the initial ``build_csr`` on the sparse path), ``sep_node_mask``
     restricts round 0's separation frontier. Modes "p" and "d" ignore both
-    (no separation to seed / no carried CSR)."""
+    (no separation to seed / no carried CSR).
+
+    ``trace`` (static) switches the return to ``(SolveResult, SolveTrace)``
+    — per-round telemetry captured inside the round loop as extra carry
+    leaves (zero additional host syncs; labels/objective/LB stay bitwise
+    identical to the untraced solve, pinned in tests/test_obs_trace.py).
+    Untraced callers see the exact pre-trace jaxpr: the flag is static
+    Python, not a ``lax.cond``."""
     if cfg.graph_impl not in GRAPH_IMPLS:
         raise ValueError(f"unknown graph_impl {cfg.graph_impl!r}; expected "
                          f"one of {GRAPH_IMPLS}")
@@ -496,17 +628,19 @@ def solve_device(inst: MulticutInstance, mode: str = "pd",
             f"solve supports 3-cycle separation only, and p/d have no "
             f"edge-partitioned round to run")
     if mode == "p":
-        return _solve_p_device(inst, cfg)
+        return _solve_p_device(inst, cfg, trace=trace)
     if mode == "pd":
         return _solve_pd_device(inst, cfg, plus=False, sweep=sweep,
                                 intersect=intersect, csr0=csr,
-                                sep_mask0=sep_node_mask)
+                                sep_mask0=sep_node_mask, trace=trace)
     if mode == "pd+":
         return _solve_pd_device(inst, cfg, plus=True, sweep=sweep,
                                 intersect=intersect, csr0=csr,
-                                sep_mask0=sep_node_mask)
+                                sep_mask0=sep_node_mask, trace=trace)
     if mode == "d":
-        return _solve_d_device(inst, cfg, sweep, intersect)[0]
+        res, _final, tr = _solve_d_device(inst, cfg, sweep, intersect,
+                                          trace=trace)
+        return (res, tr) if trace else res
     raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
 
 

@@ -1,0 +1,63 @@
+"""repro.obs: observability for the solver, the sharded solver, and the
+serving tier.
+
+Three parts, one import:
+
+* :mod:`repro.obs.trace` — :class:`SolveTrace`, the per-round solver
+  telemetry pytree captured inside the jitted round loop with zero host
+  syncs (``api.solve(..., trace=True)``), and :func:`summarize`, the
+  opt-in host-side digest.
+* :mod:`repro.obs.spans` — :class:`SpanRecorder`, request-lifecycle
+  spans for the serve engine with Chrome-trace / Perfetto JSON export.
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry` of counters,
+  gauges, and log-bucketed histograms (bounded memory, proven quantile
+  error), with JSON snapshot + Prometheus text exposition.
+
+:func:`register_compile_metrics` folds the compile-budget accounting
+(:func:`repro.api.trace_count`, :func:`repro.api.cache_info`) into a
+registry as callback gauges, so every compile-related signal is scraped
+from one place.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               quantile_error_bound)
+from repro.obs.spans import Span, SpanRecorder
+from repro.obs.trace import SolveTrace, init_trace, summarize, trace_set_round
+
+__all__ = [
+    "SolveTrace", "init_trace", "trace_set_round", "summarize",
+    "Span", "SpanRecorder",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "quantile_error_bound",
+    "register_compile_metrics",
+]
+
+
+def register_compile_metrics(registry: MetricsRegistry) -> MetricsRegistry:
+    """Export the api-level compile-budget accounting as callback gauges:
+
+    * ``compile_traces_total`` — :func:`repro.api.trace_count` (number of
+      jit traces taken; compile budget spent);
+    * ``compile_cache_hits`` / ``compile_cache_misses`` /
+      ``compile_cache_size`` — :func:`repro.api.cache_info` fields.
+
+    Callback gauges read the live values at scrape time, so there is no
+    second bookkeeping path to drift from the registry in ``repro.api``.
+    Returns the registry for chaining.
+    """
+    from repro import api  # deferred: api imports the solver, which imports us
+
+    registry.gauge("compile_traces_total",
+                   "jit traces taken (compile budget spent)",
+                   fn=lambda: api.trace_count())
+    registry.gauge("compile_cache_hits",
+                   "compiled-executable registry hits",
+                   fn=lambda: api.cache_info().hits)
+    registry.gauge("compile_cache_misses",
+                   "compiled-executable registry misses (each is a compile)",
+                   fn=lambda: api.cache_info().misses)
+    registry.gauge("compile_cache_size",
+                   "live entries in the compiled-executable registry",
+                   fn=lambda: api.cache_info().currsize)
+    return registry

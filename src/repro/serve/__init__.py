@@ -14,7 +14,12 @@ The production front end over :mod:`repro.api`'s executable registry:
   in-flight window), deadline-aware (``deadline_s`` drives early partial
   flushes over a power-of-two sub-batch ladder), and optionally
   latency-adaptive (``adaptive_routing=True`` routes on measured
-  per-bucket wall EMAs instead of the static size table).
+  per-bucket wall EMAs instead of the static size table). Observability
+  rides along: every engine carries a :class:`repro.obs.metrics
+  .MetricsRegistry` (``engine.metrics_snapshot()`` /
+  ``engine.metrics_prometheus()``), and ``tracer=
+  repro.obs.SpanRecorder()`` records the request lifecycle as
+  Chrome-trace/Perfetto spans.
 
 Quickstart::
 

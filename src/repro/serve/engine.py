@@ -78,10 +78,23 @@ The engine is single-threaded by design — overlap comes from JAX's async
 dispatch plus batching, not Python threads. ``clock`` and ``ready_fn``
 are injectable so timeout, deadline, and harvest behaviour are testable
 without sleeping or real device timing.
+
+**Observability** (:mod:`repro.obs`): every engine owns a
+:class:`repro.obs.metrics.MetricsRegistry` (``engine.metrics``) exposing
+the latency histogram, queue/in-flight/occupancy/deadline gauges, and the
+api-level compile accounting — scrape with :meth:`SolveEngine
+.metrics_snapshot` (JSON) or :meth:`SolveEngine.metrics_prometheus`
+(text exposition). Pass ``tracer=SpanRecorder()`` to additionally record
+the full request lifecycle — admit → queued → flush decision → dispatch →
+harvest → demux — as Chrome-trace spans (one swimlane per request id);
+``tracer=None`` (the default) keeps every recording site behind a single
+``is not None`` check, so the untraced engine does no extra work beyond
+one histogram observe per request.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import time
 from collections import deque
@@ -91,6 +104,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.obs import register_compile_metrics
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.spans import SpanRecorder
 from repro.core.dist import resolve_batch_shards
 from repro.core.graph import MulticutInstance, resolve_graph_impl
 from repro.core.solver import SolveResult
@@ -106,10 +122,6 @@ from repro.serve.session import DeltaSession, SessionStore
 __all__ = ["DeltaTicket", "EngineStats", "RouteWall", "SolveEngine",
            "SolveTicket"]
 
-
-LATENCY_WINDOW = 65536      # most-recent request latencies kept for
-                            # percentile reporting; bounded so a long-lived
-                            # engine's memory doesn't grow with traffic
 
 EMA_ALPHA = 0.4             # wall-clock EMA smoothing: heavy enough to
                             # forget the compile-tainted first dispatches
@@ -135,8 +147,11 @@ class RouteWall:
 @dataclasses.dataclass
 class EngineStats:
     """Counters the benchmarks and tests read; all cumulative except
-    ``latencies_s`` (a sliding window of the most recent requests) and
-    ``route_walls`` (per-executable wall EMAs, see :class:`RouteWall`)."""
+    ``latency_hist`` (a bounded log-bucketed histogram of end-to-end
+    request latencies — O(1) memory, percentiles via
+    ``latency_hist.percentile(p)`` with a proven ≤ 9.06% relative error;
+    see :class:`repro.obs.metrics.Histogram`) and ``route_walls``
+    (per-executable wall EMAs, see :class:`RouteWall`)."""
     n_submitted: int = 0
     n_completed: int = 0
     n_dispatches: int = 0
@@ -151,8 +166,10 @@ class EngineStats:
     n_deadlined: int = 0        # requests submitted with a deadline
     n_deadline_missed: int = 0  # ... that completed after it passed
     inflight_high_water: int = 0
-    latencies_s: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    latency_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "request_latency_seconds",
+            "end-to-end request latency (submit to result demuxed)"))
     route_walls: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -200,17 +217,20 @@ class SolveTicket:
     :class:`SolveResult`."""
 
     __slots__ = ("inst", "bucket", "route", "t_submit", "t_done",
-                 "deadline", "_result", "_engine", "_key")
+                 "deadline", "req_id", "_result", "_engine", "_key")
 
     def __init__(self, engine: "SolveEngine", inst: MulticutInstance,
                  bucket: Bucket, route: Route, t_submit: float,
-                 deadline: float | None = None):
+                 deadline: float | None = None, req_id: int = 0):
         self._engine = engine
         self.inst = inst
         self.bucket = bucket
         self.route = route
         self.t_submit = t_submit
         self.deadline = deadline        # absolute (engine-clock) or None
+        self.req_id = req_id            # engine-assigned monotonic id; the
+                                        # span lane every trace event of
+                                        # this request records under
         self.t_done: float | None = None
         self._result: SolveResult | None = None
         self._key = (bucket, route)
@@ -241,16 +261,17 @@ class DeltaTicket:
     into the session."""
 
     __slots__ = ("session", "patch", "t_submit", "t_done", "deadline",
-                 "_result", "_engine", "_key")
+                 "req_id", "_result", "_engine", "_key")
 
     def __init__(self, engine: "SolveEngine", session: DeltaSession,
                  patch: DeltaPatch, t_submit: float,
-                 deadline: float | None = None):
+                 deadline: float | None = None, req_id: int = 0):
         self._engine = engine
         self.session = session
         self.patch = patch
         self.t_submit = t_submit
         self.deadline = deadline
+        self.req_id = req_id
         self.t_done: float | None = None
         self._result: SolveResult | None = None
         self._key = session.key
@@ -305,7 +326,13 @@ class SolveEngine:
     must be before adaptation kicks in; ``tune_short_cap`` enables the
     per-bucket ``sparse_row_cap_short`` self-tuning; ``max_sessions``
     LRU-bounds resident delta sessions; ``ready_fn`` overrides the
-    readiness probe (tests inject flags here)."""
+    readiness probe (tests inject flags here).
+
+    Observability knobs: ``tracer`` (a :class:`repro.obs.spans
+    .SpanRecorder`, default None = off) records request-lifecycle spans;
+    ``metrics`` adopts an external :class:`repro.obs.metrics
+    .MetricsRegistry` (default: the engine builds its own, at
+    ``engine.metrics``)."""
 
     def __init__(self, router: Router | None = None,
                  policy: BucketPolicy | None = None, batch_cap: int = 8,
@@ -313,7 +340,9 @@ class SolveEngine:
                  patch_cap: int = 64, max_inflight: int = 4,
                  adaptive_routing: bool = False, min_route_samples: int = 3,
                  tune_short_cap: bool = True,
-                 max_sessions: int | None = None, ready_fn=None):
+                 max_sessions: int | None = None, ready_fn=None,
+                 tracer: SpanRecorder | None = None,
+                 metrics: MetricsRegistry | None = None):
         if batch_cap < 1:
             raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
         if patch_cap < 1:
@@ -346,6 +375,64 @@ class SolveEngine:
         self._static_route: dict[Route, Route] = {}
         self.sessions = SessionStore()
         self.stats = EngineStats()
+        self.tracer = tracer
+        self._req_ids = itertools.count(1)      # 0 is the engine span lane
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Wire the registry: the latency histogram plus callback gauges
+        over live engine state — scraped values are read at collection
+        time from ``stats``/queues, so there is no second bookkeeping
+        path — and the api-level compile accounting
+        (:func:`repro.obs.register_compile_metrics`)."""
+        reg, st = self.metrics, self.stats
+        reg.register(st.latency_hist)
+        reg.gauge("engine_queue_depth",
+                  "requests queued, not yet dispatched",
+                  fn=lambda: self.pending)
+        reg.gauge("engine_inflight",
+                  "dispatches issued, not yet harvested",
+                  fn=lambda: self.inflight)
+        reg.gauge("engine_inflight_high_water",
+                  "max concurrent in-flight dispatches seen",
+                  fn=lambda: st.inflight_high_water)
+        reg.gauge("engine_occupancy",
+                  "fraction of dispatched batch slots holding real "
+                  "requests",
+                  fn=lambda: st.occupancy)
+        reg.gauge("engine_requests_submitted",
+                  "solve requests admitted", fn=lambda: st.n_submitted)
+        reg.gauge("engine_requests_completed",
+                  "solve requests demuxed", fn=lambda: st.n_completed)
+        reg.gauge("engine_dispatches",
+                  "solve batches dispatched", fn=lambda: st.n_dispatches)
+        reg.gauge("engine_filler_slots",
+                  "batch slots served to padding",
+                  fn=lambda: st.n_filler_slots)
+        reg.gauge("engine_deadline_missed",
+                  "deadlined requests completed past their deadline",
+                  fn=lambda: st.n_deadline_missed)
+        reg.gauge("engine_deadline_miss_rate",
+                  "fraction of deadlined requests that missed",
+                  fn=lambda: st.deadline_miss_rate)
+        reg.gauge("engine_sessions_open",
+                  "resident delta sessions", fn=lambda: len(self.sessions))
+        reg.gauge("engine_sessions_evicted",
+                  "LRU session evictions under max_sessions",
+                  fn=lambda: st.n_sessions_evicted)
+        reg.gauge("engine_compiles",
+                  "solver traces triggered through the engine",
+                  fn=lambda: st.compiles)
+        register_compile_metrics(reg)
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-ready dict of every registered metric, evaluated now."""
+        return self.metrics.snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """One Prometheus text-exposition scrape page."""
+        return self.metrics.to_prometheus()
 
     # -- admission ----------------------------------------------------------
 
@@ -370,11 +457,16 @@ class SolveEngine:
         now = self._clock()
         deadline = None if deadline_s is None else now + deadline_s
         ticket = SolveTicket(self, inst, bucket, route, now,
-                             deadline=deadline)
+                             deadline=deadline, req_id=next(self._req_ids))
         self._queues.setdefault((bucket, route), deque()).append(ticket)
         self.stats.n_submitted += 1
         if deadline is not None:
             self.stats.n_deadlined += 1
+        if self.tracer is not None:
+            self.tracer.record_instant(
+                "admit", now, tid=ticket.req_id, nodes=bucket.nodes,
+                edges=bucket.edges, mode=route.mode, backend=route.backend,
+                deadline_s=deadline_s)
         self.pump()                     # full queues dispatch immediately
         return ticket
 
@@ -411,6 +503,11 @@ class SolveEngine:
                 self._settle_session(victim)
                 self.sessions.close(victim.session_id)
                 self.stats.n_sessions_evicted += 1
+                if self.tracer is not None:
+                    self.tracer.record_instant(
+                        "session_evict", self._clock(),
+                        session=victim.session_id)
+        t_open = self._clock() if self.tracer is not None else 0.0
         padded = pad_instance(inst, bucket)
         traces0 = api.trace_count()
         res, state = api.solve_with_state(padded, mode=route.mode,
@@ -426,6 +523,9 @@ class SolveEngine:
             last_result=strip_result(res, inst.num_nodes))
         self.sessions.add(session)
         self.stats.n_sessions_opened += 1
+        if self.tracer is not None:
+            self.tracer.record_span("session_open", t_open, self._clock(),
+                                    session=sid, mode=route.mode)
         return session
 
     def submit_delta(self, session_id: str, patch: DeltaPatch,
@@ -440,12 +540,17 @@ class SolveEngine:
         patch = pad_patch(patch, self.patch_cap)
         now = self._clock()
         deadline = None if deadline_s is None else now + deadline_s
-        ticket = DeltaTicket(self, session, patch, now, deadline=deadline)
+        ticket = DeltaTicket(self, session, patch, now, deadline=deadline,
+                             req_id=next(self._req_ids))
         session.pending = ticket
         self._delta_queues.setdefault(session.key, deque()).append(ticket)
         self.stats.n_delta_submitted += 1
         if deadline is not None:
             self.stats.n_deadlined += 1
+        if self.tracer is not None:
+            self.tracer.record_instant(
+                "admit", now, tid=ticket.req_id, kind="delta",
+                session=session.session_id, deadline_s=deadline_s)
         self.pump()
         return ticket
 
@@ -549,24 +654,49 @@ class SolveEngine:
             # dispatch above may have pushed later queues' heads past
             # their timeout or deadline margin
             now = self._clock()
-            if q and (force or self._timed_out(q, now)
-                      or self._deadline_pressure(key, q, now)):
-                n += self._flush_solve_queue(key, q)
+            if q:
+                reason = self._flush_reason(key, q, now, force)
+                if reason is not None:
+                    if self.tracer is not None:
+                        self.tracer.record_instant(
+                            "flush", now, reason=reason, queued=len(q),
+                            nodes=key[0].nodes, mode=key[1].mode)
+                    n += self._flush_solve_queue(key, q)
         for key, q in self._ordered(self._delta_queues):
             while len(q) >= self.batch_cap:
                 self._dispatch_delta(key, [q.popleft()
                                            for _ in range(self.batch_cap)])
                 n += 1
             now = self._clock()
-            if q and (force or self._timed_out(q, now)
-                      or self._deadline_pressure(key, q, now)):
-                while q:
-                    self._dispatch_delta(
-                        key, [q.popleft()
-                              for _ in range(min(len(q), self.batch_cap))])
-                    n += 1
+            if q:
+                reason = self._flush_reason(key, q, now, force)
+                if reason is not None:
+                    if self.tracer is not None:
+                        self.tracer.record_instant(
+                            "flush", now, reason=reason, queued=len(q),
+                            kind="delta")
+                    while q:
+                        self._dispatch_delta(
+                            key,
+                            [q.popleft()
+                             for _ in range(min(len(q), self.batch_cap))])
+                        n += 1
         self._harvest()
         return n
+
+    def _flush_reason(self, key, q, now: float,
+                      force: bool) -> str | None:
+        """Why a non-empty partial queue should flush now — "force",
+        "timeout", or "deadline" — or None to keep batching. Evaluation
+        order matches the old boolean predicate, so flush behaviour is
+        unchanged; the reason string only feeds the tracer."""
+        if force:
+            return "force"
+        if self._timed_out(q, now):
+            return "timeout"
+        if self._deadline_pressure(key, q, now):
+            return "deadline"
+        return None
 
     @staticmethod
     def _ordered(queues: dict):
@@ -656,10 +786,16 @@ class SolveEngine:
         res = fn(batch)                 # non-blocking: device futures
         self.stats.compiles += api.trace_count() - traces0
         self.stats.n_dispatches += 1
+        t_disp = self._clock()
+        if self.tracer is not None:
+            self.tracer.record_instant(
+                "dispatch", t_disp, kind="solve", nodes=bucket.nodes,
+                mode=route.mode, backend=route.backend,
+                n_tickets=len(tickets), n_slots=size)
         self._push(_InFlight(kind="solve", key=key,
                              ema_key=self._ema_key(key), tickets=tickets,
                              res=res, states2=None,
-                             t_dispatch=self._clock(), n_slots=size),
+                             t_dispatch=t_disp, n_slots=size),
                    route.backend)
 
     def _filler_state(self, bucket: Bucket):
@@ -690,10 +826,16 @@ class SolveEngine:
         res, states2, _info = fn(sbatch, pbatch)    # non-blocking
         self.stats.compiles += api.trace_count() - traces0
         self.stats.n_delta_dispatches += 1
+        t_disp = self._clock()
+        if self.tracer is not None:
+            self.tracer.record_instant(
+                "dispatch", t_disp, kind="delta", nodes=bucket.nodes,
+                mode=route.mode, backend=route.backend,
+                n_tickets=len(tickets), n_slots=self.batch_cap)
         self._push(_InFlight(kind="delta", key=key,
                              ema_key=self._ema_key(key), tickets=tickets,
                              res=res, states2=states2,
-                             t_dispatch=self._clock(),
+                             t_dispatch=t_disp,
                              n_slots=self.batch_cap),
                    route.backend)
 
@@ -749,6 +891,7 @@ class SolveEngine:
         (a no-op when harvested ready), strip and hand each ticket its
         result, write delta states back to their sessions, and fold the
         measured wall into the route's EMAs and deadline counters."""
+        t_wait = self._clock() if self.tracer is not None else 0.0
         jax.block_until_ready(entry.res)
         now = self._clock()
         self.stats.record_wall(entry.ema_key, now - entry.t_dispatch,
@@ -776,11 +919,29 @@ class SolveEngine:
             self.stats.n_delta_completed += len(entry.tickets)
             self.stats.n_delta_filler_slots += (entry.n_slots
                                                 - len(entry.tickets))
+        if self.tracer is not None:
+            t_end = self._clock()
+            for t in entry.tickets:
+                # one swimlane per request: queued → solve (in flight)
+                self.tracer.record_span("queued", t.t_submit,
+                                        entry.t_dispatch, tid=t.req_id)
+                self.tracer.record_span("solve", entry.t_dispatch, now,
+                                        tid=t.req_id, kind=entry.kind)
+            self.tracer.record_span("harvest", t_wait, now,
+                                    kind=entry.kind,
+                                    n_slots=entry.n_slots)
+            self.tracer.record_span("demux", now, t_end,
+                                    kind=entry.kind,
+                                    n_tickets=len(entry.tickets))
 
     def _account_latency(self, ticket, now: float) -> None:
-        self.stats.latencies_s.append(now - ticket.t_submit)
+        self.stats.latency_hist.observe(now - ticket.t_submit)
         if ticket.deadline is not None and now > ticket.deadline:
             self.stats.n_deadline_missed += 1
+            if self.tracer is not None:
+                self.tracer.record_instant(
+                    "deadline_miss", now, tid=ticket.req_id,
+                    late_s=now - ticket.deadline)
 
     # -- lifecycle helpers --------------------------------------------------
 

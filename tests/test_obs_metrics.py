@@ -1,0 +1,218 @@
+"""Metrics registry (PR 10): counters, gauges, log-bucketed histograms.
+
+The contract the serving tier leans on: a :class:`Histogram` is a drop-in
+replacement for the old 65536-entry latency deque — O(1) memory in the
+stream length, exact count/sum/min/max, and a quantile estimate whose
+relative error is provably below ``growth - 1`` (≤ 9.06% at the default
+growth) no matter how many samples were observed. Plus the two machine
+formats every metric must speak: the JSON snapshot and the Prometheus
+text exposition.
+"""
+import json
+import math
+import random
+
+import pytest
+
+from repro.obs.metrics import (Counter, DEFAULT_GROWTH, Gauge, Histogram,
+                               MetricsRegistry, quantile_error_bound)
+
+
+# ---------------------------------------------------------------------------
+# Histogram: quantile error bound + bounded memory
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantile_error_bound_holds():
+    """For in-range samples, the estimate brackets the true order
+    statistic from above by at most the proven factor ``growth``."""
+    rng = random.Random(0)
+    h = Histogram("lat")
+    samples = [10.0 ** rng.uniform(-3.5, 2.5) for _ in range(5000)]
+    for s in samples:
+        h.observe(s)
+    samples.sort()
+    bound = quantile_error_bound(h.growth)
+    for q in (0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0):
+        rank = max(int(math.ceil(q * len(samples))) - 1, 0)
+        true = samples[rank]
+        est = h.quantile(q)
+        assert est >= true * (1.0 - 1e-9), (q, true, est)
+        assert est <= true * (1.0 + bound) * (1.0 + 1e-9), (q, true, est)
+
+
+def test_histogram_memory_is_bounded():
+    h = Histogram("lat")
+    before = h.n_buckets
+    for i in range(20000):
+        h.observe(1e-5 + i * 0.01)
+    assert h.n_buckets == before      # fixed bucket array, no growth
+    assert before < 300               # "a couple hundred ints"
+
+
+def test_histogram_exact_scalars_and_clamp():
+    h = Histogram("lat")
+    vals = [0.002, 0.004, 0.008, 0.5, 2.0]
+    for v in vals:
+        h.observe(v)
+    assert h.count == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.mean == pytest.approx(sum(vals) / len(vals))
+    # quantiles clamp to the exact observed range
+    assert h.quantile(0.0) >= min(vals)
+    assert h.quantile(1.0) <= max(vals) * (1 + 1e-12)
+
+
+def test_histogram_out_of_range_samples_still_counted():
+    h = Histogram("lat", lo=1e-3, hi=1.0)
+    h.observe(1e-9)     # underflow
+    h.observe(100.0)    # overflow
+    assert h.count == 2
+    # the underflow bucket reports its upper edge ``lo`` (still an
+    # overestimate, as the bound promises); overflow reports the exact max
+    assert h.quantile(0.0) == pytest.approx(h.lo)
+    assert h.quantile(1.0) == pytest.approx(100.0)
+    assert h._min == pytest.approx(1e-9)    # exact scalars keep the truth
+
+
+def test_histogram_empty_is_nan_and_bad_args_raise():
+    h = Histogram("lat")
+    assert math.isnan(h.quantile(0.5))
+    assert math.isnan(h.mean)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=1.0, hi=0.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", growth=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Counter / Gauge
+# ---------------------------------------------------------------------------
+
+def test_counter_monotone():
+    c = Counter("reqs")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_callback_reads_live_value():
+    box = [0]
+    g = Gauge("depth", fn=lambda: box[0])
+    assert g.value == 0
+    box[0] = 7
+    assert g.value == 7
+    with pytest.raises(ValueError):
+        g.set(3.0)        # callback-backed gauges reject set()
+    plain = Gauge("plain")
+    plain.set(2.0)
+    assert plain.value == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Registry: get-or-create, adoption, exposition formats
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_is_idempotent():
+    reg = MetricsRegistry()
+    c1 = reg.counter("reqs", "total requests")
+    c2 = reg.counter("reqs")
+    assert c1 is c2
+    with pytest.raises(ValueError):
+        reg.gauge("reqs")     # same name, different kind
+
+
+def test_registry_register_adopts_external_metric():
+    reg = MetricsRegistry()
+    h = Histogram("request_latency_seconds")
+    assert reg.register(h) is h
+    assert reg.get("request_latency_seconds") is h
+    assert reg.register(h) is h     # re-adopting the same object is fine
+    with pytest.raises(ValueError):
+        reg.register(Histogram("request_latency_seconds"))
+
+
+def test_registry_json_snapshot_roundtrips():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc(3)
+    reg.gauge("depth").set(2.0)
+    h = reg.histogram("lat")
+    for v in (0.01, 0.02, 0.04):
+        h.observe(v)
+    snap = json.loads(reg.to_json())
+    assert snap["reqs"] == {"type": "counter", "value": 3}
+    assert snap["depth"]["value"] == 2.0
+    assert snap["lat"]["count"] == 3
+    assert snap["lat"]["error_bound"] == pytest.approx(
+        quantile_error_bound(DEFAULT_GROWTH))
+    assert snap["lat"]["p50"] >= snap["lat"]["min"]
+
+
+def _parse_prometheus(text: str) -> dict:
+    """Minimal v0.0.4 parser: {sample_name_with_labels: float}."""
+    typed = set()
+    samples = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE"):
+            typed.add(line.split()[2])
+            continue
+        if line.startswith("#"):
+            continue
+        name, val = line.rsplit(" ", 1)
+        base = name.split("{")[0]
+        for suffix in ("_bucket", "_sum", "_count"):
+            if base.endswith(suffix):
+                base = base[:-len(suffix)]
+                break
+        assert base in typed, f"sample {name} has no # TYPE"
+        samples[name] = float(val.replace("+Inf", "inf"))
+    return samples
+
+
+def test_registry_prometheus_exposition_parses():
+    reg = MetricsRegistry()
+    reg.counter("reqs", "total").inc(5)
+    reg.gauge("depth", "queue depth").set(1.0)
+    h = reg.histogram("lat", "latency")
+    for v in (0.01, 0.02, 0.04, 50.0):
+        h.observe(v)
+    samples = _parse_prometheus(reg.to_prometheus())
+    assert samples["reqs"] == 5.0
+    assert samples["depth"] == 1.0
+    assert samples["lat_count"] == 4.0
+    assert samples["lat_sum"] == pytest.approx(50.07)
+    # cumulative buckets are non-decreasing and end at count on +Inf
+    buckets = [(k, v) for k, v in samples.items()
+               if k.startswith("lat_bucket")]
+    vals = [v for _, v in buckets]
+    assert vals == sorted(vals)
+    assert samples['lat_bucket{le="+Inf"}'] == 4.0
+
+
+def test_metric_names_sanitized_for_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("serve.requests-total").inc()
+    text = reg.to_prometheus()
+    assert "serve_requests_total 1" in text
+
+
+# ---------------------------------------------------------------------------
+# Compile-budget gauges (satellite f): api.trace_count / cache_info
+# ---------------------------------------------------------------------------
+
+def test_register_compile_metrics_reads_live_api_counters():
+    from repro import api
+    from repro.obs import register_compile_metrics
+
+    reg = register_compile_metrics(MetricsRegistry())
+    snap = reg.snapshot()
+    for name in ("compile_traces_total", "compile_cache_hits",
+                 "compile_cache_misses", "compile_cache_size"):
+        assert snap[name]["type"] == "gauge"
+    assert snap["compile_traces_total"]["value"] == api.trace_count()
+    assert snap["compile_cache_size"]["value"] == api.cache_info().currsize

@@ -1,0 +1,181 @@
+"""Request-lifecycle tracing (PR 10): SpanRecorder + engine integration.
+
+Two layers: the recorder itself (append-only, bounded, valid Chrome
+Trace Event Format out), and the engine wiring — a ``tracer=`` engine
+stamps admit → flush → dispatch → queued/solve → harvest → demux spans
+with per-request swimlanes, driven entirely through the injectable
+clock (no sleeps), and recording must not change results or stats.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.graph import random_instance
+from repro.core.solver import SolverConfig
+from repro.obs import MetricsRegistry, SpanRecorder
+from repro.serve import BucketPolicy, Route, SolveEngine
+
+CFG = SolverConfig(max_neg=32, mp_iters=2, max_rounds=4, graph_impl="dense")
+ROUTE = Route(mode="pd", config=CFG)
+POLICY = BucketPolicy(node_floor=16, edge_floor=64)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+def _small(seed):
+    return random_instance(12, 0.5, seed=seed, pad_edges=64, pad_nodes=16)
+
+
+# ---------------------------------------------------------------------------
+# recorder
+# ---------------------------------------------------------------------------
+
+def test_recorder_records_and_clamps():
+    rec = SpanRecorder()
+    rec.record_span("solve", 1.0, 3.5, tid=2, nodes=12)
+    rec.record_span("backwards", 5.0, 4.0)          # t1 < t0 clamps to 0
+    rec.record_instant("admit", 0.5, tid=2)
+    assert len(rec) == 3
+    assert rec.spans[0].dur_s == pytest.approx(2.5)
+    assert rec.spans[1].dur_s == 0.0
+    assert rec.spans[2].dur_s is None
+    assert rec.spans[0].args == {"nodes": 12}
+
+
+def test_recorder_overflow_drops_and_counts():
+    rec = SpanRecorder(max_events=2)
+    for i in range(5):
+        rec.record_instant("x", float(i))
+    assert len(rec) == 2
+    assert rec.n_dropped == 3
+    rec.clear()
+    assert len(rec) == 0 and rec.n_dropped == 0
+    with pytest.raises(ValueError):
+        SpanRecorder(max_events=0)
+
+
+def test_chrome_trace_format_is_valid():
+    rec = SpanRecorder()
+    rec.record_instant("admit", 10.0, tid=1)
+    rec.record_span("solve", 10.5, 11.0, tid=1)
+    rec.record_span("harvest", 11.0, 11.2)          # engine lane
+    doc = json.loads(rec.to_json())
+    events = doc["traceEvents"]
+    # metadata names the process, the engine lane, and each request lane
+    meta = [e for e in events if e["ph"] == "M"]
+    names = {(e["name"], e["tid"]): e["args"]["name"] for e in meta}
+    assert names[("process_name", 0)] == "repro.serve"
+    assert names[("thread_name", 0)] == "engine"
+    assert names[("thread_name", 1)] == "req 1"
+    # timestamps are µs offsets from the earliest event
+    real = [e for e in events if e["ph"] != "M"]
+    assert min(e["ts"] for e in real) == 0.0
+    by_name = {e["name"]: e for e in real}
+    assert by_name["admit"]["ph"] == "i"
+    assert by_name["admit"]["s"] == "t"
+    assert by_name["solve"]["ph"] == "X"
+    assert by_name["solve"]["dur"] == pytest.approx(0.5e6)
+    assert doc["otherData"] == {"n_spans": 3, "n_dropped": 0}
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _traced_engine(clock):
+    return SolveEngine(policy=POLICY, batch_cap=2, flush_timeout_s=None,
+                       clock=clock, tracer=SpanRecorder(),
+                       metrics=MetricsRegistry())
+
+
+def test_engine_stamps_full_request_lifecycle():
+    clock = FakeClock()
+    eng = _traced_engine(clock)
+    # 5 requests at cap 2: two full batches dispatch from submit, the
+    # odd one out rides the forced partial flush (a "flush" instant)
+    insts = [_small(s) for s in range(5)]
+    tickets = []
+    for inst in insts:
+        tickets.append(eng.submit(inst, route=ROUTE))
+        clock.advance(0.01)
+    eng.flush()
+    eng.drain()          # blocking harvest: flush alone leaves it in flight
+    assert all(t.done for t in tickets)
+
+    rec = eng.tracer
+    names = {s.name for s in rec.spans}
+    assert {"admit", "flush", "dispatch", "queued", "solve",
+            "harvest", "demux"} <= names
+    # per-request lanes: every ticket's req_id shows admit+queued+solve
+    for t in tickets:
+        lane = [s.name for s in rec.spans if s.tid == t.req_id]
+        assert "admit" in lane and "queued" in lane and "solve" in lane
+    # req ids are unique, monotone, and never collide with the engine lane
+    ids = [t.req_id for t in tickets]
+    assert ids == sorted(ids) and len(set(ids)) == len(ids)
+    assert all(i >= 1 for i in ids)
+    # engine-lane events carry tid 0
+    assert {s.tid for s in rec.spans if s.name in ("harvest", "demux",
+                                                   "flush", "dispatch")} \
+        == {SpanRecorder.ENGINE_TID}
+    # spans share the fake-clock timebase
+    assert all(0.0 <= s.t0_s <= clock.t for s in rec.spans)
+
+
+def test_tracing_does_not_change_results_or_stats():
+    insts = [_small(s) for s in range(4)]
+    plain = SolveEngine(policy=POLICY, batch_cap=2, flush_timeout_s=None)
+    r_plain = plain.solve_stream(insts)
+    traced = _traced_engine(FakeClock())
+    r_traced = traced.solve_stream(insts)
+    for a, b in zip(r_plain, r_traced):
+        assert np.asarray(a.labels).tobytes() == np.asarray(b.labels).tobytes()
+        assert float(a.objective) == float(b.objective)
+    assert plain.stats.n_dispatches == traced.stats.n_dispatches
+    assert plain.stats.latency_hist.count == traced.stats.latency_hist.count
+
+
+def test_engine_metrics_cover_queue_and_latency():
+    clock = FakeClock()
+    eng = _traced_engine(clock)
+    for s in range(3):
+        eng.submit(_small(s), route=ROUTE)
+        clock.advance(0.5)
+    eng.flush()
+    eng.drain()          # blocking harvest: every ticket demuxed
+    snap = eng.metrics_snapshot()
+    assert snap["engine_requests_submitted"]["value"] == 3
+    assert snap["engine_requests_completed"]["value"] == 3
+    assert snap["engine_queue_depth"]["value"] == 0
+    assert snap["request_latency_seconds"]["count"] == 3
+    # fake clock: the last request waited ~0.5s, the first ~1.5s
+    assert snap["request_latency_seconds"]["max"] >= \
+        snap["request_latency_seconds"]["min"]
+    prom = eng.metrics_prometheus()
+    assert "# TYPE engine_queue_depth gauge" in prom
+    assert "request_latency_seconds_count 3" in prom
+
+
+def test_deadline_miss_recorded_as_instant():
+    clock = FakeClock()
+    eng = _traced_engine(clock)
+    t = eng.submit(_small(0), route=ROUTE, deadline_s=1.0)
+    clock.advance(5.0)                   # blow the deadline before flushing
+    eng.flush()
+    eng.drain()          # blocking harvest: flush alone leaves it in flight
+    assert t.done
+    misses = [s for s in eng.tracer.spans if s.name == "deadline_miss"]
+    assert len(misses) == 1
+    assert misses[0].tid == t.req_id
+    assert misses[0].args["late_s"] == pytest.approx(4.0)
+    assert eng.metrics_snapshot()["engine_deadline_missed"]["value"] == 1

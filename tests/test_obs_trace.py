@@ -1,0 +1,234 @@
+"""Solver telemetry (PR 10): ``api.solve(trace=True)`` and SolveTrace.
+
+The contract everything hangs on: tracing is *strictly additive*. A
+traced solve returns bitwise-identical results — every SolveResult leaf —
+to the untraced one, on every mode, both data paths, and every shard
+count; the trace rides the while-loop carry as extra leaves (zero host
+callbacks, pinned on the jaxpr); and the traced/untraced executables are
+separate registry entries so flipping the flag never recompiles the
+other. :func:`repro.obs.summarize` is the only host-side consumer.
+"""
+import dataclasses
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.graph import random_instance
+from repro.core.solver import MODES, SolverConfig, solve_device
+from repro.obs import SolveTrace, init_trace, summarize, trace_set_round
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CFG = SolverConfig(max_neg=128, max_tri_per_edge=8, nbr_k=8, mp_iters=4)
+
+
+def _inst():
+    return random_instance(40, 0.2, seed=0, pad_edges=512, pad_nodes=64)
+
+
+def _leaves_bit_eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), \
+            (np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bit identity: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["dense", "sparse"])
+@pytest.mark.parametrize("mode", MODES)
+def test_traced_solve_is_bitwise_identical(mode, impl):
+    inst = _inst()
+    cfg = dataclasses.replace(CFG, graph_impl=impl)
+    ref = api.solve(inst, mode=mode, config=cfg)
+    res, tr = api.solve(inst, mode=mode, config=cfg, trace=True)
+    _leaves_bit_eq(res, ref)
+    assert isinstance(tr, SolveTrace)
+    assert int(tr.rounds) >= 1
+
+
+def test_trace_registry_entries_are_separate():
+    inst = _inst()
+    api.clear_cache()
+    api.solve(inst, mode="pd", config=CFG)
+    m0 = api.cache_info().misses
+    api.solve(inst, mode="pd", config=CFG, trace=True)
+    assert api.cache_info().misses == m0 + 1     # own executable
+    h0 = api.cache_info().hits
+    api.solve(inst, mode="pd", config=CFG)       # untraced entry survived
+    api.solve(inst, mode="pd", config=CFG, trace=True)
+    assert api.cache_info().hits == h0 + 2
+
+
+# ---------------------------------------------------------------------------
+# trace content
+# ---------------------------------------------------------------------------
+
+def test_trace_rows_are_live_then_padding():
+    inst = _inst()
+    res, tr = api.solve(inst, mode="pd", config=CFG, trace=True)
+    R = int(tr.rounds)
+    assert 1 <= R <= CFG.max_rounds
+    assert tr.lower_bound.shape == (CFG.max_rounds,)
+    assert tr.shard_edges.shape == (CFG.max_rounds, 1)   # unsharded: S=1
+    lb = np.asarray(tr.lower_bound)
+    obj = np.asarray(tr.objective)
+    assert np.all(np.isfinite(lb[:R]))
+    assert np.all(np.isfinite(obj[:R]))
+    assert np.all(lb[R:] == -np.inf)                     # padding sentinels
+    assert np.all(obj[R:] == np.inf)
+    # each round's LB stays below the feasible objective it pairs with
+    assert np.all(lb[:R] <= obj[:R] + 1e-4)
+    # counts are non-negative ints; clusters never increase
+    nc = np.asarray(tr.n_clusters)[:R]
+    assert np.all(np.asarray(tr.n_cycles)[:R] >= 0)
+    assert np.all(np.asarray(tr.n_contracted)[:R] >= 0)
+    assert np.all(nc[:-1] >= nc[1:])
+
+
+def test_dual_mode_trace_has_lb_no_contraction():
+    inst = _inst()
+    _, tr = api.solve(inst, mode="d", config=CFG, trace=True)
+    R = int(tr.rounds)
+    lb = np.asarray(tr.lower_bound)[:R]
+    assert np.all(np.isfinite(lb))
+    # dual-only: no contraction happens, the padding zeros stay
+    assert np.all(np.asarray(tr.n_contracted)[:R] == 0)
+
+
+def test_traced_jaxpr_has_no_callbacks():
+    """The zero-sync pin: the traced program contains NO host callback
+    primitives anywhere (so tracing cannot stall the device), and the
+    trace arrays ride a while loop like lb_history always has."""
+    inst = _inst()
+    jx = jax.make_jaxpr(lambda i: solve_device(i, mode="pd", cfg=CFG,
+                                               trace=True))(inst)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            yield eqn.primitive.name
+            for v in eqn.params.values():
+                sub = getattr(v, "jaxpr", v)
+                if hasattr(sub, "eqns"):
+                    yield from walk(sub)
+
+    prims = list(walk(jx.jaxpr))
+    assert not any("callback" in p or "outside_call" in p for p in prims)
+    assert "while" in prims
+
+
+# ---------------------------------------------------------------------------
+# summarize: the host-side digest
+# ---------------------------------------------------------------------------
+
+def test_summarize_matches_result():
+    inst = _inst()
+    res, tr = api.solve(inst, mode="pd", config=CFG, trace=True)
+    s = summarize(tr)
+    assert s["rounds"] == int(tr.rounds) == len(s["per_round"])
+    assert s["objective"]["final"] == pytest.approx(float(res.objective))
+    assert s["lower_bound"]["best"] <= s["objective"]["best"] + 1e-4
+    assert s["gap"] == pytest.approx(
+        s["objective"]["final"] - s["lower_bound"]["best"])
+    assert s["total_contracted"] == int(np.sum(
+        np.asarray(tr.n_contracted)[:s["rounds"]]))
+    # unsharded traces carry no shard_balance section
+    assert "shard_balance" not in s
+    assert "shard_edges" not in s["per_round"][0]
+
+
+def test_summarize_handles_padding_and_empty():
+    empty = init_trace(4, shards=2)
+    assert summarize(empty) == {"rounds": 0, "per_round": []}
+    tr = trace_set_round(empty, 0, lower_bound=-3.0, objective=5.0,
+                         n_cycles=7, n_contracted=2, n_clusters=9,
+                         shard_edges=[6, 2], shard_topk=[4, 4],
+                         shard_halo=[0, 0])
+    s = summarize(tr)
+    assert s["rounds"] == 1
+    assert s["per_round"][0]["lower_bound"] == -3.0
+    assert s["per_round"][0]["shard_edges"] == [6, 2]
+    assert s["gap"] == pytest.approx(8.0)
+    bal = s["shard_balance"]
+    assert bal["edges"]["max_imbalance"] == pytest.approx(6 / 4)
+    assert bal["topk"]["max_imbalance"] == pytest.approx(1.0)
+    assert bal["halo"]["max_imbalance"] == pytest.approx(1.0)  # 0 total
+
+
+def test_trace_set_round_bumps_rounds_monotonically():
+    tr = init_trace(4)
+    tr = trace_set_round(tr, 2, lower_bound=1.0)
+    assert int(tr.rounds) == 3
+    tr = trace_set_round(tr, 0, lower_bound=2.0)   # earlier row: no shrink
+    assert int(tr.rounds) == 3
+    assert float(tr.lower_bound[0]) == 2.0
+    assert math.isinf(float(tr.lower_bound[1]))
+
+
+# ---------------------------------------------------------------------------
+# sharded solves: per-shard telemetry, bit identity across shard counts
+# ---------------------------------------------------------------------------
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_traced_sharded_solve_bitwise_across_shard_counts():
+    """On 4 virtual devices: for S ∈ {1, 2, 4} the traced sharded solve
+    returns bitwise-identical results to the untraced one, the trace
+    carries (R, S) shard leaves whose edge counts sum to the same total
+    on every S, and summarize reports shard balance for S > 1."""
+    stdout = _run("""
+        import dataclasses
+        import numpy as np
+        import jax
+        from repro import api
+        from repro.core.solver import SolverConfig
+        from repro.core.graph import random_instance
+        from repro.obs import summarize
+
+        assert jax.device_count() == 4
+        inst = random_instance(60, 0.15, seed=3, pad_edges=1024,
+                               pad_nodes=64)
+        base = SolverConfig(graph_impl="sparse", first_round_cycles45=False)
+        totals = {}
+        for S in (1, 2, 4):
+            cfg = dataclasses.replace(base, state_shards=S)
+            ref = api.solve(inst, mode="pd", config=cfg)
+            res, tr = api.solve(inst, mode="pd", config=cfg, trace=True)
+            for x, y in zip(jax.tree_util.tree_leaves(res),
+                            jax.tree_util.tree_leaves(ref)):
+                assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), S
+            R = int(tr.rounds)
+            assert R >= 1 and tr.shard_edges.shape[1] == S, S
+            totals[S] = np.asarray(tr.shard_edges)[:R].sum(axis=1)
+            s = summarize(tr)
+            if S > 1:
+                assert s["state_shards"] == S
+                assert s["shard_balance"]["edges"]["max_imbalance"] >= 1.0
+                assert len(s["per_round"][0]["shard_edges"]) == S
+            else:
+                assert "shard_balance" not in s
+        # live-edge totals are a partition: identical across shard counts
+        for S in (2, 4):
+            assert np.array_equal(totals[1], totals[S]), (S, totals)
+        print("traced-sharded-ok")
+        """)
+    assert "traced-sharded-ok" in stdout

@@ -1,3 +1,8 @@
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -104,3 +109,71 @@ def test_profile_solve_round(impl):
     assert loop["flops_depth2"] > loop["flops_depth1"]
     assert prof["round_wall_s"] == pytest.approx(
         sum(p["wall_s"] for p in prof["phases"].values()))
+
+
+def _sharded_cfg(shards):
+    from repro.core.solver import SolverConfig
+    return SolverConfig(max_neg=64, max_tri_per_edge=4, nbr_k=4, mp_iters=3,
+                        graph_impl="sparse", first_round_cycles45=False,
+                        state_shards=shards)
+
+
+def _check_sharded_profile(prof, shards):
+    """The SPMD accounting identity: every shard runs the identical
+    per-device program, so job totals are EXACTLY per_device x shards."""
+    from repro.roofline.solver import PHASES
+    assert prof["impl"] == "sparse"
+    assert prof["state_shards"] == shards
+    assert set(prof["phases"]) == set(PHASES)
+    for name, rec in prof["phases"].items():
+        assert rec["wall_s"] > 0, name
+        assert rec["flops"] == rec["flops_per_device"] * shards, name
+        assert rec["bytes_accessed"] == \
+            rec["bytes_accessed_per_device"] * shards, name
+        assert rec["collective_bytes"] == \
+            rec["collective_bytes_per_device"] * shards, name
+        assert rec["dominant"] in ("compute", "memory", "collective"), name
+    loop = prof["phases"]["message_passing"]["loop"]
+    assert loop["flops_depth2"] > loop["flops_depth1"]
+    assert prof["round_wall_s"] == pytest.approx(
+        sum(p["wall_s"] for p in prof["phases"].values()))
+
+
+def test_profile_solve_round_sharded_single_device():
+    """state_shards=1 dispatches to the sharded profiler (shard_map over
+    one device): same phases, and the per-device identity is trivial."""
+    from repro.core.graph import random_instance
+    from repro.roofline.solver import profile_solve_round
+
+    inst = random_instance(40, 0.2, seed=0, pad_edges=256, pad_nodes=64)
+    prof = profile_solve_round(inst, _sharded_cfg(1))
+    _check_sharded_profile(prof, 1)
+
+
+def test_profile_solve_round_sharded_4_devices():
+    """On 4 virtual devices: per-phase job flops/bytes are exactly the
+    per-device numbers x 4 (identical SPMD programs), and the halo
+    exchanges show up as nonzero collective bytes."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import json
+        import jax
+        from repro.core.graph import random_instance
+        from repro.core.solver import SolverConfig
+        from repro.roofline.solver import profile_solve_round
+
+        assert jax.device_count() == 4
+        inst = random_instance(40, 0.2, seed=0, pad_edges=256, pad_nodes=64)
+        cfg = SolverConfig(max_neg=64, max_tri_per_edge=4, nbr_k=4,
+                           mp_iters=3, graph_impl="sparse",
+                           first_round_cycles45=False, state_shards=4)
+        print(json.dumps(profile_solve_round(inst, cfg)))
+        """)], capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    import json
+    prof = json.loads(out.stdout.splitlines()[-1])
+    _check_sharded_profile(prof, 4)
+    assert prof["phases"]["separation"]["collective_bytes"] > 0
